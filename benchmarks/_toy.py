@@ -1,0 +1,90 @@
+"""Shared benchmark substrate: quickly-trained toy models whose attention
+maps have realistic structure (the paper's Figs. 1/3 sample from Wan2.1;
+we sample from these). Cached to artifacts/ so benchmarks are fast.
+
+A 2-layer causal LM on Markov-chain tokens develops sharply peaked
+attention within ~100 CPU steps (induction/previous-token heads) — far
+faster than a toy DiT develops spatial attention — so the attention-
+structure claims (Fig 1/3) are validated on it; the DiT path remains for
+the end-to-end fine-tuning claims (examples/finetune_dit.py).
+"""
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+
+CACHE = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
+SEQ = 256
+
+
+def trained_qkv(train_steps: int = 120, seq: int = SEQ):
+    """(q, k, v) from layer 1 of a briefly-trained toy causal LM,
+    shapes (B, H, N, D)."""
+    from repro.configs import get_arch
+    from repro.data.pipeline import DataConfig, token_batch
+    from repro.models import transformer as tfm
+    from repro.optim import adamw
+
+    CACHE.mkdir(exist_ok=True)
+    cache_file = CACHE / f"toy_qkv_lm_{seq}_{train_steps}.npz"
+    if cache_file.exists():
+        z = np.load(cache_file)
+        return (jnp.asarray(z["q"]), jnp.asarray(z["k"]),
+                jnp.asarray(z["v"]))
+
+    cfg = dataclasses.replace(get_arch("qwen3-1.7b").smoke(),
+                              attention_kind="full", num_layers=2)
+    shape = ShapeConfig("lm", seq, 8, "train")
+    rng = jax.random.PRNGKey(0)
+    params = tfm.init(rng, cfg)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, total_steps=train_steps,
+                                warmup_steps=10, schedule="cosine")
+    opt = adamw.init(params)
+
+    @jax.jit
+    def step(p, o, b):
+        loss, g = jax.value_and_grad(
+            lambda p: tfm.loss_fn(p, cfg, b))(p)
+        p, o, _ = adamw.update(p, g, o, opt_cfg)
+        return p, o, loss
+
+    dc = DataConfig(seed=0)
+    for s in range(train_steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in token_batch(cfg, shape, dc, s).items()}
+        params, opt, loss = step(params, opt, batch)
+
+    batch = {k: jnp.asarray(v)
+             for k, v in token_batch(cfg, shape, dc, 10_000).items()}
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    p1 = jax.tree.map(lambda t: t[1], params["layers"])
+    # run layer 0 to get layer 1's input
+    from repro.models.common import rms_norm
+    p0 = jax.tree.map(lambda t: t[0], params["layers"])
+    pos = jnp.arange(seq, dtype=jnp.int32)[None].repeat(x.shape[0], 0)
+    a0, _, _ = tfm._attn(p0, rms_norm(x, p0["ln1"]), jnp.int32(1), cfg,
+                         pos, "reference")
+    x = x + a0
+    f0, _ = tfm._ffn(p0, rms_norm(x, p0["ln2"]), cfg)
+    x = x + f0
+    q, k, v = tfm._qkv(p1, rms_norm(x, p1["ln1"]), cfg, pos)
+    h = q.shape[1]
+    kk = jnp.repeat(k, h // k.shape[1], 1)
+    vv = jnp.repeat(v, h // v.shape[1], 1)
+    np.savez(cache_file, q=np.asarray(q, np.float32),
+             k=np.asarray(kk, np.float32), v=np.asarray(vv, np.float32))
+    return q, kk, vv
+
+
+def attention_weights(q, k):
+    """Full softmax attention weights P (B, H, N, N) f32 (causal)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhnd,bhmd->bhnm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d**-0.5)
+    n = s.shape[-1]
+    s = jnp.where(jnp.tril(jnp.ones((n, n), bool)), s, -1e30)
+    return jax.nn.softmax(s, axis=-1)

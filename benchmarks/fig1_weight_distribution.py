@@ -1,0 +1,49 @@
+"""Paper Fig. 1: attention-weight distribution + sparse-attention accuracy.
+
+Claims validated on a trained toy DiT's real attention maps:
+  (1) only a small fraction of weights exceed the uniform value 1/N;
+  (2) a large fraction fall below 1/(100N);
+  (3) skipping the bottom-X% weights costs little; keeping only the
+      top-Y% costs a lot (the dilemma SLA resolves).
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._toy import attention_weights, trained_qkv
+
+
+def run():
+    t0 = time.time()
+    q, k, v = trained_qkv()
+    p = attention_weights(q, k)
+    n = p.shape[-1]
+    pf = np.asarray(p).reshape(-1, n)
+
+    frac_above_uniform = float((pf > 1.0 / n).mean())
+    frac_tiny = float((pf < 1.0 / (100.0 * n)).mean())
+
+    # sparse accuracy: keep top-q% of weights per row, rel-L1 of output
+    v32 = np.asarray(v, np.float32).reshape(-1, n, v.shape[-1])[:8]
+    pr = np.asarray(p).reshape(-1, n, n)[:8]
+    full_out = pr @ v32
+    rows = []
+    for keep_frac in (0.05, 0.081, 0.20, 0.55, 0.90):
+        kth = np.quantile(pr, 1.0 - keep_frac, axis=-1, keepdims=True)
+        mask = pr >= kth
+        ps = np.where(mask, pr, 0.0)
+        ps = ps / np.maximum(ps.sum(-1, keepdims=True), 1e-9)
+        err = float(np.abs(ps @ v32 - full_out).sum()
+                    / np.abs(full_out).sum())
+        rows.append((f"fig1.sparse_err@keep{keep_frac:.0%}", err))
+    us = (time.time() - t0) * 1e6
+    out = [("fig1.frac_above_1/N", us, frac_above_uniform),
+           ("fig1.frac_below_1/100N", us, frac_tiny)]
+    out += [(name, us, val) for name, val in rows]
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,89 @@
+"""Paper Fig. 6: attention kernel speed + end-to-end latency.
+
+No GPU/TPU in this container, so three complementary measurements:
+  (a) MEASURED wall time of compiled XLA full attention vs compiled XLA
+      gather-SLA on CPU (same-backend, same-compiler comparison — the
+      honest CPU analogue of the paper's kernel race);
+  (b) DERIVED TPU-v5e roofline projection of both kernels at the Wan2.1
+      point (compute + memory terms, 197 TFLOP/s & 819 GB/s);
+  (c) the end-to-end attention-share model: with attention 44% of
+      step time (97s / 220s, Fig. 6b), speedup_e2e = 1 / (0.56 + 0.44/s).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SLAConfig, compute_mask, sla_attention, sla_init
+from repro.core.flops import full_attention_flops, sla_flops
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+WAN = dict(n=32760, d=128, h=12)
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def measured_cpu(n=2048, d=64, h=4):
+    rng = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(r, (1, h, n, d), jnp.bfloat16)
+               for r in jax.random.split(rng, 3))
+    cfg = SLAConfig(block_q=64, block_kv=64, kh_frac=0.05, kl_frac=0.10)
+    params = sla_init(rng, h, d, cfg)
+
+    full_fn = jax.jit(lambda q, k, v: sla_attention(
+        None, q, k, v, cfg.replace(mode="full")))
+    sla_fn = jax.jit(lambda q, k, v: sla_attention(
+        params, q, k, v, cfg, impl="gather"))
+    t_full = _time(full_fn, q, k, v)
+    t_sla = _time(sla_fn, q, k, v)
+    return t_full, t_sla
+
+
+def tpu_projection():
+    n, d, h = WAN["n"], WAN["d"], WAN["h"]
+    bsz = 2  # bf16
+    fl_full = full_attention_flops(n, d, h)
+    io_full = 4 * n * d * h * bsz  # q,k,v,o streamed once (flash)
+    t_full = max(fl_full / PEAK_FLOPS, io_full / HBM_BW)
+    acct = sla_flops(n, d, h, SLAConfig())
+    # SLA streams q,k,v,o + the h_j/z_j block state once
+    io_sla = io_full + (n // 64) * (d * d + d) * h * 4
+    t_sla = max(acct["total"] / PEAK_FLOPS, io_sla / HBM_BW)
+    return t_full * 1e6, t_sla * 1e6
+
+
+def run():
+    rows = []
+    t_full_cpu, t_sla_cpu = measured_cpu()
+    rows.append(("fig6.cpu_measured.full_us", t_full_cpu,
+                 round(t_full_cpu, 1)))
+    rows.append(("fig6.cpu_measured.sla_us", t_sla_cpu,
+                 round(t_sla_cpu, 1)))
+    rows.append(("fig6.cpu_measured.speedup_x", t_sla_cpu,
+                 round(t_full_cpu / t_sla_cpu, 2)))
+    t_full_tpu, t_sla_tpu = tpu_projection()
+    kernel_speedup = t_full_tpu / t_sla_tpu
+    rows.append(("fig6.tpu_projected.full_us", 0, round(t_full_tpu, 1)))
+    rows.append(("fig6.tpu_projected.sla_us", 0, round(t_sla_tpu, 1)))
+    rows.append(("fig6.tpu_projected.kernel_speedup_x", 0,
+                 round(kernel_speedup, 2)))
+    rows.append(("fig6.paper_kernel_speedup_x", 0, 13.7))
+    # end-to-end: attention is 97s of 220s on Wan2.1 (Fig. 6b)
+    att_share = 97.0 / 220.0
+    e2e = 1.0 / ((1 - att_share) + att_share / kernel_speedup)
+    rows.append(("fig6.e2e_projected_speedup_x", 0, round(e2e, 2)))
+    rows.append(("fig6.paper_e2e_speedup_x", 0, 2.2))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,47 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,table1]
+"""
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "fig1_weight_distribution",
+    "fig3_stable_rank",
+    "table1_quality_efficiency",
+    "table2_ablation",
+    "table3_image",
+    "fig6_kernel_speed",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module substrings")
+    args = ap.parse_args()
+    selected = MODULES
+    if args.only:
+        keys = args.only.split(",")
+        selected = [m for m in MODULES if any(k in m for k in keys)]
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in selected:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception:
+            failed += 1
+            print(f"{name},ERROR,0", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"{failed} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Paper Table 1: quality + efficiency of SLA vs ablation baselines.
+
+Efficiency: analytic FLOPs at the Wan2.1 operating point (N=32760, 12
+heads, d=128, 30 layers) — validates the paper's 52.75T -> 2.74T (~19x)
+accounting. Quality proxy (no video model on CPU): attention-output
+rel-L2 error vs full attention on a trained toy DiT's real Q/K/V.
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._toy import trained_qkv
+from repro.core import SLAConfig, sla_attention, sla_init
+from repro.core.flops import (full_attention_flops, linear_attention_flops,
+                              sla_flops)
+
+WAN = dict(n=32760, d=128, h=12, layers=30)
+
+
+def wan_tflops(mode: str, cfg: SLAConfig) -> float:
+    n, d, h, l = WAN["n"], WAN["d"], WAN["h"], WAN["layers"]
+    if mode == "full":
+        per = full_attention_flops(n, d, h)
+    elif mode == "linear_only":
+        per = linear_attention_flops(n, d, h)
+    elif mode == "sparse_only":
+        per = sla_flops(n, d, h, cfg)["sparse"] + \
+            sla_flops(n, d, h, cfg)["mask"]
+    elif mode == "l_plus_s":
+        per = (sla_flops(n, d, h, cfg)["sparse"]
+               + sla_flops(n, d, h, cfg)["mask"]
+               + linear_attention_flops(n, d, h))
+    else:
+        per = sla_flops(n, d, h, cfg)["total"]
+    return per * l / 1e12
+
+
+def run():
+    t0 = time.time()
+    q, k, v = trained_qkv()
+    base = SLAConfig(block_q=32, block_kv=32, kh_frac=0.05, kl_frac=0.10,
+                     proj_init="identity")
+    full = sla_attention(None, q, k, v, base.replace(mode="full"))
+    rows = []
+    # paper Table 1 rows: Full / Sparse-only@15% / SLA@5% + the L/S ablations
+    cases = [
+        ("full", base.replace(mode="full"), 0.0),
+        ("sparse_only_15pct", base.replace(mode="sparse_only",
+                                           kh_frac=0.15), 0.85),
+        ("linear_only", base.replace(mode="linear_only"), 1.0),
+        ("l_plus_s", base.replace(mode="l_plus_s"), 0.90),
+        ("sla_5pct", base.replace(mode="sla", kh_frac=0.05), 0.95),
+    ]
+    for name, cfg, sparsity in cases:
+        params = sla_init(jax.random.PRNGKey(0), q.shape[1], q.shape[-1],
+                          cfg)
+        out = sla_attention(params, q, k, v, cfg)
+        err = float(jnp.linalg.norm(out - full)
+                    / jnp.linalg.norm(full)) if name != "full" else 0.0
+        tf = wan_tflops(cfg.mode, cfg)
+        us = (time.time() - t0) * 1e6
+        rows.append((f"table1.{name}.wan_TFLOPs", us, round(tf, 2)))
+        rows.append((f"table1.{name}.rel_err", us, round(err, 4)))
+    # headline reduction — two conventions:
+    # (a) paper's (Table 1 counts ONLY the sparse component: 52.75T ->
+    #     2.74T = 19.3x; the linear branch is "<0.5% of full" and mask/
+    #     proj overheads are excluded);
+    # (b) ours (full systems accounting incl. mask prediction, marginal
+    #     aggregation, and Proj).
+    tf_full = wan_tflops("full", base)
+    cfg5 = base.replace(kh_frac=0.05)
+    from repro.core.flops import sla_flops
+    n, d, h, l = WAN["n"], WAN["d"], WAN["h"], WAN["layers"]
+    sparse_only_paper = sla_flops(n, d, h, cfg5)["sparse"] * l / 1e12
+    rows.append(("table1.sla_reduction_x_paper_convention",
+                 (time.time() - t0) * 1e6,
+                 round(tf_full / sparse_only_paper, 2)))
+    tf_sla = wan_tflops("sla", cfg5)
+    rows.append(("table1.sla_reduction_x_full_accounting",
+                 (time.time() - t0) * 1e6, round(tf_full / tf_sla, 2)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,47 @@
+"""Paper Table 2: SLA ablations — phi activation and k_h sweep.
+
+Mechanism-level on real (toy-trained) attention inputs: fidelity of each
+variant vs full attention + its FLOPs at the Wan2.1 point.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._toy import trained_qkv
+from benchmarks.table1_quality_efficiency import wan_tflops
+from repro.core import SLAConfig, sla_attention, sla_init
+
+
+def run():
+    t0 = time.time()
+    q, k, v = trained_qkv()
+    base = SLAConfig(block_q=32, block_kv=32, kh_frac=0.05, kl_frac=0.10,
+                     proj_init="identity")
+    full = sla_attention(None, q, k, v, base.replace(mode="full"))
+
+    def fidelity(cfg):
+        params = sla_init(jax.random.PRNGKey(0), q.shape[1], q.shape[-1],
+                          cfg)
+        out = sla_attention(params, q, k, v, cfg)
+        return float(jnp.linalg.norm(out - full) / jnp.linalg.norm(full))
+
+    rows = []
+    for phi in ("softmax", "elu1", "relu"):
+        cfg = base.replace(phi=phi)
+        us = (time.time() - t0) * 1e6
+        rows.append((f"table2.phi_{phi}.rel_err", us,
+                     round(fidelity(cfg), 4)))
+    for kh in (0.05, 0.10, 0.20):
+        cfg = base.replace(kh_frac=kh)
+        us = (time.time() - t0) * 1e6
+        rows.append((f"table2.top{int(kh*100)}pct.rel_err", us,
+                     round(fidelity(cfg), 4)))
+        rows.append((f"table2.top{int(kh*100)}pct.wan_TFLOPs", us,
+                     round(wan_tflops("sla", cfg), 2)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,49 @@
+"""Paper Table 3 (Appendix A.2): image generation — LightningDiT point.
+
+N=1024 (512x512 images), b_q=b_kv=64 -> 16 KV blocks/row; the paper's
+87.5% sparsity = 2 critical blocks (kh=12.5%), kl=25%. FLOPs accounting
+vs the paper's 12.88G -> 1.73G claim + fidelity proxy at that setting.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._toy import trained_qkv
+from repro.core import SLAConfig, sla_attention, sla_init
+from repro.core.flops import full_attention_flops, sla_flops
+
+LDIT = dict(n=1024, d=108, h=16, layers=28)
+
+
+def run():
+    t0 = time.time()
+    n, d, h, l = LDIT["n"], LDIT["d"], LDIT["h"], LDIT["layers"]
+    cfg = SLAConfig(block_q=64, block_kv=64, kh_frac=0.125, kl_frac=0.25,
+                    proj_init="identity")
+    fl = sla_flops(n, d, h, cfg)
+    rows = [
+        ("table3.full.GFLOPs_per_layer", 0, round(
+            full_attention_flops(n, d, h) / 1e9, 3)),
+        ("table3.sla.GFLOPs_per_layer", 0, round(fl["total"] / 1e9, 3)),
+        ("table3.sla.sparsity", 0, round(fl["sparsity"], 4)),
+        ("table3.sla.reduction_x", 0, round(fl["reduction_x"], 2)),
+    ]
+    # fidelity proxy at 87.5% sparsity on trained toy attention (N=512,
+    # same blocks-per-row regime: 16 blocks of 32)
+    q, k, v = trained_qkv()
+    cfg_t = SLAConfig(block_q=32, block_kv=32, kh_frac=0.125, kl_frac=0.25,
+                      proj_init="identity")
+    full = sla_attention(None, q, k, v, cfg_t.replace(mode="full"))
+    params = sla_init(jax.random.PRNGKey(0), q.shape[1], q.shape[-1],
+                      cfg_t)
+    out = sla_attention(params, q, k, v, cfg_t)
+    err = float(jnp.linalg.norm(out - full) / jnp.linalg.norm(full))
+    us = (time.time() - t0) * 1e6
+    rows.append(("table3.sla.rel_err", us, round(err, 4)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,60 @@
+"""Serve a small LM with batched requests: SLA prefill + KV-cache decode.
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 8 --batch 4
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import registry
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=96)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).smoke()  # CPU-runnable reduced config
+    mdl = registry.get_model(cfg)
+    rng = jax.random.PRNGKey(args.seed)
+    params = mdl.init(rng, cfg)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"serving {cfg.name} (reduced, {n/1e6:.2f}M params), "
+          f"batch={args.batch}")
+
+    rs = np.random.default_rng(args.seed)
+    reqs = [
+        Request(rid=i,
+                prompt=rs.integers(0, cfg.vocab_size,
+                                   size=args.prompt_len).astype(np.int32),
+                max_new_tokens=args.max_new - (i % 3))
+        for i in range(args.requests)
+    ]
+    engine = ServingEngine(cfg, params, batch_size=args.batch,
+                           max_len=args.prompt_len + args.max_new + 8)
+    t0 = time.time()
+    done = engine.run(reqs)
+    wall = time.time() - t0
+    st = engine.stats
+    print(f"served {len(done)} requests in {wall:.1f}s "
+          f"(incl. compile)")
+    print(f"prefill: {st.prefill_tokens} tok in {st.prefill_s:.2f}s | "
+          f"decode: {st.decode_tokens} tok in {st.decode_s:.2f}s")
+    for r in done[:4]:
+        print(f"  req {r.rid}: {len(r.tokens_out)} tokens -> "
+              f"{r.tokens_out[:8]}...")
+    assert all(len(r.tokens_out) == r.max_new_tokens for r in done)
+    print("all requests honored their token budgets")
+
+
+if __name__ == "__main__":
+    main()

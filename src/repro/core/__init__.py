@@ -1,0 +1,21 @@
+"""SLA core: the paper's primary contribution (sparse-linear attention)."""
+from repro.core.config import SLAConfig
+from repro.core.masks import (
+    build_lut,
+    classify_blocks,
+    compute_mask,
+    expand_mask,
+    pool_blocks,
+    predict_pc,
+    sparsity_stats,
+)
+from repro.core.phi import PHI_KINDS, phi
+from repro.core.sla import sla_attention, sla_init
+from repro.core import reference, flops
+
+__all__ = [
+    "SLAConfig", "phi", "PHI_KINDS",
+    "pool_blocks", "predict_pc", "classify_blocks", "compute_mask",
+    "build_lut", "expand_mask", "sparsity_stats",
+    "sla_attention", "sla_init", "reference", "flops",
+]

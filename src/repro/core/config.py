@@ -1,0 +1,76 @@
+"""SLA configuration.
+
+Block-size / classification hyper-parameters follow the paper (Sec. 6.1):
+b_q = b_kv = 64, k_h = 5% critical, k_l = 10% negligible, phi = softmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class SLAConfig:
+    """Hyper-parameters for Sparse-Linear Attention.
+
+    Attributes:
+      block_q: query block size b_q (token rows per block).
+      block_kv: key/value block size b_kv.
+      kh_frac: fraction of KV blocks per query row classified *critical*
+        (computed with exact block-sparse attention). Paper default 5%.
+      kl_frac: fraction of KV blocks per query row classified *negligible*
+        (skipped entirely). Paper default 10%.
+      phi: feature map for the linear branch: "softmax" | "elu1" | "relu".
+      mode: "sla" (paper), "sparse_only", "linear_only", "l_plus_s"
+        (ablation baselines of Table 2), or "full" (exact attention).
+      causal: causal (LM) vs bidirectional (DiT) attention.
+      force_diagonal: force the diagonal block critical (guarantees every
+        query row has >= 1 critical block; standard in block-sparse attn).
+      fixed_budget: if set, overrides kh_frac with a *constant* number of
+        critical blocks per row -> O(N) total sparse cost (beyond-paper
+        long-context variant; see DESIGN.md).
+      proj_init: init for the learnable Proj on the linear branch:
+        "zeros" (SLA starts as pure sparse; compensation is learned) or
+        "identity".
+      col_capacity_factor: TPU adaptation (DESIGN.md §3): cap the number of
+        critical blocks per KV *column* at cf * (average per-column count).
+        Rows over capacity demote their lowest-score critical blocks to
+        *marginal* (still covered by the linear branch — graceful, not
+        lossy-skip). Gives the dK/dV kernel a static column-LUT width.
+        None disables (pure-paper mask; reference path only).
+    """
+
+    block_q: int = 64
+    block_kv: int = 64
+    kh_frac: float = 0.05
+    kl_frac: float = 0.10
+    phi: str = "softmax"
+    mode: str = "sla"
+    causal: bool = False
+    force_diagonal: bool = True
+    fixed_budget: Optional[int] = None
+    proj_init: str = "zeros"
+    col_capacity_factor: Optional[float] = 2.0
+    window: int = 0  # sliding-window constraint in TOKENS (0 = none);
+    #                  applied at block granularity: out-of-window blocks are
+    #                  forced negligible (exact-zero weight under SWA).
+
+    def num_critical(self, num_kv_blocks: int) -> int:
+        """Number of critical blocks per query row (static)."""
+        if self.fixed_budget is not None:
+            return max(1, min(self.fixed_budget, num_kv_blocks))
+        return max(1, round(self.kh_frac * num_kv_blocks))
+
+    def num_negligible(self, num_kv_blocks: int) -> int:
+        return max(0, round(self.kl_frac * num_kv_blocks))
+
+    def col_capacity(self, num_q_blocks: int, num_kv_blocks: int) -> int:
+        """Static per-column critical budget (dK/dV column-LUT width)."""
+        k_sel = self.num_critical(num_kv_blocks)
+        if self.col_capacity_factor is None:
+            return num_q_blocks
+        avg = num_q_blocks * k_sel / num_kv_blocks
+        return max(1, min(num_q_blocks, round(self.col_capacity_factor * avg)))
+
+    def replace(self, **kw) -> "SLAConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,59 @@
+"""FLOPs accounting for attention variants (paper Tables 1-3 'FLOPs' column).
+
+Convention: 1 multiply-accumulate = 2 FLOPs, matching XLA cost_analysis.
+Counts are per (batch element x layer), summed over heads, forward only,
+unless stated otherwise. `d` is the head dim, `h` heads, `n` tokens.
+"""
+from __future__ import annotations
+
+from repro.core.config import SLAConfig
+
+
+def full_attention_flops(n: int, d: int, h: int) -> float:
+    """QK^T + PV: 2 matmuls of (n x d x n) each => 4 n^2 d per head."""
+    return 4.0 * n * n * d * h
+
+
+def linear_attention_flops(n: int, d: int, h: int) -> float:
+    """phi(K)^T V (2nd^2) + phi(Q) H (2nd^2) + normalizer (~2nd)."""
+    return (4.0 * n * d * d + 2.0 * n * d) * h
+
+
+def sla_flops(n: int, d: int, h: int, cfg: SLAConfig,
+              include_overheads: bool = True) -> dict:
+    """FLOPs breakdown of SLA at sequence length n.
+
+    sparse   : 4 n^2 d * (critical fraction)
+    linear   : h_j/z_j precompute + per-row phi(Q_i)H_i  (Eq. 5)
+    mask     : pooled score map  pool(Q)pool(K)^T + softmax (Eq. 2)
+    aggregate: marginal-indicator matmul A @ h (TPU pre-aggregation form)
+    proj     : learnable d x d on the linear output (Eq. 6)
+    """
+    tm, tn = n // cfg.block_q, n // cfg.block_kv
+    crit_frac = cfg.num_critical(tn) / tn
+    sparse = 4.0 * n * n * d * crit_frac * h
+    linear = (4.0 * n * d * d) * h
+    mask = (2.0 * tm * tn * d + 5.0 * tm * tn) * h
+    agg = (2.0 * tm * tn * (d * d + d)) * h if include_overheads else 0.0
+    proj = 2.0 * n * d * d * h
+    total = sparse + linear + mask + agg + proj
+    return {
+        "sparse": sparse,
+        "linear": linear,
+        "mask": mask,
+        "aggregate": agg,
+        "proj": proj,
+        "total": total,
+        "full": full_attention_flops(n, d, h),
+        "reduction_x": full_attention_flops(n, d, h) / total,
+        "sparsity": 1.0 - crit_frac,
+    }
+
+
+def sla_subtractive_agg_flops(n: int, d: int, h: int, cfg: SLAConfig) -> float:
+    """Aggregation cost with the subtract-non-marginal optimization:
+    H_i = H_total - sum_{crit+neg j} h_j   (paper App. A.3, gather form).
+    """
+    tm, tn = n // cfg.block_q, n // cfg.block_kv
+    sub_frac = (cfg.num_critical(tn) + cfg.num_negligible(tn)) / tn
+    return (2.0 * tm * tn * (d * d + d)) * sub_frac * h

@@ -1,0 +1,200 @@
+"""Block classification for SLA (paper Sec. 4, Eq. 2-3).
+
+Predicts a compressed attention map P_c = softmax(pool(Q) pool(K)^T / sqrt(d))
+over (T_m x T_n) blocks and classifies every block into
+  critical (+1, top k_h% per row)  -> exact block-sparse attention,
+  negligible (-1, bottom k_l%)     -> skipped,
+  marginal (0, the rest)           -> linear attention.
+
+Also builds the static-shape lookup table (LUT) of critical block indices per
+query row used by the Pallas TPU kernel (scalar-prefetch index maps; see
+DESIGN.md "Hardware adaptation").
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SLAConfig
+
+NEG_INF = -1e30
+
+
+def pool_blocks(x: jax.Array, block: int) -> jax.Array:
+    """Mean-pool tokens into blocks. (..., N, D) -> (..., N // block, D)."""
+    n, d = x.shape[-2], x.shape[-1]
+    assert n % block == 0, f"seq len {n} not divisible by block {block}"
+    xb = x.reshape(*x.shape[:-2], n // block, block, d)
+    return jnp.mean(xb.astype(jnp.float32), axis=-2)
+
+
+def block_causal_valid(tm: int, tn: int, block_q: int, block_kv: int) -> jax.Array:
+    """(tm, tn) bool: block (i, j) contains at least one valid causal pair."""
+    qi = (jnp.arange(tm) + 1) * block_q - 1  # last query row in block i
+    kj = jnp.arange(tn) * block_kv  # first key col in block j
+    return qi[:, None] >= kj[None, :]
+
+
+def block_valid(cfg: SLAConfig, tm: int, tn: int) -> jax.Array:
+    """(tm, tn) bool validity combining causal + sliding-window constraints
+    (window applied at block granularity; see SLAConfig.window)."""
+    valid = jnp.ones((tm, tn), bool)
+    if cfg.causal:
+        valid = jnp.logical_and(
+            valid, block_causal_valid(tm, tn, cfg.block_q, cfg.block_kv))
+    if cfg.window:
+        qi = jnp.arange(tm)[:, None] * cfg.block_q
+        kj = jnp.arange(tn)[None, :] * cfg.block_kv
+        dist = jnp.abs(qi - kj)
+        valid = jnp.logical_and(valid, dist < cfg.window + cfg.block_kv)
+    return valid
+
+
+def predict_pc(
+    q: jax.Array, k: jax.Array, cfg: SLAConfig, scale: float | None = None
+) -> jax.Array:
+    """Compressed attention map P_c (Eq. 2). q,k: (B, H, N, D) -> (B, H, Tm, Tn)."""
+    d = q.shape[-1]
+    scale = (d**-0.5) if scale is None else scale
+    qp = pool_blocks(q, cfg.block_q)
+    kp = pool_blocks(k, cfg.block_kv)
+    s = jnp.einsum("...md,...nd->...mn", qp, kp) * scale
+    if cfg.causal or cfg.window:
+        valid = block_valid(cfg, s.shape[-2], s.shape[-1])
+        s = jnp.where(valid, s, NEG_INF)
+    return jax.nn.softmax(s, axis=-1)
+
+
+def classify_blocks(pc: jax.Array, cfg: SLAConfig) -> jax.Array:
+    """Three-way block classification M_c (Eq. 3). pc: (..., Tm, Tn) -> int8.
+
+    +1 critical / 0 marginal / -1 negligible. Causal-invalid blocks are -1.
+    The diagonal block is forced critical when cfg.force_diagonal (guarantees
+    the sparse softmax of every row is well defined).
+    """
+    tm, tn = pc.shape[-2], pc.shape[-1]
+    n_crit = cfg.num_critical(tn)
+    n_neg = cfg.num_negligible(tn)
+
+    score = pc
+    if cfg.causal or cfg.window:
+        valid = block_valid(cfg, tm, tn)
+        score = jnp.where(valid, score, -1.0)  # push invalid to the very bottom
+    force_diag = cfg.force_diagonal or cfg.causal
+    if cfg.causal:
+        # The diagonal block is the only partially-valid causal block; it must
+        # be critical so the linear branch only ever sees fully-past blocks.
+        assert cfg.block_q == cfg.block_kv, "causal SLA requires b_q == b_kv"
+    if force_diag and tm <= tn:
+        # Give the (block-)diagonal an infinitely large score so TopK keeps it.
+        diag = jnp.eye(tm, tn, k=0, dtype=bool)
+        if cfg.block_q != cfg.block_kv:
+            qi = jnp.arange(tm) * cfg.block_q // cfg.block_kv
+            diag = jax.nn.one_hot(qi, tn, dtype=jnp.bool_)
+        score = jnp.where(diag, 2.0, score)
+
+    # Descending rank of every block within its row (stable; O(Tn log Tn)).
+    order = jnp.argsort(-score, axis=-1, stable=True)
+    rank = jnp.argsort(order, axis=-1, stable=True)
+
+    mc = jnp.zeros(pc.shape, jnp.int8)
+    mc = jnp.where(rank < n_crit, jnp.int8(1), mc)
+    if n_neg > 0:
+        mc = jnp.where(rank >= tn - n_neg, jnp.int8(-1), mc)
+    if cfg.causal or cfg.window:
+        valid = block_valid(cfg, tm, tn)
+        mc = jnp.where(valid, mc, jnp.int8(-1))
+        # Rows near the start may have fewer valid blocks than n_crit; the
+        # rank<n_crit rule already keeps all their valid blocks critical.
+
+    if cfg.col_capacity_factor is not None:
+        # TPU adaptation: enforce a static per-column critical budget so the
+        # dK/dV backward kernel has a fixed-width column LUT (DESIGN.md §3).
+        # Over-budget blocks demote to *marginal* (linear branch still covers
+        # them). The boosted `score` keeps forced-diagonal blocks first.
+        cap = cfg.col_capacity(tm, tn)
+        is_crit = mc == 1
+        col_key = jnp.where(is_crit, score, -2.0)
+        col_order = jnp.argsort(-col_key, axis=-2, stable=True)
+        col_rank = jnp.argsort(col_order, axis=-2, stable=True)
+        demote = jnp.logical_and(is_crit, col_rank >= cap)
+        mc = jnp.where(demote, jnp.int8(0), mc)
+    return mc
+
+
+def compute_mask(
+    q: jax.Array, k: jax.Array, cfg: SLAConfig, scale: float | None = None
+) -> jax.Array:
+    """P_c prediction + classification. Gradient-stopped (mask is a constant
+    w.r.t. the loss, matching the paper: TopK is not differentiated)."""
+    pc = predict_pc(jax.lax.stop_gradient(q), jax.lax.stop_gradient(k), cfg, scale)
+    return classify_blocks(pc, cfg)
+
+
+def build_lut(mc: jax.Array, k_sel: int) -> Tuple[jax.Array, jax.Array]:
+    """Static-shape critical-block lookup table for the TPU kernel.
+
+    Args:
+      mc: (..., Tm, Tn) int8 classification.
+      k_sel: static LUT width (>= max #critical per row; use
+        cfg.num_critical(Tn)).
+
+    Returns:
+      lut:    (..., Tm, k_sel) int32 — critical block indices, ascending,
+              padded with the row's first critical index (always valid).
+      counts: (..., Tm) int32 — number of live entries per row.
+    """
+    tn = mc.shape[-1]
+    is_crit = (mc == 1).astype(jnp.int32)
+    counts = jnp.sum(is_crit, axis=-1)
+    # Sort key: critical blocks first (ascending j), then the rest.
+    j = jnp.arange(tn, dtype=jnp.int32)
+    key = is_crit * (2 * tn) - j
+    idx = jnp.argsort(-key, axis=-1, stable=True)[..., :k_sel].astype(jnp.int32)
+    slot = jnp.arange(k_sel, dtype=jnp.int32)
+    live = slot < counts[..., None]
+    pad = idx[..., :1]  # first critical index — always a real block
+    lut = jnp.where(live, idx, pad)
+    return lut, counts
+
+
+def build_col_lut(mc: jax.Array, w_col: int) -> Tuple[jax.Array, jax.Array]:
+    """Column LUT for the dK/dV kernel: per KV column, the critical row idxs.
+
+    Requires the column-capacity constraint (counts <= w_col by construction).
+    Returns (col_lut (..., Tn, w_col) int32, col_counts (..., Tn) int32).
+    """
+    tm = mc.shape[-2]
+    is_crit = (mc == 1).astype(jnp.int32)
+    counts = jnp.sum(is_crit, axis=-2)
+    i = jnp.arange(tm, dtype=jnp.int32)[:, None]
+    key = is_crit * (2 * tm) - i
+    idx = jnp.argsort(-key, axis=-2, stable=True)[..., :w_col, :].astype(jnp.int32)
+    idx = jnp.swapaxes(idx, -1, -2)  # (..., Tn, w_col)
+    slot = jnp.arange(w_col, dtype=jnp.int32)
+    live = slot < counts[..., None]
+    pad = idx[..., :1]
+    lut = jnp.where(live, idx, pad)
+    return lut, counts
+
+
+def expand_mask(mc: jax.Array, block_q: int, block_kv: int) -> jax.Array:
+    """Expand (..., Tm, Tn) block classification to (..., N, M) element level."""
+    out = jnp.repeat(mc, block_q, axis=-2)
+    return jnp.repeat(out, block_kv, axis=-1)
+
+
+def sparsity_stats(mc: jax.Array) -> dict:
+    """Fractions of critical / marginal / negligible blocks (over valid)."""
+    total = mc.size
+    crit = jnp.sum(mc == 1) / total
+    marg = jnp.sum(mc == 0) / total
+    neg = jnp.sum(mc == -1) / total
+    return {
+        "critical_frac": crit,
+        "marginal_frac": marg,
+        "negligible_frac": neg,
+        "sparsity": 1.0 - crit,  # paper: sparsity = 1 - computed fraction
+    }

@@ -1,0 +1,28 @@
+"""Feature maps phi(.) for the linear-attention branch of SLA.
+
+The paper ablates softmax (best), elu+1, and hedgehog; we provide softmax,
+elu+1 and relu. All maps produce non-negative features so the linear-branch
+denominator phi(Q) . Z is positive whenever any marginal block exists.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def phi(x: jax.Array, kind: str) -> jax.Array:
+    """Apply the feature map along the head dimension (last axis).
+
+    Computed in f32 regardless of input dtype (returned in f32; callers cast).
+    """
+    x = x.astype(jnp.float32)
+    if kind == "softmax":
+        return jax.nn.softmax(x, axis=-1)
+    if kind == "elu1":
+        return jax.nn.elu(x) + 1.0
+    if kind == "relu":
+        return jax.nn.relu(x) + 1e-6
+    raise ValueError(f"unknown phi kind: {kind!r}")
+
+
+PHI_KINDS = ("softmax", "elu1", "relu")

@@ -1,0 +1,127 @@
+"""Pure-jnp reference (oracle) for SLA — exact Algorithm 1 semantics.
+
+Dense formulation used to validate the Pallas kernels and as the CPU
+fallback path. All accumulation in f32.
+
+Shapes: q, k, v: (B, H, N, D); qp = phi(q), kp = phi(k) same shape (f32).
+mc: (B, H, Tm, Tn) int8 in {-1, 0, +1}.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SLAConfig
+from repro.core.masks import NEG_INF, expand_mask
+
+EPS = 1e-6
+
+
+def _safe_div(num: jax.Array, den: jax.Array) -> jax.Array:
+    """NaN-free (also under autodiff) num/den with 0 where den <= EPS.
+
+    The double-`where` keeps the untaken branch finite so its zero
+    cotangent never multiplies an inf/NaN (f32 1/den**2 underflow)."""
+    live = den > EPS
+    safe = jnp.where(live, den, 1.0)
+    return jnp.where(live, num / safe, 0.0)
+
+
+def sparse_component(
+    q: jax.Array, k: jax.Array, v: jax.Array, mc: jax.Array, cfg: SLAConfig,
+    scale: float | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """O^s: softmax attention restricted to critical blocks.
+
+    Returns (o_s (B,H,N,D) f32, lse (B,H,N) f32) — lse is the log-sum-exp
+    over critical entries (Alg. 1 line 16, used by the backward pass).
+    """
+    d = q.shape[-1]
+    scale = (d**-0.5) if scale is None else scale
+    s = jnp.einsum("...nd,...md->...nm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    keep = expand_mask(mc == 1, cfg.block_q, cfg.block_kv)
+    if cfg.causal:
+        # Token-level causal mask inside critical blocks (the diagonal block
+        # is always critical in causal mode; see masks.classify_blocks).
+        n, m = s.shape[-2], s.shape[-1]
+        keep = jnp.logical_and(keep, jnp.tril(jnp.ones((n, m), bool)))
+    s = jnp.where(keep, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o_s = jnp.einsum("...nm,...md->...nd", p / l, v.astype(jnp.float32))
+    lse = (m + jnp.log(l))[..., 0]
+    return o_s, lse
+
+
+def linear_component(
+    qp: jax.Array, kp: jax.Array, v: jax.Array, mc: jax.Array, cfg: SLAConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """O^l: per-row-aggregated linear attention over marginal blocks (Eq. 5).
+
+    Returns (o_l (B,H,N,D) f32, H (B,H,Tm,D,D) f32, Z (B,H,Tm,D) f32).
+    Rows whose marginal set is empty produce exact zeros.
+    """
+    bq, bkv = cfg.block_q, cfg.block_kv
+    n, d = v.shape[-2], v.shape[-1]
+    tn = n // bkv
+    kpb = kp.astype(jnp.float32).reshape(*kp.shape[:-2], tn, bkv, d)
+    vb = v.astype(jnp.float32).reshape(*v.shape[:-2], tn, bkv, d)
+    # Per KV block: h_j = phi(K_j)^T V_j (d x d), z_j = rowsum(phi(K_j)^T) (d,)
+    h = jnp.einsum("...nkd,...nke->...nde", kpb, vb)
+    z = jnp.sum(kpb, axis=-2)
+    # Aggregate marginal blocks per query row — the TPU-native dense-matmul
+    # form of the paper's App. A.3 pre-aggregation (see DESIGN.md).
+    a = (mc == 0).astype(jnp.float32)
+    hi = jnp.einsum("...mn,...nde->...mde", a, h)
+    zi = jnp.einsum("...mn,...nd->...md", a, z)
+    tm = hi.shape[-3]
+    qpb = qp.astype(jnp.float32).reshape(*qp.shape[:-2], tm, bq, d)
+    num = jnp.einsum("...mqd,...mde->...mqe", qpb, hi)
+    den = jnp.einsum("...mqd,...md->...mq", qpb, zi)[..., None]
+    o_l = _safe_div(num, den)
+    o_l = o_l.reshape(*qp.shape[:-2], n, d)
+    return o_l, hi, zi
+
+
+def full_linear(qp: jax.Array, kp: jax.Array, v: jax.Array) -> jax.Array:
+    """Standard O(N d^2) linear attention over ALL tokens (baselines)."""
+    kp32, v32, qp32 = (x.astype(jnp.float32) for x in (kp, v, qp))
+    h = jnp.einsum("...nd,...ne->...de", kp32, v32)
+    z = jnp.sum(kp32, axis=-2)
+    num = jnp.einsum("...nd,...de->...ne", qp32, h)
+    den = jnp.einsum("...nd,...d->...n", qp32, z)[..., None]
+    return _safe_div(num, den)
+
+
+def full_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
+    scale: float | None = None,
+) -> jax.Array:
+    """Exact softmax attention (f32), the quality reference."""
+    d = q.shape[-1]
+    scale = (d**-0.5) if scale is None else scale
+    s = jnp.einsum("...nd,...md->...nm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        n, m = s.shape[-2], s.shape[-1]
+        s = jnp.where(jnp.tril(jnp.ones((n, m), bool)), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...nm,...md->...nd", p, v.astype(jnp.float32))
+
+
+def sla_forward_reference(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    qp: jax.Array, kp: jax.Array, mc: jax.Array, cfg: SLAConfig,
+    scale: float | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Reference forward: returns (O^s, O^l), both (B, H, N, D) f32.
+
+    The caller combines them as O = O^s + Proj(O^l)  (Eq. 6).
+    """
+    o_s, _ = sparse_component(q, k, v, mc, cfg, scale)
+    o_l, _, _ = linear_component(qp, kp, v, mc, cfg)
+    return o_s, o_l

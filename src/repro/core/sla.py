@@ -1,0 +1,114 @@
+"""SLA attention module — functional public API.
+
+Usage:
+    cfg = SLAConfig(kh_frac=0.05, kl_frac=0.10, phi="softmax")
+    params = sla_init(rng, num_heads, head_dim, cfg)
+    out = sla_attention(params, q, k, v, cfg)        # (B, H, N, D)
+
+Modes (cfg.mode):
+  "sla"          O = O^s + Proj(O^l)                      (paper, Eq. 6)
+  "sparse_only"  O = O^s                                   (Table 2 baseline)
+  "linear_only"  O = full linear attention                 (Table 2 baseline)
+  "l_plus_s"     O = O^s + full-linear(O)                  (Table 2 baseline)
+  "full"         exact softmax attention
+
+Set use_kernel=True to run the fused Pallas TPU kernel (interpret mode on
+CPU); False runs the pure-jnp reference path (autodiff-differentiable).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SLAConfig
+from repro.core.masks import compute_mask
+from repro.core.phi import phi
+from repro.core import reference as ref
+
+Params = Dict[str, jax.Array]
+
+
+def sla_init(rng: jax.Array, num_heads: int, head_dim: int,
+             cfg: SLAConfig, dtype=jnp.float32) -> Params:
+    """Learnable parameters: the per-head d x d Proj on the linear branch."""
+    if cfg.proj_init == "identity":
+        proj = jnp.tile(jnp.eye(head_dim, dtype=dtype)[None], (num_heads, 1, 1))
+    elif cfg.proj_init == "zeros":
+        proj = jnp.zeros((num_heads, head_dim, head_dim), dtype)
+    else:
+        raise ValueError(cfg.proj_init)
+    return {"proj": proj}
+
+
+def _repeat_kv(x: jax.Array, num_q_heads: int) -> jax.Array:
+    """GQA: broadcast KV heads to match Q heads. (B, Hkv, N, D) -> (B, H, N, D)."""
+    hkv = x.shape[1]
+    if hkv == num_q_heads:
+        return x
+    assert num_q_heads % hkv == 0
+    return jnp.repeat(x, num_q_heads // hkv, axis=1)
+
+
+def sla_attention(
+    params: Optional[Params],
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    cfg: SLAConfig,
+    scale: Optional[float] = None,
+    use_kernel: bool = False,
+    interpret: bool = True,
+    impl: str = "reference",
+) -> jax.Array:
+    """SLA attention. q: (B, H, N, D); k, v: (B, Hkv, N, D) with Hkv | H.
+
+    impl: "reference" (dense oracle) or "gather" (LUT-gather XLA path whose
+    compiled FLOPs equal the true sparse cost — use for dry-run/training).
+    use_kernel=True overrides impl with the fused Pallas kernel.
+
+    Returns (B, H, N, D) in q.dtype.
+    """
+    in_dtype = q.dtype
+    h = q.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+
+    if cfg.mode == "full":
+        return ref.full_attention(q, k, v, cfg.causal, scale).astype(in_dtype)
+
+    if cfg.mode == "linear_only":
+        qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
+        o = ref.full_linear(qp, kp, v)
+        if params is not None:
+            o = jnp.einsum("bhnd,hde->bhne", o, params["proj"].astype(jnp.float32))
+        return o.astype(in_dtype)
+
+    mc = compute_mask(q, k, cfg, scale)
+
+    if cfg.mode == "sparse_only":
+        o_s, _ = ref.sparse_component(q, k, v, mc, cfg, scale)
+        return o_s.astype(in_dtype)
+
+    qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
+
+    if cfg.mode == "l_plus_s":
+        o_s, _ = ref.sparse_component(q, k, v, mc, cfg, scale)
+        o_l = ref.full_linear(qp, kp, v)
+        return (o_s + o_l).astype(in_dtype)
+
+    if cfg.mode != "sla":
+        raise ValueError(f"unknown SLA mode {cfg.mode!r}")
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        o_s, o_l = kops.sla_attention_core(q, k, v, qp, kp, mc, cfg,
+                                           scale=scale, interpret=interpret)
+    elif impl == "gather":
+        from repro.core.block_sparse_xla import sla_forward_gather
+        o_s, o_l = sla_forward_gather(q, k, v, qp, kp, mc, cfg, scale)
+    else:
+        o_s, o_l = ref.sla_forward_reference(q, k, v, qp, kp, mc, cfg, scale)
+
+    proj = params["proj"].astype(jnp.float32)
+    o = o_s + jnp.einsum("bhnd,hde->bhne", o_l, proj)
+    return o.astype(in_dtype)

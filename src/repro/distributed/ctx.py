@@ -1,0 +1,130 @@
+"""Activation-sharding context (SP) + remat policy plumbing.
+
+Models call `shard_residual(x)` between blocks; under an active context
+this applies with_sharding_constraint (sequence-parallel residual stream:
+d_model over "model", batch over dp — the Megatron-SP layout GSPMD turns
+into all-gather/reduce-scatter pairs at the TP boundary). Outside a mesh
+context it is a no-op, so tests and small examples run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationSharding:
+    mesh: Any
+    residual: P  # (B, S, D) residual stream
+    remat: bool = True
+
+
+_CTX: contextvars.ContextVar[Optional[ActivationSharding]] = \
+    contextvars.ContextVar("activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, residual: P, remat: bool = True):
+    token = _CTX.set(ActivationSharding(mesh, residual, remat))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def default_residual_spec(mesh, global_batch: int, seq_len: int) -> P:
+    from repro.distributed.sharding import pick_dp_axes
+    dp = pick_dp_axes(mesh, global_batch)
+    if dp:
+        return P(dp, None, "model")
+    if seq_len % dict(mesh.shape).get("data", 1) == 0:
+        return P(None, "data", "model")  # context parallelism
+    return P()
+
+
+def shard_residual(x: jax.Array) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None or x.ndim != 3:
+        return x
+    mesh_shape = dict(ctx.mesh.shape)
+    fixed = []
+    for dim, names in zip(x.shape, tuple(ctx.residual) + (None,) * 3):
+        if names is None:
+            fixed.append(None)
+            continue
+        ax = names if isinstance(names, tuple) else (names,)
+        size = 1
+        for a in ax:
+            size *= mesh_shape.get(a, 1)
+        fixed.append(names if size > 1 and dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def fsdp_gather(w: jax.Array, kind: str) -> jax.Array:
+    """Per-layer FSDP weight gather (MaxText-style): parameters are STORED
+    sharded over ("data" x "model"); before use, constrain the compute
+    copy to TP-only sharding — GSPMD emits one small all-gather per layer
+    and the activation matmuls get unambiguous output shardings (without
+    this, the FSDP-sharded output dim forces all-reduce + reshard).
+
+    kind: "col" (in, out_tp) -> P(None, "model");
+          "row" (in_tp, out) -> P("model", None).
+    """
+    ctx = _CTX.get()
+    if ctx is None or w.ndim != 2:
+        return w
+    mesh_shape = dict(ctx.mesh.shape)
+    msz = mesh_shape.get("model", 1)
+    if msz <= 1:
+        return w
+    if kind == "col" and w.shape[1] % msz == 0:
+        return jax.lax.with_sharding_constraint(w, P(None, "model"))
+    if kind == "row" and w.shape[0] % msz == 0:
+        return jax.lax.with_sharding_constraint(w, P("model", None))
+    return w
+
+
+def ep_gather(w: jax.Array) -> jax.Array:
+    """MoE expert weights (E, d_in, d_out): stored FSDP-sharded on d_in;
+    gather to experts-only sharding before the expert matmul (otherwise
+    the (E_loc, capacity, d_ff) expert GEMM contracts the FSDP dim and
+    all-reduces a multi-GB activation per layer — measured on moonshot)."""
+    ctx = _CTX.get()
+    if ctx is None or w.ndim != 3:
+        return w
+    msz = dict(ctx.mesh.shape).get("model", 1)
+    if msz > 1 and w.shape[0] % msz == 0:
+        return jax.lax.with_sharding_constraint(w, P("model", None, None))
+    return w
+
+
+def shard_expert_buf(x: jax.Array) -> jax.Array:
+    """Constrain the (E, capacity, d) dispatch buffer to expert sharding
+    so the scatter-add resolves into expert-shard transfers instead of a
+    full all-reduce of the whole buffer."""
+    ctx = _CTX.get()
+    if ctx is None or x.ndim != 3:
+        return x
+    msz = dict(ctx.mesh.shape).get("model", 1)
+    if msz > 1 and x.shape[0] % msz == 0:
+        return jax.lax.with_sharding_constraint(x, P("model", None, None))
+    return x
+
+
+def use_remat() -> bool:
+    ctx = _CTX.get()
+    return ctx.remat if ctx is not None else False
+
+
+def maybe_remat(fn):
+    """Wrap a scan body with full rematerialization when the context asks
+    for it (the memory policy that makes 88-layer x 32K cells fit HBM)."""
+    if use_remat():
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn

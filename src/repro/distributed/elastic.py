@@ -1,0 +1,43 @@
+"""Elastic scaling: reshard live training state onto a new mesh.
+
+At 1000+ nodes, node loss shrinks the healthy device set; rather than
+waiting for replacements, the job can *remesh*: pick the largest
+(data', model') grid that fits the survivors, reshard params/opt state,
+and continue (batch per data-group grows transparently because the data
+pipeline is a pure function of global_step).
+
+Two entry points:
+  * `remesh(state, old_specs_fn, new_mesh)` — in-memory reshard via
+    device_put (works because our checkpoints/state are logically
+    unsharded pytrees; GSPMD handles the device movement).
+  * checkpoint-based: CheckpointManager.restore(..., shardings=new) —
+    exercised cross-device-count in tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+
+from repro.distributed.sharding import param_shardings
+
+
+def best_mesh_shape(num_devices: int, model_parallel: int) -> Tuple[int, int]:
+    """Largest (data, model) grid on the surviving devices, preserving the
+    model-parallel degree (params are sharded over it; changing it needs
+    a reshard anyway, which we do — but keeping it avoids repadding)."""
+    model = model_parallel
+    while model > 1 and num_devices % model:
+        model //= 2
+    data = num_devices // model
+    return data, model
+
+
+def remesh(params: Any, opt_state: Any, new_mesh) -> Tuple[Any, Any]:
+    """Reshard live state onto `new_mesh` (survivor set after node loss)."""
+    p_spec = param_shardings(new_mesh, jax.eval_shape(lambda: params))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    o_spec = {"m": p_spec, "v": p_spec,
+              "step": NamedSharding(new_mesh, P())}
+    return (jax.device_put(params, p_spec),
+            jax.device_put(opt_state, o_spec))

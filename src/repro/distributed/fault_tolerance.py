@@ -1,0 +1,81 @@
+"""Fault tolerance: straggler watchdog, retryable step execution, and the
+restart contract.
+
+At 1000+ nodes the failure model is: (a) hard node loss -> the JAX
+runtime surfaces a distributed error, the job restarts from the latest
+atomic checkpoint (checkpoint/manager.py) with `latest_step()` resume;
+(b) stragglers -> per-step wall times are tracked with an EMA; steps
+slower than `threshold x EMA` are flagged with the host id so the
+scheduler can drain/hot-swap the slow host; (c) data corruption ->
+loss/grad-norm NaN guards skip the update and count strikes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """EMA-based step-time anomaly detector."""
+    threshold: float = 2.0
+    decay: float = 0.9
+    warmup: int = 5
+    ema: float = 0.0
+    steps: int = 0
+    flagged: List[dict] = dataclasses.field(default_factory=list)
+
+    def record(self, seconds: float, host_id: int = 0) -> bool:
+        """Returns True if this step is a straggler."""
+        self.steps += 1
+        if self.steps <= self.warmup:
+            self.ema = seconds if self.ema == 0 else \
+                self.decay * self.ema + (1 - self.decay) * seconds
+            return False
+        slow = seconds > self.threshold * self.ema
+        if slow:
+            self.flagged.append({"step": self.steps, "host": host_id,
+                                 "seconds": seconds, "ema": self.ema})
+        else:
+            self.ema = self.decay * self.ema + (1 - self.decay) * seconds
+        return slow
+
+
+@dataclasses.dataclass
+class NaNGuard:
+    """Skips poisoned updates; aborts after `max_strikes` consecutive."""
+    max_strikes: int = 3
+    strikes: int = 0
+
+    def check(self, loss) -> bool:
+        """True -> step is healthy; False -> skip this update."""
+        healthy = bool(jnp.isfinite(loss))
+        if healthy:
+            self.strikes = 0
+        else:
+            self.strikes += 1
+            if self.strikes >= self.max_strikes:
+                raise FloatingPointError(
+                    f"{self.strikes} consecutive non-finite losses — "
+                    "aborting for restart from checkpoint")
+        return healthy
+
+
+def run_with_retries(step_fn: Callable, max_retries: int = 2,
+                     on_retry: Optional[Callable] = None):
+    """Execute one step, retrying on transient runtime errors (the
+    single-process analogue of restart-on-collective-timeout)."""
+    for attempt in range(max_retries + 1):
+        try:
+            return step_fn()
+        except (jax.errors.JaxRuntimeError, RuntimeError) as e:
+            if attempt == max_retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            time.sleep(min(2.0 ** attempt, 10.0))

@@ -1,0 +1,204 @@
+"""Sharding rules: parameter, input, and cache PartitionSpecs.
+
+Strategy (DESIGN.md §5):
+  * TP over "model": column-parallel in-projections, row-parallel
+    out-projections (Megatron pairing), experts (EP), vocab.
+  * FSDP/ZeRO over "data": every weight's *other* large dim shards over
+    data; optimizer state follows automatically (params-shaped pytree).
+  * DP over ("pod", "data") for batches; when global_batch < |dp axes|
+    (long_500k: batch 1) the *sequence* axis shards over "data" instead
+    (context parallelism).
+
+Rules are keyed by leaf name; specs describe the TRAILING dims and are
+left-padded with None for stacked-layer leading dims.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# leaf name -> spec of trailing dims
+_PARAM_RULES: Dict[str, Tuple] = {
+    # embeddings: vocab over model (TP), d over data (FSDP)
+    "embed": ("model", "data"),
+    "unembed": ("model", "data"),
+    # column-parallel (d_in, d_out_tp)
+    "wq": ("data", "model"), "wk": ("data", "model"),
+    "wv": ("data", "model"), "wg": ("data", "model"),
+    "wr": ("data", "model"), "mlp_wi": ("data", "model"),
+    "ck": ("data", "model"), "cr": ("data", "model"),
+    "in_proj": ("data", "model"), "xq": ("data", "model"),
+    "xk": ("data", "model"), "xv": ("data", "model"),
+    "ada": ("data", "model"), "shared_wi": ("data", "model"),
+    # row-parallel (d_in_tp, d_out)
+    "wo": ("model", "data"), "mlp_wo": ("model", "data"),
+    "cv": ("model", "data"), "out_proj": ("model", "data"),
+    "xo": ("model", "data"), "shared_wo": ("model", "data"),
+    # MoE: experts over model (EP), d over data
+    "wi": ("model", "data", None),
+    "router": ("data", None),
+    # SLA proj / rwkv bonus: heads over model
+    "sla_proj": ("model", None, None),
+    "u": ("model", None),
+    # misc projections
+    "patch_in": ("data", None),
+    "patch_out": ("data", None),
+    "t_embed": (None, "data"),
+    "wa": ("data", None),
+    "wb": (None, "data"),
+    "conv": (None, "model"),
+}
+# moe wo is (E, ff, d): experts over model
+_PARAM_RULES_3D = {
+    "wo": ("model", None, "data"),
+    "wi": ("model", "data", None),
+}
+
+
+def param_spec(path: str, ndim: int) -> P:
+    name = path.split("/")[-1]
+    in_moe = "/moe/" in path or path.endswith("moe")
+    rules = None
+    if in_moe and name in _PARAM_RULES_3D:
+        rules = _PARAM_RULES_3D[name]
+    elif name in _PARAM_RULES:
+        rules = _PARAM_RULES[name]
+    if rules is None:
+        return P()  # replicate (norm scales etc.)
+    if ndim < len(rules):
+        # e.g. unstacked variant — drop leading rule dims
+        rules = rules[len(rules) - ndim:]
+    pad = (None,) * (ndim - len(rules))
+    return P(*(pad + tuple(rules)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pe in path:
+        if hasattr(pe, "key"):
+            parts.append(str(pe.key))
+        elif hasattr(pe, "idx"):
+            parts.append(str(pe.idx))
+    return "/".join(parts)
+
+
+def _divisible(spec: P, shape, mesh) -> P:
+    """Drop sharding on dims the mesh doesn't divide (e.g. tiny LoRA dims)."""
+    fixed = []
+    for dim, names in zip(shape, tuple(spec) + (None,) * (len(shape)
+                                                          - len(spec))):
+        if names is None:
+            fixed.append(None)
+            continue
+        ax_names = names if isinstance(names, tuple) else (names,)
+        size = 1
+        for a in ax_names:
+            size *= mesh.shape[a]
+        fixed.append(names if dim % size == 0 and dim >= size else None)
+    return P(*fixed)
+
+
+def param_shardings(mesh, params_shape) -> Any:
+    """Pytree of NamedShardings matching a (possibly abstract) params tree."""
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), len(leaf.shape))
+        spec = _divisible(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def pick_dp_axes(mesh, global_batch: int) -> Tuple[str, ...]:
+    """Largest dp-axis subset the batch divides: full ("pod","data"),
+    then ("data",), then ("pod",). Falling back to a subset keeps
+    attention shard-local (the remaining axis becomes pure DP via the
+    gradient all-reduce) instead of forcing sequence shards — measured
+    40x collective reduction on wan2.1 x multi-pod (§Perf)."""
+    for cand in (dp_axes(mesh), ("data",), ("pod",)):
+        cand = tuple(a for a in cand if a in mesh.shape)
+        if not cand:
+            continue
+        size = 1
+        for a in cand:
+            size *= mesh.shape[a]
+        if global_batch >= size and global_batch % size == 0:
+            return cand
+    return ()
+
+
+def batch_shardings(mesh, batch_specs, global_batch: int) -> Any:
+    """Input shardings: batch over the largest dividing dp-axis subset,
+    or sequence over 'data' when none fits (context parallelism for
+    long_500k)."""
+    dp = pick_dp_axes(mesh, global_batch)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    shard_seq = not dp
+
+    def one(leaf):
+        if leaf is None:
+            return None
+        shape = leaf.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        if shard_seq:
+            if len(shape) >= 2 and shape[1] % mesh.shape["data"] == 0:
+                spec = P(None, "data")
+            else:
+                spec = P()
+        else:
+            spec = P(dp) if shape[0] % dp_size == 0 else P()
+        return NamedSharding(mesh, _divisible(spec, shape, mesh))
+    return jax.tree.map(one, batch_specs, is_leaf=lambda x: x is None)
+
+
+def _dp_size(mesh, axes) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def cache_shardings(mesh, cache_specs, global_batch: int) -> Any:
+    """KV/state cache shardings. Layout (L, B, H, S, D) or (L, B, H, Dk, Dv).
+
+    decode_32k (B=128): batch over dp, heads over model.
+    long_500k (B=1):   sequence over data (context-parallel cache),
+                       heads over model.
+    """
+    dp = pick_dp_axes(mesh, global_batch)
+    dp_size = _dp_size(mesh, dp)
+    shard_seq = not dp
+
+    def one(path, leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:
+            return NamedSharding(mesh, P())
+        name = _path_str(path)
+        if len(shape) == 5:  # (L, B, H, S, D) kv cache / (L,B,H,dk,dv) state
+            is_state = "state" in name or "ssm" in name
+            model_sz = mesh.shape.get("model", 1)
+            heads_ok = shape[2] % model_sz == 0 and shape[2] >= model_sz
+            if shard_seq and not is_state:
+                spec = (P(None, None, "model", "data", None) if heads_ok
+                        else P(None, None, None, ("data", "model"), None))
+            elif is_state or heads_ok:
+                spec = P(None, dp, "model", None, None)
+            else:
+                # few KV heads (GQA): shard the sequence dim over "model"
+                # instead (flash-decoding layout — partial softmax + combine)
+                spec = P(None, dp, None, "model", None)
+        elif len(shape) == 4:  # (L, B, S, D) conv tails etc.
+            spec = P(None, None if shard_seq else dp, None, None)
+        elif len(shape) == 2:
+            spec = P(None if shard_seq else dp)
+        else:
+            spec = P()
+        return NamedSharding(mesh, _divisible(spec, shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, cache_specs)

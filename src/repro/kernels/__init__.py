@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for SLA (the paper's fused-kernel contribution)."""
+from repro.kernels.ops import sla_attention_core
+from repro.kernels.ref import sla_attention_core_reference

@@ -1,0 +1,166 @@
+"""jit'd SLA attention op: Pallas kernels + custom_vjp (Alg. 1 + Alg. 2).
+
+`sla_attention_core(q, k, v, qp, kp, mc, cfg)` returns (O^s, O^l); the
+caller applies Proj and the sum (Eq. 6). Differentiable w.r.t. q, k, v,
+qp, kp (the mask mc is a constant, as in the paper).
+
+Division of labor (DESIGN.md §3):
+  * sparse fwd + linear merge ........ Pallas kernel (sla_fwd)
+  * sparse bwd dQ / dK,dV ............ Pallas kernels (sla_bwd, row/col LUTs)
+  * per-block h_j, z_j + marginal agg  XLA einsum (MXU matmul — the paper's
+    App. A.3 pre-aggregation in its TPU-native dense form)
+  * linear-branch gradients .......... XLA einsums (Alg. 2 lines 4-5, 17)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import SLAConfig
+from repro.core.masks import build_col_lut, build_lut
+from repro.kernels.sla_fwd import sla_fwd
+from repro.kernels.sla_bwd import sla_bwd_dq, sla_bwd_dkv
+
+EPS = 1e-6
+
+
+def _flat(x):
+    """(B, H, N, D) -> (B*H, N, D)."""
+    b, h, n, d = x.shape
+    return x.reshape(b * h, n, d)
+
+
+def _block(x, blk):
+    """(BH, N, D) -> (BH, T, blk, D)."""
+    bh, n, d = x.shape
+    return x.reshape(bh, n // blk, blk, d)
+
+
+def _hz_blocks(kp, v, block_kv):
+    """Per-KV-block linear-attention state: h_j = phi(K_j)^T V_j, z_j."""
+    kpb = _block(kp.astype(jnp.float32), block_kv)
+    vb = _block(v.astype(jnp.float32), block_kv)
+    h = jnp.einsum("gnkd,gnke->gnde", kpb, vb)
+    z = jnp.sum(kpb, axis=-2)
+    return h, z
+
+
+def _aggregate(a, h, z):
+    """H_i = sum_{j marginal} h_j, Z_i likewise (dense-matmul form)."""
+    hi = jnp.einsum("gmn,gnde->gmde", a, h)
+    zi = jnp.einsum("gmn,gnd->gmd", a, z)
+    return hi, zi
+
+
+def _linear_bwd(do_l, qp, hi, zi, a, kp, v, block_q, block_kv):
+    """Linear-branch gradients (Alg. 2 lines 2, 4-5, 14, 17)."""
+    qpb = _block(qp.astype(jnp.float32), block_q)  # (g, Tm, bq, d)
+    num = jnp.einsum("gmqd,gmde->gmqe", qpb, hi)
+    den = jnp.einsum("gmqd,gmd->gmq", qpb, zi)[..., None]
+    live = den > EPS
+    sden = jnp.where(live, den, 1.0)
+    o_l = jnp.where(live, num / sden, 0.0)
+    dob = _block(do_l.astype(jnp.float32), block_q)
+    dob = jnp.where(live, dob, 0.0)
+    d_l = jnp.sum(dob * o_l, axis=-1, keepdims=True)  # D^l (g,Tm,bq,1)
+    qp_over = jnp.where(live, qpb / sden, 0.0)
+    dhi = jnp.einsum("gmqd,gmqe->gmde", qp_over, dob)
+    dzi = -jnp.einsum("gmqd,gmq->gmd", qp_over, d_l[..., 0])
+    dqp = (jnp.einsum("gmqe,gmde->gmqd", dob, hi) - d_l * zi[..., None, :])
+    dqp = jnp.where(live, dqp / sden, 0.0)
+    # Aggregate row gradients back to per-column dh_j, dz_j (A^T matmul).
+    dh = jnp.einsum("gmn,gmde->gnde", a, dhi)
+    dz = jnp.einsum("gmn,gmd->gnd", a, dzi)
+    vb = _block(v.astype(jnp.float32), block_kv)
+    kpb = _block(kp.astype(jnp.float32), block_kv)
+    dkp = jnp.einsum("gnke,gnde->gnkd", vb, dh) + dz[..., None, :]
+    dv_l = jnp.einsum("gnkd,gnde->gnke", kpb, dh)
+    bh, tm, bq, d = dqp.shape
+    return (dqp.reshape(bh, tm * bq, d),
+            dkp.reshape(bh, -1, d),
+            dv_l.reshape(bh, -1, d))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _sla_core(q, k, v, qp, kp, mc, cfg: SLAConfig, scale: float,
+              interpret: bool):
+    o_s, o_l = _fwd_impl(q, k, v, qp, kp, mc, cfg, scale, interpret)[:2]
+    return o_s.reshape(q.shape), o_l.reshape(q.shape)
+
+
+def _fwd_impl(q, k, v, qp, kp, mc, cfg, scale, interpret):
+    fq, fk, fv, fqp, fkp = map(_flat, (q, k, v, qp, kp))
+    b, h, tm, tn = mc.shape
+    fmc = mc.reshape(b * h, tm, tn)
+    k_sel = cfg.num_critical(tn)
+    lut, counts = build_lut(fmc, k_sel)
+    a = (fmc == 0).astype(jnp.float32)
+    hb, zb = _hz_blocks(fkp, fv, cfg.block_kv)
+    hi, zi = _aggregate(a, hb, zb)
+    o_s, o_l, lse = sla_fwd(lut, counts, fq, fk, fv, fqp, hi, zi,
+                            scale=scale, causal=cfg.causal,
+                            block_q=cfg.block_q, block_kv=cfg.block_kv,
+                            interpret=interpret)
+    return o_s, o_l, lse, lut, counts, a, hi, zi, fmc
+
+
+def _sla_core_fwd(q, k, v, qp, kp, mc, cfg, scale, interpret):
+    o_s, o_l, lse, lut, counts, a, hi, zi, fmc = _fwd_impl(
+        q, k, v, qp, kp, mc, cfg, scale, interpret)
+    shape = q.shape
+    res = (q, k, v, qp, kp, fmc, o_s, lse, a, hi, zi)
+    out = (o_s.reshape(shape), o_l.reshape(shape))
+    return out, res
+
+
+def _sla_core_bwd(cfg, scale, interpret, res, cts):
+    q, k, v, qp, kp, fmc, o_s, lse, a, hi, zi = res
+    do_s, do_l = cts
+    shape = q.shape
+    fq, fk, fv, fqp, fkp = map(_flat, (q, k, v, qp, kp))
+    fdo_s, fdo_l = map(_flat, (do_s, do_l))
+    fdo_s = fdo_s.astype(jnp.float32)
+
+    # --- sparse component (Pallas kernels) ---
+    d_s = jnp.sum(fdo_s * o_s, axis=-1)  # (BH, N)
+    dq = sla_bwd_dq(*build_lut(fmc, cfg.num_critical(fmc.shape[-1])),
+                    fq, fk, fv, fdo_s, lse, d_s,
+                    scale=scale, causal=cfg.causal,
+                    block_q=cfg.block_q, block_kv=cfg.block_kv,
+                    interpret=interpret)
+    w_col = cfg.col_capacity(fmc.shape[-2], fmc.shape[-1])
+    col_lut, col_counts = build_col_lut(fmc, w_col)
+    dk, dv_s = sla_bwd_dkv(col_lut, col_counts, fq, fk, fv, fdo_s, lse, d_s,
+                           scale=scale, causal=cfg.causal,
+                           block_q=cfg.block_q, block_kv=cfg.block_kv,
+                           interpret=interpret)
+
+    # --- linear component (XLA einsums) ---
+    dqp, dkp, dv_l = _linear_bwd(fdo_l, fqp, hi, zi, a, fkp, fv,
+                                 cfg.block_q, cfg.block_kv)
+    dv = dv_s + dv_l
+
+    b, h = shape[0], shape[1]
+    unflat = lambda x: x.reshape(b, h, shape[2], shape[3])
+    return (unflat(dq).astype(q.dtype), unflat(dk).astype(k.dtype),
+            unflat(dv).astype(v.dtype), unflat(dqp).astype(qp.dtype),
+            unflat(dkp).astype(kp.dtype),
+            np.zeros((b, h) + fmc.shape[-2:], dtype=jax.dtypes.float0))
+
+
+_sla_core.defvjp(_sla_core_fwd, _sla_core_bwd)
+
+
+def sla_attention_core(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    qp: jax.Array, kp: jax.Array, mc: jax.Array, cfg: SLAConfig,
+    scale: float | None = None, interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused-kernel SLA core. All of q,k,v,qp,kp are (B, H, N, D); mc is
+    (B, H, Tm, Tn) int8. Returns (O^s, O^l) f32, each (B, H, N, D)."""
+    scale = float(q.shape[-1] ** -0.5) if scale is None else float(scale)
+    return _sla_core(q, k, v, qp, kp, mc, cfg, scale, bool(interpret))

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle with the exact signature of ops.sla_attention_core.
+
+Used by every kernel test: the Pallas outputs (interpret mode on CPU) and
+their custom_vjp gradients must match jax.grad through this reference.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.core.config import SLAConfig
+from repro.core import reference as _ref
+
+
+def sla_attention_core_reference(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    qp: jax.Array, kp: jax.Array, mc: jax.Array, cfg: SLAConfig,
+    scale: float | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Dense reference for (O^s, O^l). Differentiable by jax autodiff."""
+    return _ref.sla_forward_reference(q, k, v, qp, kp, mc, cfg, scale)
+
+
+full_attention = _ref.full_attention
+full_linear = _ref.full_linear
+sparse_component = _ref.sparse_component
+linear_component = _ref.linear_component

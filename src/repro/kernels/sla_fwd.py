@@ -1,0 +1,147 @@
+"""Fused SLA forward Pallas TPU kernel (paper Alg. 1, TPU adaptation).
+
+Grid: (B*H, T_m, K_sel) — the trailing axis iterates the *critical* KV
+blocks of one query row, streamed HBM->VMEM through a scalar-prefetched
+lookup table (`lut`) so only selected blocks are ever copied. Online
+softmax state (m, l, acc) lives in VMEM scratch, carried across the
+sequential trailing grid axis. At the last step the kernel finalizes the
+sparse output O^s, the log-sum-exp L (for the backward pass), and merges
+the linear branch O^l = phi(Q_i) H_i / (phi(Q_i) Z_i) from the
+pre-aggregated per-row (H_i, Z_i) — the single-pass fusion of sparse +
+linear that is the paper's kernel contribution.
+
+All matmuls accumulate in f32 (MXU-native); inputs may be bf16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+EPS = 1e-6
+LANES = 128
+
+
+def _dot(a, b, trans_b=False):
+    dims = (((1,), (1 if trans_b else 0,)), ((), ()))
+    return jax.lax.dot_general(a, b, dims, preferred_element_type=jnp.float32)
+
+
+def _fwd_kernel(lut_ref, counts_ref,  # scalar prefetch
+                q_ref, k_ref, v_ref, qp_ref, hi_ref, zi_ref,  # inputs
+                os_ref, ol_ref, lse_ref,  # outputs
+                acc_ref, m_ref, l_ref,  # VMEM scratch
+                *, scale: float, k_sel: int, causal: bool,
+                block_q: int, block_kv: int):
+    bh, i, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(s < counts_ref[bh, i])
+    def _step():
+        q = q_ref[0].astype(jnp.float32)
+        kk = k_ref[0].astype(jnp.float32)
+        sij = _dot(q, kk, trans_b=True) * scale  # (bq, bkv) f32
+        if causal:
+            j = lut_ref[bh, i, s]
+            rows = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            cols = j * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            sij = jnp.where(rows >= cols, sij, NEG_INF)
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(sij, axis=-1))
+        p = jnp.exp(sij - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + _dot(p, v_ref[0].astype(jnp.float32)))
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(s == k_sel - 1)
+    def _finalize():
+        m, l = m_ref[:, 0], l_ref[:, 0]
+        os_ref[0] = (acc_ref[...] / l[:, None]).astype(os_ref.dtype)
+        lse_ref[0] = (m + jnp.log(l))[None, :].astype(lse_ref.dtype)
+        # Linear branch (Eq. 5): one (bq,d)x(d,d) matmul + normalizer.
+        qp = qp_ref[0].astype(jnp.float32)
+        num = _dot(qp, hi_ref[0, 0])
+        den = _dot(qp, zi_ref[0, 0][:, None])  # (bq, 1)
+        live = den > EPS
+        ol = jnp.where(live, num / jnp.where(live, den, 1.0), 0.0)
+        ol_ref[0] = ol.astype(ol_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "block_q", "block_kv", "interpret"))
+def sla_fwd(lut, counts, q, k, v, qp, hi, zi, *, scale, causal,
+            block_q, block_kv, interpret=True):
+    """Run the fused forward kernel.
+
+    Args:
+      lut:    (BH, Tm, K_sel) int32 critical block indices (padded).
+      counts: (BH, Tm) int32 live entries per row.
+      q, qp:  (BH, N, D); k, v: (BH_kv, N, D) with BH % BH_kv == 0.
+      hi:     (BH, Tm, D, D) f32 aggregated marginal H per row.
+      zi:     (BH, Tm, D) f32 aggregated marginal Z per row.
+
+    Returns: (o_s (BH,N,D) f32, o_l (BH,N,D) f32, lse (BH,N) f32)
+    """
+    bh_q, n, d = q.shape
+    bh_kv = k.shape[0]
+    group = bh_q // bh_kv
+    tm = n // block_q
+    k_sel = lut.shape[-1]
+    grid = (bh_q, tm, k_sel)
+
+    kern = functools.partial(
+        _fwd_kernel, scale=scale, k_sel=k_sel, causal=causal,
+        block_q=block_q, block_kv=block_kv)
+
+    def kv_map(bh, i, s, lut_ref, counts_ref):
+        return (bh // group, lut_ref[bh, i, s], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, i, s, *_: (bh, i, 0)),  # q
+            pl.BlockSpec((1, block_kv, d), kv_map),                          # k
+            pl.BlockSpec((1, block_kv, d), kv_map),                          # v
+            pl.BlockSpec((1, block_q, d), lambda bh, i, s, *_: (bh, i, 0)),  # qp
+            pl.BlockSpec((1, 1, d, d), lambda bh, i, s, *_: (bh, i, 0, 0)),  # hi
+            pl.BlockSpec((1, 1, d), lambda bh, i, s, *_: (bh, i, 0)),        # zi
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, i, s, *_: (bh, i, 0)),  # o_s
+            pl.BlockSpec((1, block_q, d), lambda bh, i, s, *_: (bh, i, 0)),  # o_l
+            pl.BlockSpec((1, 1, block_q), lambda bh, i, s, *_: (bh, 0, i)),  # lse
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),      # acc
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # m (lane-broadcast)
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # l (lane-broadcast)
+        ],
+    )
+    o_s, o_l, lse = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh_q, n, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh_q, n, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh_q, 1, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lut, counts, q, k, v, qp, hi, zi)
+    return o_s, o_l, lse[:, 0, :]

@@ -1,0 +1,54 @@
+"""Serving driver.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import registry
+from repro.serving.engine import Request, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    mdl = registry.get_model(cfg)
+    params = mdl.init(jax.random.PRNGKey(args.seed), cfg)
+    rs = np.random.default_rng(args.seed)
+    reqs = [Request(rid=i,
+                    prompt=rs.integers(0, cfg.vocab_size,
+                                       size=args.prompt_len)
+                    .astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    engine = ServingEngine(cfg, params, batch_size=args.batch,
+                           max_len=args.prompt_len + args.max_new + 8)
+    t0 = time.time()
+    done = engine.run(reqs)
+    st = engine.stats
+    print(f"{len(done)} requests in {time.time()-t0:.1f}s | "
+          f"prefill {st.prefill_tokens} tok / {st.prefill_s:.2f}s | "
+          f"decode {st.decode_tokens} tok / {st.decode_s:.2f}s")
+    return done
+
+
+if __name__ == "__main__":
+    main()

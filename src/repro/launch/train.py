@@ -1,0 +1,137 @@
+"""Fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+        --steps 20 --ckpt-dir /tmp/ckpt
+
+Wires together: config -> mesh -> sharded params/opt -> deterministic data
+pipeline -> jitted train_step (remat + SP context) -> atomic async
+checkpoints with auto-resume -> straggler watchdog + NaN guard ->
+optional error-feedback gradient compression on the (pod-)DP axis.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_arch, get_shape
+from repro.data.pipeline import DataConfig, make_iterator
+from repro.distributed import ctx as actx
+from repro.distributed.fault_tolerance import NaNGuard, StragglerWatchdog
+from repro.distributed.sharding import batch_shardings, param_shardings
+from repro.launch.mesh import make_host_mesh
+from repro.models import registry
+from repro.optim import adamw
+from repro.optim.compression import ef_compress_decompress, ef_init
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + shape (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--data-mesh", type=int, default=1)
+    ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    shape = get_shape(args.shape, smoke=args.smoke)
+    mdl = registry.get_model(cfg)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                                warmup_steps=max(args.steps // 10, 1))
+    mesh = make_host_mesh(args.data_mesh, args.model_mesh)
+
+    rng = jax.random.PRNGKey(args.seed)
+    params = mdl.init(rng, cfg)
+    opt_state = adamw.init(params)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    p_shard = param_shardings(mesh, jax.eval_shape(lambda: params))
+    o_shard = {"m": p_shard, "v": p_shard,
+               "step": NamedSharding(mesh, P())}
+    params = jax.device_put(params, p_shard)
+    opt_state = jax.device_put(opt_state, o_shard)
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+    if mgr is not None and mgr.latest_step() is not None:
+        start_step = mgr.latest_step()
+        state = mgr.restore(start_step,
+                            {"params": params, "opt": opt_state},
+                            {"params": p_shard, "opt": o_shard})
+        params, opt_state = state["params"], state["opt"]
+        print(f"resumed from step {start_step}")
+
+    data = make_iterator(cfg, shape, DataConfig(seed=args.seed),
+                         start_step=start_step)
+    ef_error = ef_init(params) if args.compress_grads else None
+
+    def loss_of(p, batch):
+        return mdl.loss_fn(p, cfg, batch)
+
+    @jax.jit
+    def grad_step(p, batch):
+        return jax.value_and_grad(loss_of)(p, batch)
+
+    @jax.jit
+    def apply_update(p, g, o):
+        return adamw.update(p, g, o, opt_cfg)
+
+    if args.compress_grads:
+        @jax.jit
+        def compress(g, e):
+            return ef_compress_decompress(g, e)
+
+    watchdog = StragglerWatchdog()
+    guard = NaNGuard()
+    rspec = actx.default_residual_spec(mesh, shape.global_batch,
+                                       shape.seq_len)
+    losses = []
+    with mesh, actx.activation_sharding(mesh, rspec, remat=True):
+        for step in range(start_step, args.steps):
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+            loss, grads = grad_step(params, batch)
+            if not guard.check(loss):
+                print(f"step {step}: non-finite loss, update skipped")
+                continue
+            if args.compress_grads:
+                grads, ef_error, cstats = compress(grads, ef_error)
+            params, opt_state, metrics = apply_update(params, grads,
+                                                      opt_state)
+            jax.block_until_ready(loss)
+            dt = time.time() - t0
+            slow = watchdog.record(dt)
+            losses.append(float(loss))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                extra = " STRAGGLER" if slow else ""
+                print(f"step {step:5d} loss {float(loss):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} {dt:.2f}s{extra}",
+                      flush=True)
+            if mgr is not None and (step + 1) % args.ckpt_every == 0:
+                mgr.save(step + 1, {"params": params, "opt": opt_state})
+        if mgr is not None:
+            mgr.save(args.steps, {"params": params, "opt": opt_state},
+                     blocking=True)
+    if watchdog.flagged:
+        print(f"stragglers flagged: {len(watchdog.flagged)}")
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""Shared model building blocks (pure JAX, functional params-as-pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take (rng, cfg).
+  * activations bf16 by default, norms/softmax/losses in f32.
+  * attention tensors are (B, H, N, Dh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SLAConfig, sla_attention
+from repro.core import reference as sref
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+def dense_init(rng, in_dim: int, out_dim: int, dtype=jnp.float32):
+    scale = (2.0 / (in_dim + out_dim)) ** 0.5
+    return (jax.random.normal(rng, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32)
+            * dim**-0.5).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms / rotary
+# --------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 statistics and *bf16 gradient boundaries*.
+
+    The hand-written VJP keeps the incoming/outgoing cotangents in x.dtype:
+    without it, XLA hoists the f32 cast of the norm backward above the
+    tensor-parallel all-reduce of dX, doubling that collective's bytes
+    (measured on mistral-large x train_4k; EXPERIMENTS.md §Perf)."""
+    return _rms_fwd(x, w, eps)[0]
+
+
+def _rms_fwd(x, w, eps):
+    # statistics in f32; the O(B*S*D) elementwise math stays in x.dtype so
+    # no f32 copy of the activation ever reaches a fusion/collective
+    # boundary (bf16 ARs: half the wire bytes of the naive f32 version).
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    wp1 = (1.0 + w.astype(jnp.float32)).astype(x.dtype)
+    out = x * r.astype(x.dtype) * wp1
+    return out, (x, w, r)
+
+
+def _rms_bwd(eps, res, g):
+    x, w, r = res
+    d = x.shape[-1]
+    rb = r.astype(x.dtype)
+    wp1 = (1.0 + w.astype(jnp.float32)).astype(x.dtype)
+    gx = g * wp1 * rb
+    # d var path (reduction in f32, correction applied in x.dtype)
+    dot = jnp.sum((g * wp1 * x).astype(jnp.float32), axis=-1,
+                  keepdims=True)
+    corr = (r * r * r * dot / d).astype(x.dtype)
+    gx = gx - x * corr
+    dw_axes = tuple(range(x.ndim - 1))
+    dw = jnp.sum((g * x).astype(jnp.float32) * r, axis=dw_axes)
+    return gx, dw.astype(w.dtype)
+
+
+rms_norm.defvjp(lambda x, w, eps: ((o := _rms_fwd(x, w, eps))[0], o[1]),
+                _rms_bwd)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Rotary embedding. x: (B, H, N, D); positions: (B, N) or (N,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, N, half)
+    cos = jnp.cos(ang)[:, None, :, :]
+    sin = jnp.sin(ang)[:, None, :, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention dispatch: full / sliding-window / SLA
+# --------------------------------------------------------------------------
+def _swa_attention(q, k, v, window: int, causal: bool, scale=None,
+                   block: int = 128):
+    """Banded sliding-window attention, O(N * window) compute + memory.
+
+    Implemented as block-sparse attention over a *static* band LUT reusing
+    the SLA gather machinery — no N x N score matrix is ever built (this
+    matters for gemma3 local layers at 32K+).
+    """
+    from repro.core.block_sparse_xla import sparse_component_gather
+    from repro.core.config import SLAConfig
+
+    b, h, n, d = q.shape
+    block = min(block, n)
+    while n % block:
+        block //= 2
+    tm = n // block
+    wb = min(tm, max(1, (window + block - 1) // block + 1))
+    rows = jnp.arange(tm)[:, None]
+    offs = jnp.arange(wb)[None, :]
+    if causal:
+        idx = jnp.clip(rows - (wb - 1) + offs, 0, tm - 1)
+        counts = jnp.minimum(rows[:, 0] + 1, wb)
+    else:
+        start = jnp.clip(rows - wb // 2, 0, tm - wb)
+        idx = start + offs  # shifted-in-bounds window, no duplicates
+        counts = jnp.full((tm,), wb)
+    # de-duplicate clipped entries by marking early slots dead on short rows
+    if causal:
+        # live slots are the *last* `counts` ones; rebuild as leading-live
+        shift = wb - counts[:, None]
+        idx = jnp.take_along_axis(
+            idx, (jnp.arange(wb)[None, :] + shift) % wb, axis=-1)
+    lut = jnp.broadcast_to(idx[None, None], (b, h, tm, wb)) \
+        .astype(jnp.int32)
+    cnts = jnp.broadcast_to(counts[None, None], (b, h, tm)) \
+        .astype(jnp.int32)
+    cfg = SLAConfig(block_q=block, block_kv=block, causal=causal,
+                    window=window)
+    o, _ = sparse_component_gather(q, k, v, lut, cnts, cfg, scale)
+    return o.astype(q.dtype)
+
+
+def attention(
+    sla_params: Optional[dict],
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    kind: str,
+    sla_cfg: SLAConfig,
+    window: int = 0,
+    causal: bool = True,
+    impl: str = "gather",
+) -> jax.Array:
+    """Unified attention entry. kind: "sla" | "full" | "swa".
+
+    k, v may have fewer (GQA) heads. impl selects the SLA execution path
+    ("gather" XLA / "reference" dense / "kernel" Pallas-interpret).
+    """
+    if kind == "full":
+        h = q.shape[1]
+        kk = jnp.repeat(k, h // k.shape[1], 1) if k.shape[1] != h else k
+        vv = jnp.repeat(v, h // v.shape[1], 1) if v.shape[1] != h else v
+        return sref.full_attention(q, kk, vv, causal).astype(q.dtype)
+    if kind == "swa":
+        h = q.shape[1]
+        kk = jnp.repeat(k, h // k.shape[1], 1) if k.shape[1] != h else k
+        vv = jnp.repeat(v, h // v.shape[1], 1) if v.shape[1] != h else v
+        return _swa_attention(q, kk, vv, window, causal)
+    if kind == "sla":
+        cfg = dataclasses.replace(sla_cfg, causal=causal)
+        use_kernel = impl == "kernel"
+        return sla_attention(sla_params, q, k, v, cfg,
+                             use_kernel=use_kernel,
+                             impl="gather" if impl == "gather" else "reference")
+    raise ValueError(f"unknown attention kind {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+def chunked_softmax_xent(
+    x: jax.Array, embed: jax.Array, targets: jax.Array,
+    mask: Optional[jax.Array] = None, chunk: int = 512,
+) -> jax.Array:
+    """Cross-entropy without materializing full (B, S, V) logits.
+
+    x: final hidden states (B, S, D); embed: (V, D) tied output table;
+    targets: (B, S) int32. Scans over sequence chunks — peak logits memory
+    is (B, chunk, V). Production trick for V up to 262k (gemma3).
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    xc = x.reshape(b, s // chunk, chunk, d)
+    tc = targets.reshape(b, s // chunk, chunk)
+    mc = (jnp.ones_like(tc, jnp.float32) if mask is None
+          else mask.reshape(b, s // chunk, chunk).astype(jnp.float32))
+
+    def body(carry, args):
+        xi, ti, mi = args  # (B, chunk, D), (B, chunk), (B, chunk)
+        logits = jnp.einsum("bcd,vd->bcv", xi.astype(jnp.float32),
+                            embed.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((lse - gold) * mi)
+        return carry + loss, None
+
+    total, _ = jax.lax.scan(
+        body, jnp.float32(0.0),
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(tc, 1, 0),
+         jnp.moveaxis(mc, 1, 0)))
+    denom = jnp.maximum(jnp.sum(mc), 1.0)
+    return total / denom
+
+
+def mse_loss(pred: jax.Array, target: jax.Array) -> jax.Array:
+    diff = pred.astype(jnp.float32) - target.astype(jnp.float32)
+    return jnp.mean(diff * diff)

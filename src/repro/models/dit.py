@@ -1,0 +1,146 @@
+"""Diffusion Transformer (the paper's home architecture).
+
+Wan2.1-style video DiT: patchified latent tokens, AdaLN-zero timestep
+modulation, bidirectional self-attention (SLA's target workload), optional
+cross-attention to text conditioning, flow-matching training objective.
+Covers both `wan2_1_1_3b` (video, seq ~32K) and `lightningdit_1b`
+(image, seq 1024).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ctx
+from repro.models.common import attention, dense_init, mse_loss, rms_norm
+
+
+def _layer_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    r = list(jax.random.split(rng, 10))
+    p = {
+        "ln1": jnp.zeros((d,), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "wq": dense_init(r[0], d, h * dh, dtype),
+        "wk": dense_init(r[1], d, cfg.num_kv_heads * dh, dtype),
+        "wv": dense_init(r[2], d, cfg.num_kv_heads * dh, dtype),
+        "wo": dense_init(r[3], h * dh, d, dtype),
+        "sla_proj": jnp.zeros((h, dh, dh), dtype),
+        "mlp_wi": dense_init(r[4], d, 2 * cfg.d_ff, dtype),
+        "mlp_wo": dense_init(r[5], cfg.d_ff, d, dtype),
+        # AdaLN-zero: 6 modulation vectors from the timestep embedding
+        "ada": (jax.random.normal(r[6], (d, 6 * d), jnp.float32)
+                * 0.01).astype(dtype),
+    }
+    if cfg.cross_attn:
+        p["ln_x"] = jnp.zeros((d,), dtype)
+        p["xq"] = dense_init(r[7], d, h * dh, dtype)
+        p["xk"] = dense_init(r[8], d, cfg.num_kv_heads * dh, dtype)
+        p["xv"] = dense_init(r[9], d, cfg.num_kv_heads * dh, dtype)
+        p["xo"] = dense_init(r[7], h * dh, d, dtype)
+    return p
+
+
+def init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    r = jax.random.split(rng, cfg.num_layers + 3)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(
+        jnp.stack(r[: cfg.num_layers]))
+    d = cfg.d_model
+    return {
+        "patch_in": dense_init(r[-1], cfg.patch_dim, d, dtype),
+        "t_embed": dense_init(r[-2], 256, d, dtype),
+        "layers": layers,
+        "ln_f": jnp.zeros((d,), dtype),
+        "patch_out": (jnp.zeros((d, cfg.patch_dim), dtype)),
+    }
+
+
+def _timestep_embedding(t: jax.Array, dim: int = 256) -> jax.Array:
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = t.astype(jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def forward(params, cfg: ArchConfig, latents, t,
+            cond: Optional[jax.Array] = None,
+            compute_dtype=jnp.bfloat16, impl: str = "gather",
+            sla_mode: Optional[str] = None) -> jax.Array:
+    """latents: (B, N, patch_dim); t: (B,) diffusion time in [0,1];
+    cond: (B, Lc, d) stub text embeddings. Returns velocity prediction
+    with the same shape as latents.
+
+    sla_mode overrides cfg.sla.mode (used by the ablation benchmarks to
+    run full / linear_only / sparse_only / l_plus_s variants)."""
+    x = jnp.einsum("bnp,pd->bnd", latents.astype(compute_dtype),
+                   params["patch_in"].astype(compute_dtype))
+    temb = jnp.einsum("be,ed->bd", _timestep_embedding(t * 1000.0),
+                      params["t_embed"].astype(jnp.float32))
+    temb = jax.nn.silu(temb).astype(compute_dtype)
+    b, n, d = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    import dataclasses
+    sla_cfg = dataclasses.replace(cfg.sla, causal=False)
+    if sla_mode is not None:
+        sla_cfg = dataclasses.replace(sla_cfg, mode=sla_mode)
+    kind = "sla" if cfg.attention_kind == "sla" else cfg.attention_kind
+    if sla_mode is not None:
+        kind = "sla"
+
+    def body(x, p):
+        mod = jnp.einsum("bd,de->be", temb, p["ada"].astype(temb.dtype))
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        xn = rms_norm(x, p["ln1"]) * (1 + sc1[:, None]) + sh1[:, None]
+        q = jnp.einsum("bsd,de->bse", xn, p["wq"].astype(x.dtype)) \
+            .reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+        k = jnp.einsum("bsd,de->bse", xn, p["wk"].astype(x.dtype)) \
+            .reshape(b, n, hkv, dh).transpose(0, 2, 1, 3)
+        v = jnp.einsum("bsd,de->bse", xn, p["wv"].astype(x.dtype)) \
+            .reshape(b, n, hkv, dh).transpose(0, 2, 1, 3)
+        o = attention({"proj": p["sla_proj"]}, q, k, v, kind, sla_cfg,
+                      causal=False, impl=impl)
+        o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+        x = ctx.shard_residual(
+            x + g1[:, None] * jnp.einsum("bse,ed->bsd", o,
+                                         p["wo"].astype(x.dtype)))
+        if cfg.cross_attn and cond is not None:
+            cx = cond.astype(x.dtype)
+            lc = cx.shape[1]
+            xq = jnp.einsum("bsd,de->bse", rms_norm(x, p["ln_x"]),
+                            p["xq"].astype(x.dtype)) \
+                .reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+            xk = jnp.einsum("bsd,de->bse", cx, p["xk"].astype(x.dtype)) \
+                .reshape(b, lc, hkv, dh).transpose(0, 2, 1, 3)
+            xv = jnp.einsum("bsd,de->bse", cx, p["xv"].astype(x.dtype)) \
+                .reshape(b, lc, hkv, dh).transpose(0, 2, 1, 3)
+            xo = attention(None, xq, xk, xv, "full", sla_cfg, causal=False)
+            xo = xo.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+            x = x + jnp.einsum("bse,ed->bsd", xo, p["xo"].astype(x.dtype))
+        xn2 = rms_norm(x, p["ln2"]) * (1 + sc2[:, None]) + sh2[:, None]
+        hmid = jnp.einsum("bsd,df->bsf", xn2, p["mlp_wi"].astype(x.dtype))
+        g, u = jnp.split(hmid, 2, axis=-1)
+        x = ctx.shard_residual(x + g2[:, None] * jnp.einsum(
+            "bsf,fd->bsd", jax.nn.silu(g) * u, p["mlp_wo"].astype(x.dtype)))
+        return x, None
+
+    x, _ = jax.lax.scan(ctx.maybe_remat(body), x, params["layers"])
+    x = rms_norm(x, params["ln_f"])
+    return jnp.einsum("bnd,dp->bnp", x, params["patch_out"].astype(x.dtype))
+
+
+def loss_fn(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
+            impl: str = "gather", sla_mode: Optional[str] = None):
+    """Flow-matching (rectified flow): x_t = (1-t) x0 + t noise; the model
+    predicts the velocity (noise - x0). batch: latents (B,N,P), noise,
+    t (B,), cond (optional)."""
+    x0 = batch["latents"]
+    noise = batch["noise"]
+    t = batch["t"]
+    xt = (1.0 - t[:, None, None]) * x0 + t[:, None, None] * noise
+    target = noise - x0
+    pred = forward(params, cfg, xt, t, batch.get("cond"), compute_dtype,
+                   impl, sla_mode)
+    return mse_loss(pred, target)

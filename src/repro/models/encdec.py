@@ -1,0 +1,228 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub per
+the assignment: input_specs provide precomputed frame embeddings).
+
+Encoder: bidirectional self-attention over audio-frame embeddings — SLA
+applies here (bidirectional is the paper's own DiT setting). Decoder:
+causal self-attention over text + cross-attention into encoder states.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ctx
+from repro.models.common import (attention, chunked_softmax_xent, dense_init,
+                                 embed_init, rms_norm, rope)
+
+
+def _block_init(rng, cfg: ArchConfig, cross: bool, dtype=jnp.float32):
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    r = list(jax.random.split(rng, 9))
+    p = {
+        "ln1": jnp.zeros((d,), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "wq": dense_init(r[0], d, h * dh, dtype),
+        "wk": dense_init(r[1], d, cfg.num_kv_heads * dh, dtype),
+        "wv": dense_init(r[2], d, cfg.num_kv_heads * dh, dtype),
+        "wo": dense_init(r[3], h * dh, d, dtype),
+        "sla_proj": jnp.zeros((h, dh, dh), dtype),
+        "mlp_wi": dense_init(r[4], d, 2 * cfg.d_ff, dtype),
+        "mlp_wo": dense_init(r[5], cfg.d_ff, d, dtype),
+    }
+    if cross:
+        p["ln_x"] = jnp.zeros((d,), dtype)
+        p["xq"] = dense_init(r[6], d, h * dh, dtype)
+        p["xk"] = dense_init(r[7], d, cfg.num_kv_heads * dh, dtype)
+        p["xv"] = dense_init(r[8], d, cfg.num_kv_heads * dh, dtype)
+        p["xo"] = dense_init(r[6], h * dh, d, dtype)
+    return p
+
+
+def init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    el, dl = cfg.encoder_layers, cfg.decoder_layers
+    r = jax.random.split(rng, 4)
+    enc = jax.vmap(lambda k: _block_init(k, cfg, False, dtype))(
+        jax.random.split(r[0], el))
+    dec = jax.vmap(lambda k: _block_init(k, cfg, True, dtype))(
+        jax.random.split(r[1], dl))
+    return {
+        "embed": embed_init(r[2], cfg.vocab_size, cfg.d_model, dtype),
+        "enc": enc,
+        "dec": dec,
+        "ln_enc": jnp.zeros((cfg.d_model,), dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _mha(p, pre, x, kv_x, cfg: ArchConfig, causal, kind, positions, impl):
+    b, s, d = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p[pre + "q"].astype(x.dtype)) \
+        .reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    sk = kv_x.shape[1]
+    k = jnp.einsum("bsd,de->bse", kv_x, p[pre + "k"].astype(x.dtype)) \
+        .reshape(b, sk, hkv, dh).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsd,de->bse", kv_x, p[pre + "v"].astype(x.dtype)) \
+        .reshape(b, sk, hkv, dh).transpose(0, 2, 1, 3)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, jnp.arange(sk, dtype=jnp.int32), cfg.rope_theta)
+    sla_params = {"proj": p["sla_proj"]} if kind == "sla" else None
+    o = attention(sla_params, q, k, v, kind, cfg.sla, causal=causal,
+                  impl=impl)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bse,ed->bsd", o, p[pre + "o"].astype(x.dtype))
+
+
+def _mlp(p, x):
+    hmid = jnp.einsum("bsd,df->bsf", x, p["mlp_wi"].astype(x.dtype))
+    g, u = jnp.split(hmid, 2, axis=-1)
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      p["mlp_wo"].astype(x.dtype))
+
+
+def encode(params, cfg: ArchConfig, audio_embeds,
+           compute_dtype=jnp.bfloat16, impl: str = "gather"):
+    """audio_embeds: (B, T, d) stub frame embeddings -> encoder states."""
+    x = audio_embeds.astype(compute_dtype)
+    b, t = x.shape[:2]
+    pos = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+    kind = "sla" if cfg.attention_kind == "sla" else "full"
+
+    def body(x, p):
+        x = ctx.shard_residual(
+            x + _mha(p, "w", rms_norm(x, p["ln1"]),
+                     rms_norm(x, p["ln1"]), cfg, False, kind, pos, impl))
+        x = ctx.shard_residual(x + _mlp(p, rms_norm(x, p["ln2"])))
+        return x, None
+
+    x, _ = jax.lax.scan(ctx.maybe_remat(body), x, params["enc"])
+    return rms_norm(x, params["ln_enc"])
+
+
+def decode(params, cfg: ArchConfig, tokens, enc_states,
+           compute_dtype=jnp.bfloat16, impl: str = "gather"):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    b, s = x.shape[:2]
+    pos = jnp.arange(s, dtype=jnp.int32)[None].repeat(b, 0)
+    enc = enc_states.astype(compute_dtype)
+
+    def body(x, p):
+        xn = rms_norm(x, p["ln1"])
+        x = ctx.shard_residual(
+            x + _mha(p, "w", xn, xn, cfg, True, "full", pos, impl))
+        x = ctx.shard_residual(
+            x + _mha(p, "x", rms_norm(x, p["ln_x"]), enc, cfg, False,
+                     "full", None, impl))
+        x = ctx.shard_residual(x + _mlp(p, rms_norm(x, p["ln2"])))
+        return x, None
+
+    x, _ = jax.lax.scan(ctx.maybe_remat(body), x, params["dec"])
+    return rms_norm(x, params["ln_f"])
+
+
+def loss_fn(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
+            impl: str = "gather"):
+    """batch: audio_embeds (B,T,d), tokens (B,S), targets (B,S)."""
+    enc = encode(params, cfg, batch["audio_embeds"], compute_dtype, impl)
+    x = decode(params, cfg, batch["tokens"], enc, compute_dtype, impl)
+    return chunked_softmax_xent(x, params["embed"], batch["targets"],
+                                batch.get("mask"))
+
+
+# --------------------------------------------------------------------------
+# serving: cross-KV precomputed at prefill; decoder self-cache grows
+# --------------------------------------------------------------------------
+def make_cache(cfg: ArchConfig, batch: int, enc_len: int,
+               dec_len: Optional[int] = None, dtype=jnp.bfloat16) -> dict:
+    dec_len = dec_len or max(enc_len // 8, 64)
+    dl, hkv, dh = cfg.decoder_layers, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "self_k": jnp.zeros((dl, batch, hkv, dec_len, dh), dtype),
+        "self_v": jnp.zeros((dl, batch, hkv, dec_len, dh), dtype),
+        "cross_k": jnp.zeros((dl, batch, hkv, enc_len, dh), dtype),
+        "cross_v": jnp.zeros((dl, batch, hkv, enc_len, dh), dtype),
+        "pos": jnp.int32(0),
+    }
+
+
+def prefill(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
+            impl: str = "gather", dec_len: Optional[int] = None):
+    """Encode audio + precompute per-layer cross K/V."""
+    enc = encode(params, cfg, batch["audio_embeds"], compute_dtype, impl)
+    b, t, d = enc.shape
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+
+    def xkv(p):
+        k = jnp.einsum("bsd,de->bse", enc, p["xk"].astype(enc.dtype)) \
+            .reshape(b, t, hkv, dh).transpose(0, 2, 1, 3)
+        v = jnp.einsum("bsd,de->bse", enc, p["xv"].astype(enc.dtype)) \
+            .reshape(b, t, hkv, dh).transpose(0, 2, 1, 3)
+        return k, v
+
+    ck, cv = jax.vmap(xkv)(params["dec"])
+    cache = make_cache(cfg, b, t, dec_len, dtype=compute_dtype)
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    return enc, cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache,
+                compute_dtype=jnp.bfloat16):
+    """One text-token decode: causal self-attn over the (small) text cache
+    + cross-attn over the (long) audio cross-KV."""
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(
+        compute_dtype)
+    b = x.shape[0]
+    pos = cache["pos"]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = dh**-0.5
+
+    def mha_cache(q, kc, vc, upto):
+        kk = jnp.repeat(kc, h // hkv, 1) if hkv != h else kc
+        vv = jnp.repeat(vc, h // hkv, 1) if hkv != h else vc
+        s = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                       kk.astype(jnp.float32)) * scale
+        if upto is not None:
+            ok = jnp.arange(kc.shape[-2])[None, None, None, :] <= upto
+            s = jnp.where(ok, s, -1e30)
+        return jnp.einsum("bhqs,bhsd->bhqd", jax.nn.softmax(s, -1),
+                          vv.astype(jnp.float32)).astype(q.dtype)
+
+    def body(x, layer):
+        p, sk, sv, ck, cv = layer
+        xn = rms_norm(x, p["ln1"])
+        q = jnp.einsum("bsd,de->bse", xn, p["wq"].astype(x.dtype)) \
+            .reshape(b, 1, h, dh).transpose(0, 2, 1, 3)
+        kn = jnp.einsum("bsd,de->bse", xn, p["wk"].astype(x.dtype)) \
+            .reshape(b, 1, hkv, dh).transpose(0, 2, 1, 3)
+        vn = jnp.einsum("bsd,de->bse", xn, p["wv"].astype(x.dtype)) \
+            .reshape(b, 1, hkv, dh).transpose(0, 2, 1, 3)
+        q = rope(q, jnp.full((b, 1), pos, jnp.int32), cfg.rope_theta)
+        kn = rope(kn, jnp.full((b, 1), pos, jnp.int32), cfg.rope_theta)
+        sk = jax.lax.dynamic_update_slice_in_dim(sk, kn.astype(sk.dtype),
+                                                 pos, axis=2)
+        sv = jax.lax.dynamic_update_slice_in_dim(sv, vn.astype(sv.dtype),
+                                                 pos, axis=2)
+        o = mha_cache(q, sk, sv, pos)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
+        x = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+        xq = jnp.einsum("bsd,de->bse", rms_norm(x, p["ln_x"]),
+                        p["xq"].astype(x.dtype)) \
+            .reshape(b, 1, h, dh).transpose(0, 2, 1, 3)
+        xo = mha_cache(xq, ck, cv, None)
+        xo = xo.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
+        x = x + jnp.einsum("bse,ed->bsd", xo, p["xo"].astype(x.dtype))
+        x = x + _mlp(p, rms_norm(x, p["ln2"]))
+        return x, (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x, (params["dec"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    new_cache = dict(cache, self_k=sk, self_v=sv, pos=pos + 1)
+    return logits, new_cache

@@ -1,0 +1,221 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* SLA-attention
+transformer block applied every `attn_every` layers (arXiv:2411.15242).
+
+The shared block has a single parameter set reused at every application
+point (zamba's signature trick), so the mamba stack scans in segments of
+`attn_every` layers with the shared block between segments.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ctx
+from repro.models import mamba2
+from repro.models.common import (attention, chunked_softmax_xent, dense_init,
+                                 embed_init, rms_norm, rope)
+
+
+def _shared_attn_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    r = list(jax.random.split(rng, 6))
+    return {
+        "ln1": jnp.zeros((d,), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "wq": dense_init(r[0], d, h * dh, dtype),
+        "wk": dense_init(r[1], d, cfg.num_kv_heads * dh, dtype),
+        "wv": dense_init(r[2], d, cfg.num_kv_heads * dh, dtype),
+        "wo": dense_init(r[3], h * dh, d, dtype),
+        "sla_proj": jnp.zeros((h, dh, dh), dtype),
+        "mlp_wi": dense_init(r[4], d, 2 * cfg.d_ff, dtype),
+        "mlp_wo": dense_init(r[5], cfg.d_ff, d, dtype),
+    }
+
+
+def init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    r = jax.random.split(rng, cfg.num_layers + 2)
+    layers = jax.vmap(lambda k: mamba2.mamba_init(k, cfg, dtype))(
+        jnp.stack(r[: cfg.num_layers]))
+    return {
+        "embed": embed_init(r[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "shared_attn": _shared_attn_init(r[-2], cfg, dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _segments(cfg: ArchConfig):
+    """Static split of the mamba stack into attn_every-sized segments."""
+    l, every = cfg.num_layers, cfg.attn_every or cfg.num_layers
+    sizes, start = [], 0
+    while start < l:
+        sizes.append(min(every, l - start))
+        start += every
+    return sizes
+
+
+def _shared_block(p, x, cfg: ArchConfig, positions, impl,
+                  kv_cache=None, pos=None):
+    """SLA-attention transformer block (single shared param set)."""
+    b, s, d = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    xn = rms_norm(x, p["ln1"])
+    q = jnp.einsum("bsd,de->bse", xn, p["wq"].astype(x.dtype)) \
+        .reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bsd,de->bse", xn, p["wk"].astype(x.dtype)) \
+        .reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsd,de->bse", xn, p["wv"].astype(x.dtype)) \
+        .reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if kv_cache is not None:
+        kc, vc = kv_cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                                 pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                                 pos, axis=2)
+        new_cache = (kc, vc)
+        smax = kc.shape[-2]
+        kk = jnp.repeat(kc, h // hkv, 1) if hkv != h else kc
+        vv = jnp.repeat(vc, h // hkv, 1) if hkv != h else vc
+        sc = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * (dh**-0.5)
+        ok = jnp.arange(smax)[None, None, None, :] <= pos
+        sc = jnp.where(ok, sc, -1e30)
+        o = jnp.einsum("bhqs,bhsd->bhqd", jax.nn.softmax(sc, -1),
+                       vv.astype(jnp.float32)).astype(x.dtype)
+    else:
+        o = attention({"proj": p["sla_proj"]}, q, k, v, "sla", cfg.sla,
+                      causal=True, impl=impl)
+        new_cache = (k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    x = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+    hmid = jnp.einsum("bsd,df->bsf", rms_norm(x, p["ln2"]),
+                      p["mlp_wi"].astype(x.dtype))
+    g, u = jnp.split(hmid, 2, axis=-1)
+    x = x + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                       p["mlp_wo"].astype(x.dtype))
+    return x, new_cache
+
+
+def forward(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
+            impl: str = "gather", return_cache: bool = False):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    sizes = _segments(cfg)
+    ssm_states, conv_tails, attn_kvs = [], [], []
+    start = 0
+    for seg in sizes:
+        seg_params = jax.tree.map(
+            lambda t: jax.lax.slice_in_dim(t, start, start + seg, axis=0),
+            params["layers"])
+
+        def body(x, p):
+            out, (st, tail) = mamba2.mamba_apply(
+                p, rms_norm(x, p["ln"]), cfg)
+            return ctx.shard_residual(x + out), (st, tail)
+
+        x, (sts, tails) = jax.lax.scan(ctx.maybe_remat(body), x, seg_params)
+        ssm_states.append(sts)
+        conv_tails.append(tails)
+        x, kv = _shared_block(params["shared_attn"], x, cfg, positions,
+                              impl)
+        attn_kvs.append(kv)
+        start += seg
+    x = rms_norm(x, params["ln_f"])
+    if return_cache:
+        cache = {
+            "ssm": jnp.concatenate(ssm_states, 0),
+            "conv": jnp.concatenate(conv_tails, 0),
+            "attn_k": jnp.stack([kv[0] for kv in attn_kvs], 0),
+            "attn_v": jnp.stack([kv[1] for kv in attn_kvs], 0),
+        }
+        return x, jnp.float32(0.0), cache
+    return x, jnp.float32(0.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
+            impl: str = "gather"):
+    x, _ = forward(params, cfg, batch["tokens"], compute_dtype, impl)
+    return chunked_softmax_xent(x, params["embed"], batch["targets"],
+                                batch.get("mask"))
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    l = cfg.num_layers
+    nseg = len(_segments(cfg))
+    d_conv = h * pd + 2 * n
+    return {
+        "ssm": jnp.zeros((l, batch, h, n, pd), jnp.float32),
+        "conv": jnp.zeros((l, batch, cfg.conv_kernel - 1, d_conv), dtype),
+        "attn_k": jnp.zeros((nseg, batch, cfg.num_kv_heads, max_len,
+                             cfg.head_dim), dtype),
+        "attn_v": jnp.zeros((nseg, batch, cfg.num_kv_heads, max_len,
+                             cfg.head_dim), dtype),
+        "pos": jnp.int32(0),
+    }
+
+
+def prefill(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
+            impl: str = "gather"):
+    x, _, cache = forward(params, cfg, tokens, compute_dtype, impl,
+                          return_cache=True)
+    cache["pos"] = jnp.int32(tokens.shape[1])
+    return x[:, -1], cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache,
+                compute_dtype=jnp.bfloat16):
+    """Decode: O(1) mamba state updates + O(S) shared-attention cache reads
+    (zamba2's cost profile for the long_500k cell)."""
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(
+        compute_dtype)
+    b = x.shape[0]
+    pos = cache["pos"]
+    sizes = _segments(cfg)
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    start = 0
+    for si, seg in enumerate(sizes):
+        seg_params = jax.tree.map(
+            lambda t: jax.lax.slice_in_dim(t, start, start + seg, axis=0),
+            params["layers"])
+        seg_ssm = jax.lax.slice_in_dim(cache["ssm"], start, start + seg,
+                                       axis=0)
+        seg_conv = jax.lax.slice_in_dim(cache["conv"], start, start + seg,
+                                        axis=0)
+
+        def body(x, layer):
+            p, st, tail = layer
+            out, (st2, tail2) = mamba2.mamba_apply(
+                p, rms_norm(x, p["ln"]), cfg, conv_tail=tail, state=st)
+            return x + out, (st2, tail2)
+
+        x, (sts, tails) = jax.lax.scan(body, x,
+                                       (seg_params, seg_ssm, seg_conv))
+        new_ssm.append(sts)
+        new_conv.append(tails)
+        x, (kc, vc) = _shared_block(
+            params["shared_attn"], x, cfg,
+            jnp.full((b, 1), pos, jnp.int32), "gather",
+            kv_cache=(cache["attn_k"][si], cache["attn_v"][si]), pos=pos)
+        new_k.append(kc)
+        new_v.append(vc)
+        start += seg
+    x = rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    new_cache = {
+        "ssm": jnp.concatenate(new_ssm, 0),
+        "conv": jnp.concatenate(new_conv, 0),
+        "attn_k": jnp.stack(new_k, 0),
+        "attn_v": jnp.stack(new_v, 0),
+        "pos": pos + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,150 @@
+"""Chunked decayed linear attention — the compute core of RWKV6 and Mamba2.
+
+Two execution forms, both O(N) in sequence length:
+  * `*_scan`    — naive per-token recurrence (oracle + decode step).
+  * `*_chunked` — chunk-parallel form: inter-chunk state carried by a short
+    scan, intra-chunk computed with matmuls (MXU-friendly).
+
+Numerics: decay handled in log space. For *vector* (per-channel) decay
+(RWKV6) the intra-chunk pair weights use the pairwise form
+exp(cum_t - cum_s) with s <= t, whose exponent is always <= 0 — unlike the
+factored q*exp(cum) / k*exp(-cum) form, it cannot overflow. For *scalar*
+(per-head) decay (Mamba2/SSD) the pair weights collapse to a (C, C)
+matrix and the intra part is a plain masked matmul.
+
+Shapes: q, k, logw: (B, H, N, Dk); v: (B, H, N, Dv); state: (B, H, Dk, Dv).
+RWKV convention ("exclusive + bonus"): o_t = q_t (S_{t-1} + (u?k_t)?v_t),
+S_t = exp(logw_t)?S_{t-1} + k_t?v_t.  Mamba convention ("inclusive"):
+S_t = exp(loga_t) S_{t-1} + k_t?v_t, o_t = q_t S_t.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def decayed_la_scan(q, k, v, logw, u: Optional[jax.Array] = None,
+                    inclusive: bool = False, s0=None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Naive recurrence (oracle / decode). Returns (o, final_state)."""
+    b, h, n, dk = q.shape
+    dv = v.shape[-1]
+    s0 = jnp.zeros((b, h, dk, dv), jnp.float32) if s0 is None else s0
+
+    def step(s, inp):
+        qt, kt, vt, wt = inp  # (B, H, Dk) / (B, H, Dv) / (B, H, Dk)
+        kv = kt[..., :, None] * vt[..., None, :]
+        if inclusive:
+            s = jnp.exp(wt)[..., None] * s + kv
+            o = jnp.einsum("bhd,bhde->bhe", qt, s)
+        else:
+            att = s if u is None else s + (u[None, :, :] * kt)[..., None] \
+                * vt[..., None, :]
+            o = jnp.einsum("bhd,bhde->bhe", qt, att)
+            s = jnp.exp(wt)[..., None] * s + kv
+        return s, o
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 2, 0)
+               for t in (q, k, v, logw))
+    sT, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 2), sT
+
+
+def decayed_la_chunked(q, k, v, logw, u: Optional[jax.Array] = None,
+                       inclusive: bool = False, chunk: int = 64, s0=None,
+                       scalar_decay: bool = False
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-parallel decayed linear attention. Returns (o, final_state).
+
+    scalar_decay: logw is (B, H, N) per-head scalar (Mamba2) instead of
+    (B, H, N, Dk). Intra-chunk then uses masked-matmul (MXU) form.
+    chunk=64 default: swept {16, 32, 64, 128} on the rwkv6 x train_4k
+    cell -> {23.1, 16.0, 14.4, 16.9} s memory-bound time — C=64 balances
+    pair-tensor traffic (~C*Dk per token) against the N/C inter-chunk
+    state updates (EXPERIMENTS.md §Perf).
+    """
+    b, h, n, dk = q.shape
+    in_dtype = v.dtype if v.dtype in (jnp.bfloat16, jnp.float16) \
+        else jnp.float32
+    dv = v.shape[-1]
+    chunk = min(chunk, n)
+    while n % chunk:
+        chunk -= 1
+    nc = n // chunk
+    s0 = jnp.zeros((b, h, dk, dv), jnp.float32) if s0 is None else s0
+    f32 = lambda x: x.astype(jnp.float32)
+    qc = f32(q).reshape(b, h, nc, chunk, dk)
+    kc = f32(k).reshape(b, h, nc, chunk, dk)
+    vc = f32(v).reshape(b, h, nc, chunk, dv)
+    wshape = (b, h, nc, chunk) if scalar_decay else (b, h, nc, chunk, dk)
+    wc = f32(logw).reshape(wshape)
+
+    t_idx = jnp.arange(chunk)
+    if inclusive:
+        mask = t_idx[:, None] >= t_idx[None, :]  # s <= t
+    else:
+        mask = t_idx[:, None] > t_idx[None, :]  # s < t
+
+    # Rematerialize each chunk in the backward: without this the scan
+    # stacks every chunk's (C, C, Dk) pair tensor as a bwd residual —
+    # 53 TB/device of the rwkv6 x train_4k cell's traffic (§Perf).
+    @jax.checkpoint
+    def body(s, inp):
+        qi, ki, vi, wi = inp  # (B,H,C,Dk) etc
+        cum = jnp.cumsum(wi, axis=2)  # inclusive cumulative log decay
+        cum_q = cum if inclusive else cum - wi  # decay applied before o_t
+        if scalar_decay:
+            # inter-chunk: o += exp(cum_q) * (q S)
+            o = jnp.exp(cum_q)[..., None] * jnp.einsum(
+                "bhtd,bhde->bhte", qi, s)
+            pair = jnp.exp(jnp.clip(
+                cum_q[..., :, None] - cum[..., None, :], -60.0, 0.0))
+            a = jnp.einsum("bhtd,bhsd->bhts", qi, ki) * pair
+            a = jnp.where(mask, a, 0.0)
+            o = o + jnp.einsum("bhts,bhse->bhte", a, vi)
+            cC = cum[..., -1]
+            kd = ki * jnp.exp(cC[..., None, None] - cum[..., None])
+            s = jnp.exp(cC)[..., None, None] * s + jnp.einsum(
+                "bhsd,bhse->bhde", kd, vi)
+        else:
+            o = jnp.einsum("bhtd,bhde->bhte", qi * jnp.exp(cum_q), s)
+            # pairwise (t, s, d) weights — exponent <= 0, overflow-free.
+            # The (C, C) attention matrix is cast to in_dtype for the AV
+            # matmul: at C=16 this tensor family dominates HBM traffic of
+            # the whole RWKV6 stack (EXPERIMENTS.md §Perf, rwkv6 cell).
+            pair = jnp.exp(jnp.clip(
+                cum_q[..., :, None, :] - cum[..., None, :, :], -60.0, 0.0))
+            a = jnp.einsum("bhtd,bhsd,bhtsd->bhts", qi, ki, pair)
+            a = jnp.where(mask, a, 0.0).astype(in_dtype)
+            o = o + jnp.einsum("bhts,bhse->bhte", a,
+                               vi.astype(in_dtype)).astype(jnp.float32)
+            cC = cum[..., -1, :]
+            kd = ki * jnp.exp(cC[..., None, :] - cum)
+            s = jnp.exp(cC)[..., :, None] * s + jnp.einsum(
+                "bhsd,bhse->bhde", kd, vi)
+        if not inclusive and u is not None:
+            bonus = jnp.einsum("bhtd,bhtd->bht", qi, u[None, :, None, :] * ki)
+            o = o + bonus[..., None] * vi
+        return s, o
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (qc, kc, vc, wc))
+    sT, o = jax.lax.scan(body, s0, xs)
+    o = jnp.moveaxis(o, 0, 2).reshape(b, h, n, dv)
+    return o, sT
+
+
+def decayed_la_step(qt, kt, vt, wt, s, u: Optional[jax.Array] = None,
+                    inclusive: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. qt/kt/wt: (B,H,Dk); vt: (B,H,Dv); s: (B,H,Dk,Dv)."""
+    f32 = lambda x: x.astype(jnp.float32)
+    qt, kt, vt, wt = map(f32, (qt, kt, vt, wt))
+    kv = kt[..., :, None] * vt[..., None, :]
+    if inclusive:
+        s = jnp.exp(wt)[..., None] * s + kv
+        return jnp.einsum("bhd,bhde->bhe", qt, s), s
+    att = s if u is None else s + (u[None] * kt)[..., None] * vt[..., None, :]
+    o = jnp.einsum("bhd,bhde->bhe", qt, att)
+    s = jnp.exp(wt)[..., None] * s + kv
+    return o, s

@@ -1,0 +1,97 @@
+"""Mamba2 (SSD) block — scalar-per-head decay state-space model.
+
+Faithful structure: fused in_proj -> (z, x, B, C, dt), causal depthwise
+conv over (x, B, C), SSD recurrence h_t = a_t h_{t-1} + b_t x_t with
+a_t = exp(-softplus(dt_t + bias) * exp(A_log)), y_t = C_t h_t + D*x_t,
+gated by silu(z), RMS-normed, out-projected. The recurrence runs through
+the chunk-parallel masked-matmul path (linear_scan.decayed_la_chunked,
+scalar_decay=True).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init, rms_norm
+from repro.models.linear_scan import decayed_la_chunked, decayed_la_step
+
+
+def mamba_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h = cfg.ssm_heads
+    p_dim = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    d_inner = h * p_dim
+    r = list(jax.random.split(rng, 6))
+    proj_out = 2 * d_inner + 2 * n + h  # z, x, B, C, dt
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "in_proj": dense_init(r[0], d, proj_out, dtype),
+        "conv": (jax.random.normal(r[1], (cfg.conv_kernel,
+                                          d_inner + 2 * n), jnp.float32)
+                 * 0.1).astype(dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(r[2], d_inner, d, dtype),
+    }
+
+
+def _causal_conv(x, w, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C); tail: (B, K-1, C)."""
+    k = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+           if tail is None else tail.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(k))
+    return out, xp[:, -(k - 1):]
+
+
+def mamba_apply(p, x, cfg: ArchConfig,
+                conv_tail: Optional[jax.Array] = None,
+                state: Optional[jax.Array] = None):
+    """x: (B, S, d) -> (out, (new_state, new_conv_tail))."""
+    b, s, d = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_inner = h * pd
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xc, bb, cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n,
+                 2 * d_inner + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xc, bb, cc], axis=-1)
+    conv_out, tail = _causal_conv(conv_in, p["conv"], conv_tail)
+    conv_out = jax.nn.silu(conv_out)
+    xc, bb, cc = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt_soft = jax.nn.softplus(dt.astype(jnp.float32)
+                              + p["dt_bias"][None, None, :])  # (B,S,H)
+    loga = -dt_soft * jnp.exp(p["a_log"])[None, None, :]
+    heads = lambda t, dim: t.reshape(b, s, h, dim).transpose(0, 2, 1, 3)
+    xh = heads(xc, pd)  # v-role: (B, H, S, P)
+    # B, C shared across heads (single group)
+    bh = jnp.broadcast_to(bb[:, None], (b, h, s, n))
+    ch = jnp.broadcast_to(cc[:, None], (b, h, s, n))
+    # fold dt into the input (standard SSD discretization)
+    xin = xh * dt_soft.transpose(0, 2, 1)[..., None].astype(xh.dtype)
+    la = loga.transpose(0, 2, 1)  # (B, H, S)
+    if s == 1 and state is not None:
+        y, new_state = decayed_la_step(
+            ch[:, :, 0], bh[:, :, 0], xin[:, :, 0],
+            jnp.broadcast_to(la[..., 0:1], ch[:, :, 0].shape),
+            state, inclusive=True)
+        y = y[:, :, None, :]
+    else:
+        y, new_state = decayed_la_chunked(ch, bh, xin, la, inclusive=True,
+                                          scalar_decay=True, s0=state,
+                                          chunk=64)
+    y = y + p["d_skip"][None, :, None, None] * xh.astype(jnp.float32)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["out_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, (new_state, tail)

@@ -1,0 +1,98 @@
+"""Token-choice top-k Mixture-of-Experts FFN (scatter/gather dispatch).
+
+Sort-free dispatch via cumsum position-in-expert + scatter-add into a
+(E * capacity, d) buffer — no (tokens, E, capacity) one-hot is ever
+materialized (that tensor is ~TBs at assigned shapes). Experts shard over
+the "model" mesh axis (EP); the scatter/gather become all-to-alls under
+GSPMD.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ctx
+from repro.models.common import dense_init
+
+
+def moe_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    r = jax.random.split(rng, 5)
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    p = {
+        "router": dense_init(r[0], d, e, dtype),
+        "wi": dense_init(r[1], d, 2 * ff, dtype).reshape(1, d, 2 * ff)
+        * jnp.ones((e, 1, 1), dtype),
+        "wo": dense_init(r[2], ff, d, dtype).reshape(1, ff, d)
+        * jnp.ones((e, 1, 1), dtype),
+    }
+    # break expert symmetry
+    p["wi"] = p["wi"] + 0.02 * jax.random.normal(r[3], p["wi"].shape, dtype)
+    if cfg.moe_shared_expert:
+        p["shared_wi"] = dense_init(r[3], d, 2 * ff, dtype)
+        p["shared_wo"] = dense_init(r[4], ff, d, dtype)
+    return p
+
+
+def _swiglu(x, wi, wo):
+    h = jnp.einsum("...d,df->...f", x, wi)
+    g, u = jnp.split(h, 2, axis=-1)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, wo)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: ArchConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+    cap = max(1, int(cfg.capacity_factor * t * k / e))
+
+    logits = jnp.einsum("td,de->te", tokens.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(eidx[:, 0], e, dtype=jnp.float32), 0)
+    aux = e * jnp.sum(density * jnp.mean(probs, 0))
+
+    # position of each (token, slot) within its expert via one-hot cumsum
+    flat_e = eidx.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    my_pos = jnp.sum(pos * onehot, axis=-1)  # (T*k,)
+    keep = my_pos < cap
+    dst = jnp.where(keep, flat_e * cap + my_pos, e * cap)  # drop row = e*cap
+
+    sent = jnp.repeat(tokens, k, axis=0)  # (T*k, d)
+    # dropped slots point out of bounds; scatter mode="drop" discards
+    # them (no sentinel row — keeps E*cap divisible by the EP axis so the
+    # buffer can be expert-sharded at the scatter itself)
+    buf = jnp.zeros((e * cap, d), tokens.dtype)
+    buf = buf.at[dst].add(sent * keep[:, None].astype(tokens.dtype),
+                          mode="drop")
+    eb = ctx.shard_expert_buf(buf.reshape(e, cap, d))
+    h = jnp.einsum("ecd,edf->ecf", eb,
+                   ctx.ep_gather(params["wi"].astype(eb.dtype)))
+    g, u = jnp.split(h, 2, axis=-1)
+    out_e = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                       ctx.ep_gather(params["wo"].astype(eb.dtype)))
+    out_buf = ctx.shard_expert_buf(out_e).reshape(e * cap, d)
+
+    # dropped slots read 0 via fill-mode gather
+    recv = jnp.take(out_buf, dst, axis=0, mode="fill", fill_value=0)
+    w = (gate.reshape(-1) * keep.astype(jnp.float32)).astype(recv.dtype)
+    y = jnp.sum((recv * w[:, None]).reshape(t, k, d), axis=1)
+
+    if cfg.moe_shared_expert:
+        y = y + _swiglu(tokens,
+                        ctx.fsdp_gather(params["shared_wi"]
+                                        .astype(tokens.dtype), "col"),
+                        ctx.fsdp_gather(params["shared_wo"]
+                                        .astype(tokens.dtype), "row"))
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,200 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent decay.
+
+Faithful to arXiv:2404.05892 in structure: token-shift mixing, WKV6
+recurrence with per-channel data-dependent decay w_t = -exp(lora(x)), bonus
+u, per-head group norm, and squared-ReLU channel mix. Deviations (noted in
+DESIGN.md): token-shift interpolation weights are static per channel (v6
+uses a small data-dependent LoRA for them), and the decay LoRA is rank-32.
+
+SLA is inapplicable here — no softmax attention exists (DESIGN.md
+§Arch-applicability); this arch is the linear-attention end of the paper's
+spectrum.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ctx
+from repro.models.common import dense_init, embed_init, rms_norm
+from repro.models.linear_scan import (decayed_la_chunked, decayed_la_step)
+
+LORA_RANK = 32
+
+
+def _layer_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h = cfg.ssm_heads or cfg.num_heads
+    dh = d // h
+    r = list(jax.random.split(rng, 12))
+    return {
+        "ln1": jnp.zeros((d,), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        # token-shift mixes for r, k, v, w, g
+        "mix": 0.5 * jnp.ones((5, d), dtype),
+        "wr": dense_init(r[0], d, d, dtype),
+        "wk": dense_init(r[1], d, d, dtype),
+        "wv": dense_init(r[2], d, d, dtype),
+        "wg": dense_init(r[3], d, d, dtype),
+        "wo": dense_init(r[4], d, d, dtype),
+        # decay: w = w0 + tanh(x A) B   (rank-32 lora)
+        "w0": -6.0 * jnp.ones((d,), dtype),
+        "wa": dense_init(r[5], d, LORA_RANK, dtype),
+        "wb": dense_init(r[6], LORA_RANK, d, dtype) * 0.1,
+        "u": jax.random.normal(r[7], (h, dh), jnp.float32).astype(dtype) * 0.1,
+        "gn": jnp.zeros((d,), dtype),  # per-head group norm scale
+        # channel mix
+        "cmix": 0.5 * jnp.ones((1, d), dtype),
+        "ck": dense_init(r[8], d, cfg.d_ff, dtype),
+        "cv": dense_init(r[9], cfg.d_ff, d, dtype),
+        "cr": dense_init(r[10], d, d, dtype),
+    }
+
+
+def init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    r = jax.random.split(rng, cfg.num_layers + 1)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(
+        jnp.stack(r[:-1]))
+    return {
+        "embed": embed_init(r[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / `last` at t=0). x: (B, S, D)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _time_mix(p, x, cfg: ArchConfig, prev=None, state=None):
+    """WKV6 block. x: (B, S, d). Returns (out, (new_state, x_last))."""
+    b, s, d = x.shape
+    h = cfg.ssm_heads or cfg.num_heads
+    dh = d // h
+    xprev = _shift(x, prev)
+    mix = p["mix"].astype(x.dtype)  # (5, d)
+    xr, xk, xv, xw, xg = (mix[i] * x + (1 - mix[i]) * xprev
+                          for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype)))
+    lora = jnp.einsum("bsr,re->bse",
+                      jnp.tanh(jnp.einsum("bsd,dr->bsr", xw,
+                                          p["wa"].astype(x.dtype))),
+                      p["wb"].astype(x.dtype))
+    logw = -jnp.exp(jnp.clip(
+        p["w0"].astype(jnp.float32) + lora.astype(jnp.float32), -8.0, 5.0))
+    heads = lambda t: t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    rh, kh, vh, wh = heads(r), heads(k), heads(v), heads(logw)
+    u = p["u"].astype(jnp.float32)
+    if s == 1 and state is not None:
+        o, new_state = decayed_la_step(rh[:, :, 0], kh[:, :, 0], vh[:, :, 0],
+                                       wh[:, :, 0], state, u=u)
+        o = o[:, :, None, :]
+    else:
+        o, new_state = decayed_la_chunked(rh, kh, vh, wh, u=u, s0=state)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    # per-head group norm
+    o = o.reshape(b, s, h, dh)
+    mu = jnp.mean(o, -1, keepdims=True)
+    var = jnp.var(o, -1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + 1e-5)
+    o = (o.reshape(b, s, d) * (1.0 + p["gn"].astype(jnp.float32)))
+    o = (o * g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", o, p["wo"].astype(x.dtype))
+    return out, (new_state, x[:, -1:])
+
+
+def _channel_mix(p, x, prev=None):
+    xprev = _shift(x, prev)
+    mix = p["cmix"].astype(x.dtype)[0]
+    xk = mix * x + (1 - mix) * xprev
+    k = jnp.einsum("bsd,df->bsf", xk, p["ck"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    rgate = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xk, p["cr"].astype(x.dtype)))
+    return rgate * jnp.einsum("bsf,fd->bsd", k, p["cv"].astype(x.dtype)), \
+        x[:, -1:]
+
+
+def forward(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
+            impl: str = "gather", return_cache: bool = False):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+
+    def body(x, p):
+        a, (st, xl1) = _time_mix(p, rms_norm(x, p["ln1"]), cfg)
+        x = ctx.shard_residual(x + a)
+        f, xl2 = _channel_mix(p, rms_norm(x, p["ln2"]))
+        x = ctx.shard_residual(x + f)
+        ys = (st, xl1, xl2) if return_cache else None
+        return x, ys
+
+    x, caches = jax.lax.scan(ctx.maybe_remat(body), x, params["layers"])
+    x = rms_norm(x, params["ln_f"])
+    if return_cache:
+        return x, jnp.float32(0.0), caches
+    return x, jnp.float32(0.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
+            impl: str = "gather"):
+    from repro.models.common import chunked_softmax_xent
+    x, _ = forward(params, cfg, batch["tokens"], compute_dtype)
+    return chunked_softmax_xent(x, params["embed"], batch["targets"],
+                                batch.get("mask"))
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    h = cfg.ssm_heads or cfg.num_heads
+    dh = d // h
+    l = cfg.num_layers
+    return {
+        "state": jnp.zeros((l, batch, h, dh, dh), jnp.float32),
+        "x1": jnp.zeros((l, batch, 1, d), dtype),
+        "x2": jnp.zeros((l, batch, 1, d), dtype),
+        "pos": jnp.int32(0),
+    }
+
+
+def prefill(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
+            impl: str = "gather"):
+    x, _, (st, x1, x2) = forward(params, cfg, tokens, compute_dtype,
+                                 return_cache=True)
+    cache = {"state": st, "x1": x1, "x2": x2,
+             "pos": jnp.int32(tokens.shape[1])}
+    return x[:, -1], cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache,
+                compute_dtype=jnp.bfloat16):
+    """O(1)-state decode: the 'KV cache of seq_len' is a constant-size
+    recurrent state (the SSM answer to the long_500k cell)."""
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(
+        compute_dtype)
+
+    def body(x, layer):
+        p, st, x1, x2 = layer
+        a, (st_new, x1n) = _time_mix(p, rms_norm(x, p["ln1"]), cfg,
+                                     prev=x1, state=st)
+        x = x + a
+        f, x2n = _channel_mix(p, rms_norm(x, p["ln2"]), prev=x2)
+        x = x + f
+        return x, (st_new, x1n, x2n)
+
+    x, (st, x1, x2) = jax.lax.scan(
+        body, x, (params["layers"], cache["state"], cache["x1"],
+                  cache["x2"]))
+    x = rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    return logits, {"state": st, "x1": x1, "x2": x2,
+                    "pos": cache["pos"] + 1}

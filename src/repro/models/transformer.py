@@ -1,0 +1,293 @@
+"""Decoder-only transformer LM (dense / MoE / VLM families).
+
+Layers are scanned (stacked params, single trace per layer kind) for
+compile-time sanity at 88-layer scale. Per-layer attention kind is a
+static-shaped int array consumed by lax.switch: 0=SLA, 1=full, 2=sliding
+window (gemma3 local layers). SLA layers carry the learnable Proj.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ctx
+from repro.models import moe as moe_lib
+from repro.models.common import (NEG_INF, attention, chunked_softmax_xent,
+                                 dense_init, embed_init, rms_norm, rope)
+
+KIND_SLA, KIND_FULL, KIND_SWA = 0, 1, 2
+
+
+def layer_kinds_list(cfg: ArchConfig) -> list:
+    """Static per-layer attention kinds."""
+    l = cfg.num_layers
+    if cfg.local_global_pattern:
+        p = cfg.local_global_pattern
+        return [KIND_SLA if (i + 1) % p == 0 else KIND_SWA for i in range(l)]
+    if cfg.attention_kind == "full":
+        return [KIND_FULL] * l
+    if cfg.attention_kind == "swa":
+        return [KIND_SWA] * l
+    return [KIND_SLA] * l
+
+
+def layer_kinds(cfg: ArchConfig) -> jnp.ndarray:
+    return jnp.asarray(layer_kinds_list(cfg), jnp.int32)
+
+
+def _layer_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    r = list(jax.random.split(rng, 8))
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "ln1": jnp.zeros((d,), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "wq": dense_init(r[0], d, h * dh, dtype),
+        "wk": dense_init(r[1], d, hkv * dh, dtype),
+        "wv": dense_init(r[2], d, hkv * dh, dtype),
+        "wo": dense_init(r[3], h * dh, d, dtype),
+        "sla_proj": jnp.zeros((h, dh, dh), dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.zeros((dh,), dtype)
+        p["knorm"] = jnp.zeros((dh,), dtype)
+    if cfg.num_experts:
+        p["moe"] = moe_lib.moe_init(r[4], cfg, dtype)
+    else:
+        p["mlp_wi"] = dense_init(r[5], d, 2 * cfg.d_ff, dtype)
+        p["mlp_wo"] = dense_init(r[6], cfg.d_ff, d, dtype)
+    return p
+
+
+def init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    r = jax.random.split(rng, cfg.num_layers + 2)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(
+        jnp.stack(r[: cfg.num_layers]))
+    params = {
+        "embed": embed_init(r[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(r[-2], cfg.vocab_size, cfg.d_model,
+                                       dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# attention sub-block
+# --------------------------------------------------------------------------
+def _qkv(p, x, cfg: ArchConfig, positions):
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x,
+                   ctx.fsdp_gather(p["wq"].astype(x.dtype), "col"))
+    k = jnp.einsum("bsd,de->bse", x,
+                   ctx.fsdp_gather(p["wk"].astype(x.dtype), "col"))
+    v = jnp.einsum("bsd,de->bse", x,
+                   ctx.fsdp_gather(p["wv"].astype(x.dtype), "col"))
+    q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"])
+        k = rms_norm(k, p["knorm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn(p, x, kind, cfg: ArchConfig, positions, impl) -> Tuple[jax.Array,
+                                                                 jax.Array,
+                                                                 jax.Array]:
+    """Returns (attn_out (B,S,d), k_cache, v_cache)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    sla_cfg = cfg.sla
+    if cfg.sliding_window:
+        sla_cfg = dataclasses.replace(sla_cfg, window=cfg.sliding_window)
+    sla_params = {"proj": p["sla_proj"]}
+
+    def do_sla(q, k, v):
+        return attention(sla_params, q, k, v, "sla", sla_cfg,
+                         causal=True, impl=impl)
+
+    def do_full(q, k, v):
+        return attention(None, q, k, v, "full", sla_cfg, causal=True)
+
+    def do_swa(q, k, v):
+        return attention(None, q, k, v, "swa", sla_cfg,
+                         window=cfg.local_window or cfg.sliding_window,
+                         causal=True)
+
+    # Only compile branches that actually occur (a dead full-attention
+    # branch would put N^2 temporaries into every lowered cell).
+    branches = [do_sla, do_full, do_swa]
+    used = sorted(set(layer_kinds_list(cfg)))
+    if len(used) == 1:
+        out = branches[used[0]](q, k, v)
+    else:
+        import numpy as np
+        remap = np.zeros((3,), np.int32)
+        for pos, orig in enumerate(used):
+            remap[orig] = pos
+        out = jax.lax.switch(jnp.asarray(remap)[kind],
+                             [branches[u] for u in used], q, k, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    out = jnp.einsum("bse,ed->bsd", out,
+                     ctx.fsdp_gather(p["wo"].astype(x.dtype), "row"))
+    return out, k, v
+
+
+def _ffn(p, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    if cfg.num_experts:
+        return moe_lib.moe_apply(p["moe"], x, cfg)
+    h = jnp.einsum("bsd,df->bsf", x,
+                   ctx.fsdp_gather(p["mlp_wi"].astype(x.dtype), "col"))
+    g, u = jnp.split(h, 2, axis=-1)
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                     ctx.fsdp_gather(p["mlp_wo"].astype(x.dtype), "row"))
+    return out, jnp.float32(0.0)
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+def forward(params, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
+            prefix_embeds: Optional[jax.Array] = None,
+            compute_dtype=jnp.bfloat16, impl: str = "gather",
+            return_cache: bool = False):
+    """Returns hidden states (B, S, d); optionally the per-layer KV cache.
+
+    VLM (cfg.frontend == "vision_stub"): prefix_embeds (B, P, d) are
+    prepended to the token embeddings (patch positions share the rope
+    position space, positions 0..P-1).
+    """
+    emb = params["embed"]
+    parts = []
+    if prefix_embeds is not None:
+        parts.append(prefix_embeds.astype(compute_dtype))
+    if tokens is not None:
+        parts.append(jnp.take(emb, tokens, axis=0).astype(compute_dtype))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    kinds = layer_kinds(cfg)
+
+    def body(x, layer):
+        p, kind = layer
+        a, k, v = _attn(p, rms_norm(x, p["ln1"]), kind, cfg, positions, impl)
+        # constraining the block OUTPUT (pre-residual-add) turns the TP
+        # boundary all-reduce into a reduce-scatter (half the wire bytes)
+        x = ctx.shard_residual(x + ctx.shard_residual(a))
+        f, aux = _ffn(p, rms_norm(x, p["ln2"]), cfg)
+        x = ctx.shard_residual(x + ctx.shard_residual(f))
+        ys = (aux, (k, v)) if return_cache else (aux, None)
+        return x, ys
+
+    x, (auxs, caches) = jax.lax.scan(
+        ctx.maybe_remat(body), x, (params["layers"], kinds))
+    x = rms_norm(x, params["ln_f"])
+    aux = jnp.sum(auxs)
+    if return_cache:
+        return x, aux, caches  # caches: (k (L,B,Hkv,S,Dh), v ...)
+    return x, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict,
+            compute_dtype=jnp.bfloat16, impl: str = "gather") -> jax.Array:
+    """Next-token cross-entropy (+ MoE aux). batch: tokens, targets[, mask,
+    patch_embeds]."""
+    x, aux = forward(params, cfg, batch["tokens"],
+                     prefix_embeds=batch.get("patch_embeds"),
+                     compute_dtype=compute_dtype, impl=impl)
+    npatch = 0
+    if batch.get("patch_embeds") is not None:
+        npatch = batch["patch_embeds"].shape[1]
+        x = x[:, npatch:]
+    table = params.get("unembed", params["embed"])
+    loss = chunked_softmax_xent(x, table, batch["targets"],
+                                batch.get("mask"))
+    return loss + 0.01 * aux
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + single-token decode over a static-size KV cache
+# --------------------------------------------------------------------------
+def prefill(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
+            impl: str = "gather"):
+    """Run the prompt; returns (last_hidden (B, d), cache dict)."""
+    x, _, (kc, vc) = forward(params, cfg, tokens,
+                             compute_dtype=compute_dtype, impl=impl,
+                             return_cache=True)
+    cache = {"k": kc, "v": vc, "pos": jnp.int32(tokens.shape[1])}
+    return x[:, -1], cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache,
+                compute_dtype=jnp.bfloat16):
+    """One decode step. token: (B,) int32; cache k/v: (L, B, Hkv, S, Dh);
+    cache['pos'] is a scalar (static-batch serving, aligned sequences).
+
+    The new KV is written at `pos` via dynamic_update_slice (O(1) write);
+    attention runs masked over the full static cache (O(S) per token —
+    exactly the decode_* cells' cost model).
+    """
+    emb = params["embed"]
+    x = jnp.take(emb, token[:, None], axis=0).astype(compute_dtype)
+    b = x.shape[0]
+    pos = cache["pos"]  # scalar int32
+    kinds = layer_kinds(cfg)
+    smax = cache["k"].shape[-2]
+
+    def body(x, layer):
+        p, kind, kc, vc = layer
+        xn = rms_norm(x, p["ln1"])
+        q, k_new, v_new = _qkv(p, xn, cfg,
+                               jnp.full((b, 1), pos, jnp.int32))
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, k_new.astype(kc.dtype), pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, v_new.astype(vc.dtype), pos, axis=2)
+        # GQA decode without materializing repeated KV: fold the head
+        # group into the query ("bkgd" layout) — scores are
+        # (B, Hkv, G, S) against the cache directly.
+        h, hkv = q.shape[1], kc.shape[1]
+        g = h // hkv
+        qg = q[:, :, 0, :].reshape(b, hkv, g, cfg.head_dim)
+        s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * (cfg.head_dim**-0.5)
+        idx = jnp.arange(smax)[None, None, None, :]
+        ok = idx <= pos
+
+        def swa_mask(s):
+            w = cfg.local_window or cfg.sliding_window
+            return jnp.where(idx > pos - w, s, NEG_INF)
+
+        s = jnp.where(ok, s, NEG_INF)
+        s = jax.lax.cond(kind == KIND_SWA, swa_mask, lambda s: s, s)
+        p_attn = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgs,bksd->bkgd", p_attn, vc.astype(jnp.float32))
+        o = o.astype(x.dtype).reshape(b, 1, h * cfg.head_dim)
+        x = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+        f, _ = _ffn(p, rms_norm(x, p["ln2"]), cfg)
+        return x + f, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(
+        body, x, (params["layers"], kinds, cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"])
+    table = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(jnp.float32),
+                        table.astype(jnp.float32))
+    new_cache = {"k": kc, "v": vc, "pos": pos + 1}
+    return logits, new_cache
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.num_layers, batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.int32(0)}

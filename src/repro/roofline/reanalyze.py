@@ -1,0 +1,50 @@
+"""Re-derive roofline terms from saved (gzipped) HLO texts — no
+recompilation. Used to iterate on the cost model and after hillclimb
+changes that only affect analysis.
+
+    PYTHONPATH=src python -m repro.roofline.reanalyze --dir artifacts/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import pathlib
+
+from repro.roofline.hlo_cost import analyze
+from repro.roofline.analysis import roofline_terms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    d = pathlib.Path(args.dir)
+    n = 0
+    for jf in sorted(d.glob("*.json")):
+        rec = json.loads(jf.read_text())
+        if rec.get("status") != "ok":
+            continue
+        hf = d / (jf.stem + ".hlo.txt.gz")
+        if not hf.exists():
+            continue
+        parsed = analyze(gzip.decompress(hf.read_bytes()).decode())
+        rec["cost"]["flops_per_device"] = parsed["flops"]
+        rec["cost"]["bytes_per_device"] = parsed["bytes"]
+        coll = {k.replace("coll_", ""): v for k, v in parsed.items()
+                if k.startswith("coll_")}
+        coll["total"] = parsed["collective_bytes"]
+        coll["count"] = rec["collectives"].get("count", 0)
+        rec["collectives"] = coll
+        rec["roofline"] = roofline_terms(parsed["flops"], parsed["bytes"],
+                                         parsed["collective_bytes"], 1)
+        mf = rec.get("model_flops_total", 0.0)
+        rec["useful_flops_ratio"] = (
+            mf / (parsed["flops"] * rec["chips"]) if parsed["flops"] else 0)
+        jf.write_text(json.dumps(rec, indent=2))
+        n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Shared pytest fixtures. NOTE: XLA_FLAGS / device-count overrides are
+deliberately NOT set here — smoke tests and benches must see 1 device;
+only launch/dryrun.py (and subprocess-based distributed tests) force
+fake device counts."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,60 @@
+"""Data pipeline: determinism, restartability, host-sharding."""
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import (DataConfig, latent_batch, make_iterator,
+                                 token_batch)
+
+SHAPE = ShapeConfig("t", 64, 4, "train")
+
+
+def test_deterministic_same_step():
+    cfg = get_arch("qwen3-1.7b").smoke()
+    a = token_batch(cfg, SHAPE, DataConfig(seed=1), step=5)
+    b = token_batch(cfg, SHAPE, DataConfig(seed=1), step=5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_different_steps_differ():
+    cfg = get_arch("qwen3-1.7b").smoke()
+    a = token_batch(cfg, SHAPE, DataConfig(seed=1), step=5)
+    b = token_batch(cfg, SHAPE, DataConfig(seed=1), step=6)
+    assert (a["tokens"] != b["tokens"]).any()
+
+
+def test_hosts_produce_disjoint_streams():
+    cfg = get_arch("qwen3-1.7b").smoke()
+    a = token_batch(cfg, SHAPE, DataConfig(seed=1, num_hosts=2, host_id=0),
+                    step=3)
+    b = token_batch(cfg, SHAPE, DataConfig(seed=1, num_hosts=2, host_id=1),
+                    step=3)
+    assert a["tokens"].shape[0] == SHAPE.global_batch // 2
+    assert (a["tokens"] != b["tokens"]).any()
+
+
+def test_restart_mid_stream_is_bit_identical():
+    """Resume-from-step-k yields the same batches as never stopping —
+    the property that makes checkpoint-restart deterministic."""
+    cfg = get_arch("qwen3-1.7b").smoke()
+    it = make_iterator(cfg, SHAPE, DataConfig(seed=2))
+    batches = [next(it) for _ in range(6)]
+    it2 = make_iterator(cfg, SHAPE, DataConfig(seed=2), start_step=4)
+    resumed = next(it2)
+    np.testing.assert_array_equal(batches[4]["tokens"], resumed["tokens"])
+
+
+def test_targets_are_next_tokens():
+    cfg = get_arch("qwen3-1.7b").smoke()
+    b = token_batch(cfg, SHAPE, DataConfig(seed=3), step=0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_latent_batch_structure():
+    cfg = get_arch("wan2_1_1_3b").smoke()
+    b = latent_batch(cfg, ShapeConfig("d", 64, 4, "train"),
+                     DataConfig(seed=0), 0)
+    assert b["latents"].shape == (4, 64, cfg.patch_dim)
+    assert b["noise"].shape == b["latents"].shape
+    assert ((b["t"] > 0) & (b["t"] < 1)).all()
+    assert "cond" in b  # wan has cross-attn

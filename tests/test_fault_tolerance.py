@@ -1,0 +1,62 @@
+"""Straggler watchdog, NaN guard, retry wrapper."""
+import jax.numpy as jnp
+import pytest
+
+from repro.distributed.fault_tolerance import (NaNGuard, StragglerWatchdog,
+                                               run_with_retries)
+
+
+def test_watchdog_flags_stragglers():
+    wd = StragglerWatchdog(threshold=2.0, warmup=3)
+    for _ in range(10):
+        assert not wd.record(1.0)
+    assert wd.record(5.0, host_id=7)  # 5x EMA -> straggler
+    assert wd.flagged[-1]["host"] == 7
+    # EMA not polluted by the straggler step
+    assert abs(wd.ema - 1.0) < 0.05
+
+
+def test_watchdog_adapts_to_regime_change():
+    wd = StragglerWatchdog(threshold=2.0, warmup=2, decay=0.5)
+    for _ in range(10):
+        wd.record(1.0)
+    for _ in range(10):
+        wd.record(1.5)  # slower but below threshold -> absorbed into EMA
+    assert not wd.record(2.0)
+
+
+def test_nan_guard_skips_then_raises():
+    g = NaNGuard(max_strikes=3)
+    assert g.check(jnp.float32(1.0))
+    assert not g.check(jnp.float32(float("nan")))
+    assert not g.check(jnp.float32(float("inf")))
+    with pytest.raises(FloatingPointError):
+        g.check(jnp.float32(float("nan")))
+
+
+def test_nan_guard_resets_on_healthy():
+    g = NaNGuard(max_strikes=2)
+    assert not g.check(jnp.float32(float("nan")))
+    assert g.check(jnp.float32(0.5))
+    assert not g.check(jnp.float32(float("nan")))  # strike count reset
+
+
+def test_run_with_retries_recovers():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient collective timeout")
+        return "ok"
+
+    assert run_with_retries(flaky, max_retries=3) == "ok"
+    assert calls["n"] == 3
+
+
+def test_run_with_retries_exhausts():
+    def always_fails():
+        raise RuntimeError("dead host")
+
+    with pytest.raises(RuntimeError):
+        run_with_retries(always_fails, max_retries=1)

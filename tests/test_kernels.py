@@ -1,0 +1,106 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps of the
+fused forward and both backward kernels against the pure-jnp oracle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SLAConfig, compute_mask
+from repro.core.phi import phi
+from repro.kernels.ops import sla_attention_core
+from repro.kernels.ref import sla_attention_core_reference
+
+
+def _inputs(seed, b, h, n, d, dtype, causal, block=16, kh=0.25, kl=0.25,
+            phi_kind="softmax"):
+    rs = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (jax.random.normal(r, (b, h, n, d), dtype) * 1.3 for r in rs)
+    cfg = SLAConfig(block_q=block, block_kv=block, kh_frac=kh, kl_frac=kl,
+                    causal=causal, phi=phi_kind)
+    qp = phi(q, cfg.phi).astype(dtype)
+    kp = phi(k, cfg.phi).astype(dtype)
+    mc = compute_mask(q, k, cfg)
+    return q, k, v, qp, kp, mc, cfg
+
+
+SWEEP = [
+    # (b, h, n, d, dtype, causal, block)
+    (1, 1, 64, 16, jnp.float32, False, 16),
+    (2, 2, 128, 32, jnp.float32, True, 16),
+    (1, 2, 128, 64, jnp.float32, False, 32),
+    (2, 1, 256, 16, jnp.bfloat16, False, 32),
+    (1, 2, 128, 32, jnp.bfloat16, True, 16),
+    (1, 4, 128, 8, jnp.float32, True, 32),  # tiny head dim
+]
+
+
+@pytest.mark.parametrize("b,h,n,d,dtype,causal,block", SWEEP)
+def test_fwd_matches_oracle(b, h, n, d, dtype, causal, block):
+    q, k, v, qp, kp, mc, cfg = _inputs(0, b, h, n, d, dtype, causal, block)
+    os_k, ol_k = sla_attention_core(q, k, v, qp, kp, mc, cfg)
+    os_r, ol_r = sla_attention_core_reference(q, k, v, qp, kp, mc, cfg)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(os_k), np.asarray(os_r),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(ol_k), np.asarray(ol_r),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,h,n,d,dtype,causal,block", SWEEP[:4])
+def test_bwd_matches_oracle(b, h, n, d, dtype, causal, block):
+    q, k, v, qp, kp, mc, cfg = _inputs(1, b, h, n, d, dtype, causal, block)
+
+    def loss_k(q, k, v, qp, kp):
+        a, b_ = sla_attention_core(q, k, v, qp, kp, mc, cfg)
+        return jnp.sum(jnp.sin(a.astype(jnp.float32))) + \
+            jnp.sum(jnp.cos(b_.astype(jnp.float32)))
+
+    def loss_r(q, k, v, qp, kp):
+        a, b_ = sla_attention_core_reference(q, k, v, qp, kp, mc, cfg)
+        return jnp.sum(jnp.sin(a.astype(jnp.float32))) + \
+            jnp.sum(jnp.cos(b_.astype(jnp.float32)))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2, 3, 4))(q, k, v, qp, kp)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2, 3, 4))(q, k, v, qp, kp)
+    tol = 5e-4 if dtype == jnp.float32 else 0.12
+    for name, a, b_ in zip("dq dk dv dqp dkp".split(), gk, gr):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b_, np.float32),
+            atol=tol, rtol=tol, err_msg=name)
+
+
+@pytest.mark.parametrize("phi_kind", ["softmax", "elu1", "relu"])
+def test_fwd_phi_variants(phi_kind):
+    q, k, v, qp, kp, mc, cfg = _inputs(2, 1, 2, 128, 16, jnp.float32,
+                                       False, 16, phi_kind=phi_kind)
+    os_k, ol_k = sla_attention_core(q, k, v, qp, kp, mc, cfg)
+    os_r, ol_r = sla_attention_core_reference(q, k, v, qp, kp, mc, cfg)
+    np.testing.assert_allclose(np.asarray(ol_k), np.asarray(ol_r),
+                               atol=5e-5, rtol=5e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), kh=st.sampled_from([0.1, 0.25, 0.5]),
+       kl=st.sampled_from([0.0, 0.25]), causal=st.booleans())
+def test_property_kernel_equals_oracle(seed, kh, kl, causal):
+    q, k, v, qp, kp, mc, cfg = _inputs(seed, 1, 2, 64, 16, jnp.float32,
+                                       causal, 16, kh, kl)
+    os_k, ol_k = sla_attention_core(q, k, v, qp, kp, mc, cfg)
+    os_r, ol_r = sla_attention_core_reference(q, k, v, qp, kp, mc, cfg)
+    np.testing.assert_allclose(np.asarray(os_k), np.asarray(os_r),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(ol_k), np.asarray(ol_r),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_kernel_under_jit_and_vmapless_batching():
+    q, k, v, qp, kp, mc, cfg = _inputs(3, 2, 3, 128, 32, jnp.float32,
+                                       False, 32)
+    f = jax.jit(lambda *a: sla_attention_core(*a, mc, cfg))
+    o1 = f(q, k, v, qp, kp)
+    o2 = sla_attention_core(q, k, v, qp, kp, mc, cfg)
+    np.testing.assert_allclose(np.asarray(o1[0]), np.asarray(o2[0]),
+                               atol=1e-6)

@@ -1,0 +1,128 @@
+"""Mask prediction/classification invariants (paper Eq. 2-3 + TPU
+column-capacity adaptation), including hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SLAConfig, build_lut, compute_mask, predict_pc
+from repro.core.masks import block_valid, build_col_lut, classify_blocks
+
+
+def _qk(seed, b=1, h=2, n=128, d=16):
+    r1, r2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(r1, (b, h, n, d)),
+            jax.random.normal(r2, (b, h, n, d)))
+
+
+def test_pc_is_row_stochastic():
+    q, k = _qk(0)
+    cfg = SLAConfig(block_q=16, block_kv=16)
+    pc = predict_pc(q, k, cfg)
+    np.testing.assert_allclose(np.asarray(pc.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_partition_three_way():
+    q, k = _qk(1)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25)
+    mc = np.asarray(compute_mask(q, k, cfg))
+    assert set(np.unique(mc)) <= {-1, 0, 1}
+    tn = mc.shape[-1]
+    crit = (mc == 1).sum(-1)
+    assert (crit == cfg.num_critical(tn)).all()
+
+
+def test_causal_invalid_blocks_are_skipped():
+    q, k = _qk(2)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.3, kl_frac=0.2,
+                    causal=True)
+    mc = np.asarray(compute_mask(q, k, cfg))
+    valid = np.asarray(block_valid(cfg, mc.shape[-2], mc.shape[-1]))
+    assert (mc[..., ~valid] == -1).all()
+    # diagonal always critical in causal mode
+    tm = mc.shape[-2]
+    for i in range(tm):
+        assert (mc[..., i, i] == 1).all()
+
+
+def test_window_constraint():
+    q, k = _qk(3)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.3, kl_frac=0.1,
+                    causal=True, window=32)
+    mc = np.asarray(compute_mask(q, k, cfg))
+    tm, tn = mc.shape[-2:]
+    for i in range(tm):
+        for j in range(tn):
+            dist = abs(i - j) * 16
+            if dist >= 32 + 16 or j > i:
+                assert (mc[..., i, j] == -1).all()
+
+
+def test_column_capacity_is_enforced():
+    q, k = _qk(4, n=256)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25,
+                    col_capacity_factor=1.5)
+    mc = np.asarray(compute_mask(q, k, cfg))
+    cap = cfg.col_capacity(mc.shape[-2], mc.shape[-1])
+    col_counts = (mc == 1).sum(-2)
+    assert col_counts.max() <= cap
+    # demoted blocks became marginal (0), never negligible
+    cfg_uncapped = cfg.replace(col_capacity_factor=None)
+    mc_u = np.asarray(compute_mask(q, k, cfg_uncapped))
+    demoted = (mc_u == 1) & (mc == 0)
+    assert ((mc[demoted] == 0).all())
+
+
+def test_row_lut_matches_mask():
+    q, k = _qk(5)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25)
+    mc = compute_mask(q, k, cfg)
+    tn = mc.shape[-1]
+    k_sel = cfg.num_critical(tn)
+    lut, counts = build_lut(mc, k_sel)
+    mc_np, lut_np, c_np = map(np.asarray, (mc, lut, counts))
+    b, h, tm, _ = mc_np.shape
+    for bi in range(b):
+        for hi in range(h):
+            for i in range(tm):
+                live = set(lut_np[bi, hi, i, : c_np[bi, hi, i]].tolist())
+                expect = set(np.nonzero(mc_np[bi, hi, i] == 1)[0].tolist())
+                assert live == expect
+
+
+def test_col_lut_matches_mask():
+    q, k = _qk(6)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25)
+    mc = compute_mask(q, k, cfg)
+    w = cfg.col_capacity(mc.shape[-2], mc.shape[-1])
+    lut, counts = build_col_lut(mc, w)
+    mc_np, lut_np, c_np = map(np.asarray, (mc, lut, counts))
+    b, h, tm, tn = mc_np.shape
+    for bi in range(b):
+        for hi in range(h):
+            for j in range(tn):
+                live = set(lut_np[bi, hi, j, : c_np[bi, hi, j]].tolist())
+                expect = set(np.nonzero(mc_np[bi, hi, :, j] == 1)[0]
+                             .tolist())
+                assert live == expect
+
+
+@settings(max_examples=15, deadline=None)
+@given(kh=st.floats(0.05, 0.9), kl=st.floats(0.0, 0.5),
+       causal=st.booleans(), seed=st.integers(0, 100))
+def test_property_counts_and_partition(kh, kl, causal, seed):
+    if kh + kl > 0.95:
+        kl = 0.95 - kh
+    q, k = _qk(seed, n=64, d=8)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=kh, kl_frac=kl,
+                    causal=causal)
+    mc = np.asarray(compute_mask(q, k, cfg))
+    tn = mc.shape[-1]
+    # every row has >= 1 critical and exactly num_critical on valid rows
+    assert ((mc == 1).sum(-1) >= 1).all()
+    if not causal:
+        assert ((mc == 1).sum(-1) == cfg.num_critical(tn)).all()
+    # column capacity always bounded
+    cap = cfg.col_capacity(mc.shape[-2], tn)
+    assert (mc == 1).sum(-2).max() <= cap

@@ -1,0 +1,146 @@
+"""Per-arch smoke tests: every assigned architecture instantiates a
+REDUCED same-family config and runs one forward/train step on CPU,
+asserting output shapes + no NaNs; decoder archs also run prefill +
+decode_step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, PAPER_ARCHS, get_arch,
+                           get_shape)
+from repro.models import registry
+
+SHAPE = get_shape("train_4k", smoke=True)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS + PAPER_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_arch(arch).smoke()
+    mdl = registry.get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = mdl.init(rng, cfg)
+    batch = registry.make_concrete_batch(rng, cfg, SHAPE)
+    loss, grads = jax.value_and_grad(
+        lambda p: mdl.loss_fn(p, cfg, batch))(params)
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    gn = sum(float(jnp.sum(jnp.abs(g)))
+             for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0, f"{arch}: bad grads"
+
+
+DECODER_ARCHS = [a for a in ASSIGNED_ARCHS
+                 if get_arch(a).family in ("dense", "moe", "vlm", "ssm",
+                                           "hybrid")]
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_arch(arch).smoke()
+    mdl = registry.get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = mdl.init(rng, cfg)
+    toks = jax.random.randint(rng, (2, 64), 0, cfg.vocab_size)
+    last, cache = mdl.prefill(params, cfg, toks)
+    assert bool(jnp.isfinite(last).all())
+    # grow kv caches so decode has room
+    def grow(path, leaf):
+        if hasattr(leaf, "ndim") and leaf.ndim == 5 and \
+                leaf.shape[-2] >= 8 and leaf.dtype != jnp.float32:
+            pad = jnp.zeros(leaf.shape[:3] + (8,) + leaf.shape[4:],
+                            leaf.dtype)
+            return jnp.concatenate([leaf, pad], axis=3)
+        return leaf
+    cache = jax.tree_util.tree_map_with_path(grow, cache)
+    token = jnp.array([1, 2], jnp.int32)
+    logits, cache2 = mdl.decode_step(params, cfg, token, cache)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: decode NaN"
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+def test_whisper_prefill_decode():
+    cfg = get_arch("whisper-small").smoke()
+    from repro.models import encdec
+    rng = jax.random.PRNGKey(0)
+    params = encdec.init(rng, cfg)
+    batch = {"audio_embeds": jax.random.normal(rng, (2, 64, cfg.d_model))}
+    enc, cache = encdec.prefill(params, cfg, batch)
+    assert bool(jnp.isfinite(enc).all())
+    logits, cache2 = encdec.decode_step(params, cfg,
+                                        jnp.array([1, 2], jnp.int32),
+                                        cache)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_transformer_decode_consistent_with_forward():
+    """Greedy decode over a cache must reproduce teacher-forced logits.
+
+    attention_kind='full' so both paths are exact attention — the test
+    verifies the cache/position/rope plumbing (the SLA prefill path vs
+    exact decode differs by construction)."""
+    import dataclasses
+    from repro.models import transformer as tfm
+    cfg = dataclasses.replace(get_arch("qwen3-1.7b").smoke(),
+                              attention_kind="full")
+    rng = jax.random.PRNGKey(0)
+    params = tfm.init(rng, cfg)
+    toks = jax.random.randint(rng, (1, 48), 0, cfg.vocab_size)
+    # full forward logits at position 32 given the prefix
+    x, _ = tfm.forward(params, cfg, toks, compute_dtype=jnp.float32)
+    logits_fwd = jnp.einsum("d,vd->v", x[0, 31].astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+    # prefill 32 then decode token 32
+    last, cache = tfm.prefill(params, cfg, toks[:, :32],
+                              compute_dtype=jnp.float32)
+    cache = jax.tree_util.tree_map_with_path(
+        lambda p, l: (jnp.concatenate(
+            [l, jnp.zeros(l.shape[:3] + (8,) + l.shape[4:], l.dtype)], 3)
+            if hasattr(l, "ndim") and l.ndim == 5 else l), cache)
+    logits_dec, _ = tfm.decode_step(params, cfg, toks[:, 32],
+                                    cache, compute_dtype=jnp.float32)
+    # the decode path recomputes position 32's logits
+    np.testing.assert_allclose(np.asarray(logits_dec[0]),
+                               np.asarray(jnp.einsum(
+                                   "d,vd->v",
+                                   x[0, 32].astype(jnp.float32),
+                                   params["embed"].astype(jnp.float32))),
+                               atol=2e-2, rtol=2e-2)
+    del logits_fwd
+
+
+def test_rwkv_decode_consistent_with_forward():
+    from repro.models import rwkv6
+    cfg = get_arch("rwkv6-7b").smoke()
+    rng = jax.random.PRNGKey(0)
+    params = rwkv6.init(rng, cfg)
+    toks = jax.random.randint(rng, (1, 17), 0, cfg.vocab_size)
+    x, _ = rwkv6.forward(params, cfg, toks, compute_dtype=jnp.float32)
+    ref_logits = jnp.einsum("d,vd->v", x[0, -1].astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+    last, cache = rwkv6.prefill(params, cfg, toks[:, :-1],
+                                compute_dtype=jnp.float32)
+    logits, _ = rwkv6.decode_step(params, cfg, toks[:, -1], cache,
+                                  compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(logits[0]),
+                               np.asarray(ref_logits), atol=2e-2,
+                               rtol=2e-2)
+
+
+def test_dit_forward_and_loss():
+    from repro.models import dit
+    cfg = get_arch("wan2_1_1_3b").smoke()
+    rng = jax.random.PRNGKey(0)
+    params = dit.init(rng, cfg)
+    b, n = 2, 64
+    batch = {
+        "latents": jax.random.normal(rng, (b, n, cfg.patch_dim)),
+        "noise": jax.random.normal(jax.random.PRNGKey(1),
+                                   (b, n, cfg.patch_dim)),
+        "t": jnp.array([0.3, 0.7]),
+        "cond": jax.random.normal(rng, (b, cfg.cond_len, cfg.d_model)),
+    }
+    for mode in (None, "sparse_only", "linear_only", "l_plus_s"):
+        loss = dit.loss_fn(params, cfg, batch, sla_mode=mode)
+        assert bool(jnp.isfinite(loss)), f"dit mode={mode}"

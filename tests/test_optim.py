@@ -1,0 +1,92 @@
+"""Optimizer + gradient-compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw
+from repro.optim.compression import (dequantize, ef_compress_decompress,
+                                     ef_init, quantize)
+
+
+def test_adamw_converges_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, total_steps=200,
+                            warmup_steps=5, schedule="constant")
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params)
+
+    @jax.jit
+    def step(p, s):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2))(p)
+        p, s, _ = adamw.update(p, g, s, cfg)
+        return p, s, loss
+
+    for _ in range(200):
+        params, state, loss = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.asarray(target), atol=1e-2)
+
+
+def test_grad_clip_bounds_update():
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=1.0, warmup_steps=0,
+                            schedule="constant", weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(params)
+    huge = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = adamw.update(params, huge, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = jax.random.PRNGKey(0)
+    g = jax.random.normal(rng, (1000,)) * 3.0
+    codes, scale = quantize(g)
+    ghat = dequantize(codes, scale, g.shape)
+    err = jnp.abs(ghat - g)
+    # int8 block quantization: error <= scale/2 per block
+    assert float(err.max()) <= float(scale.max()) * 0.51 + 1e-6
+
+
+def test_error_feedback_accumulates_residual():
+    rng = jax.random.PRNGKey(1)
+    grads = {"w": jax.random.normal(rng, (256,)) * 0.01}
+    err = ef_init(grads)
+    ghat, err2, stats = ef_compress_decompress(grads, err)
+    # wire format is ~3.88x smaller than f32 at this tiny size (scale
+    # overhead amortizes to ~3.97x on real layers)
+    assert stats["compression_x"] > 3.8
+    # decompressed + residual == original (exactness of EF bookkeeping)
+    np.testing.assert_allclose(
+        np.asarray(ghat["w"] + err2["w"]), np.asarray(grads["w"]),
+        atol=1e-6)
+
+
+def test_ef_compression_preserves_convergence():
+    """EF-compressed AdamW still fits the quadratic (the convergence
+    property plain quantization loses)."""
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0, total_steps=300,
+                            warmup_steps=0, schedule="constant")
+    target = jnp.array([0.5, -1.5, 2.5, 0.1])
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(params)
+    err = ef_init(params)
+    for _ in range(300):
+        _, g = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        ghat, err, _ = ef_compress_decompress(g, err)
+        params, state, _ = adamw.update(params, ghat, state, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.asarray(target), atol=5e-2)
+
+
+def test_lr_schedule_shapes():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            schedule="cosine")
+    lrs = [float(adamw.schedule_lr(cfg, jnp.int32(s)))
+           for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == 0.5
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] < 1.0
+    assert lrs[4] < 1e-6

@@ -1,0 +1,138 @@
+"""SLA algorithm invariants: the decomposition limits, execution-path
+agreement, baselines, and differentiability."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SLAConfig, compute_mask, sla_attention, sla_init
+from repro.core import reference as ref
+from repro.core.block_sparse_xla import sla_forward_gather
+from repro.core.phi import PHI_KINDS, phi
+
+
+def _qkv(seed=0, b=2, h=2, n=128, d=16, dtype=jnp.float32):
+    rs = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(r, (b, h, n, d), dtype) * 1.3
+                 for r in rs)
+
+
+def test_all_critical_equals_full_attention():
+    q, k, v = _qkv()
+    for causal in (False, True):
+        cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=1.0, kl_frac=0.0,
+                        causal=causal, col_capacity_factor=None)
+        mc = compute_mask(q, k, cfg)
+        o_s, _ = ref.sparse_component(q, k, v, mc, cfg)
+        full = ref.full_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(o_s), np.asarray(full),
+                                   atol=1e-5)
+
+
+def test_all_marginal_equals_full_linear():
+    q, k, v = _qkv(1)
+    cfg = SLAConfig(block_q=16, block_kv=16)
+    qp, kp = phi(q, "softmax"), phi(k, "softmax")
+    mc = jnp.zeros((2, 2, 8, 8), jnp.int8)
+    o_l, _, _ = ref.linear_component(qp, kp, v, mc, cfg)
+    fl = ref.full_linear(qp, kp, v)
+    np.testing.assert_allclose(np.asarray(o_l), np.asarray(fl), atol=1e-5)
+
+
+def test_gather_path_matches_reference():
+    q, k, v = _qkv(2)
+    for causal in (False, True):
+        cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25,
+                        kl_frac=0.25, causal=causal)
+        qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
+        mc = compute_mask(q, k, cfg)
+        og = sla_forward_gather(q, k, v, qp, kp, mc, cfg)
+        orf = ref.sla_forward_reference(q, k, v, qp, kp, mc, cfg)
+        np.testing.assert_allclose(np.asarray(og[0]), np.asarray(orf[0]),
+                                   atol=2e-5)
+        np.testing.assert_allclose(np.asarray(og[1]), np.asarray(orf[1]),
+                                   atol=2e-5)
+
+
+@pytest.mark.parametrize("mode", ["sla", "sparse_only", "linear_only",
+                                  "l_plus_s", "full"])
+def test_modes_finite_and_shaped(mode):
+    q, k, v = _qkv(3)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25,
+                    mode=mode)
+    params = sla_init(jax.random.PRNGKey(0), 2, 16, cfg)
+    out = sla_attention(params, q, k, v, cfg)
+    assert out.shape == q.shape
+    assert bool(jnp.isfinite(out).all())
+
+
+@pytest.mark.parametrize("kind", PHI_KINDS)
+def test_phi_nonnegative(kind):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8)) * 3
+    assert bool((phi(x, kind) >= 0).all())
+
+
+def test_gqa_kv_heads():
+    q, k, v = _qkv(4, h=4)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25)
+    params = sla_init(jax.random.PRNGKey(0), 4, 16, cfg)
+    out = sla_attention(params, q, k[:, :2], v[:, :2], cfg)
+    assert out.shape == q.shape
+    # kv broadcast must equal explicit repetition
+    out2 = sla_attention(params, q, jnp.repeat(k[:, :2], 2, 1),
+                         jnp.repeat(v[:, :2], 2, 1), cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               atol=1e-6)
+
+
+def test_gradients_flow_everywhere():
+    q, k, v = _qkv(5)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25)
+    params = sla_init(jax.random.PRNGKey(0), 2, 16, cfg)
+
+    def loss(params, q, k, v):
+        return jnp.sum(sla_attention(params, q, k, v, cfg) ** 2)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3))(params, q, k, v)
+    for g in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.isfinite(g).all())
+        assert float(jnp.abs(g).sum()) > 0
+
+
+def test_mask_is_gradient_stopped():
+    """TopK classification must not contribute gradients (paper: the mask
+    is a constant wrt the loss)."""
+    q, k, v = _qkv(6)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25)
+
+    def mask_sum(q):
+        return jnp.sum(compute_mask(q, k, cfg).astype(jnp.float32))
+
+    g = jax.grad(mask_sum)(q)
+    assert float(jnp.abs(g).sum()) == 0.0
+
+
+def test_fixed_budget_long_context_is_constant_cost():
+    cfg = SLAConfig(block_q=16, block_kv=16, fixed_budget=4)
+    assert cfg.num_critical(8) == 4
+    assert cfg.num_critical(1024) == 4  # O(N) sparse cost at long N
+    q, k, v = _qkv(7, n=256)
+    params = sla_init(jax.random.PRNGKey(0), 2, 16, cfg)
+    out = sla_attention(params, q, k, v, cfg)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_output_decomposition_eq6():
+    """O = O^s + Proj(O^l) exactly (Eq. 6)."""
+    q, k, v = _qkv(8)
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25,
+                    proj_init="identity")
+    params = sla_init(jax.random.PRNGKey(0), 2, 16, cfg)
+    qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
+    mc = compute_mask(q, k, cfg)
+    o_s, o_l = ref.sla_forward_reference(q, k, v, qp, kp, mc, cfg)
+    out = sla_attention(params, q, k, v, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o_s + o_l),
+                               atol=1e-5)
