@@ -1,20 +1,25 @@
 """Paper Fig. 6: attention kernel speed + end-to-end latency.
 
-No GPU/TPU in this container, so three complementary measurements:
+No GPU/TPU in this container, so four complementary measurements:
   (a) MEASURED wall time of compiled XLA full attention vs compiled XLA
       gather-SLA on CPU (same-backend, same-compiler comparison — the
       honest CPU analogue of the paper's kernel race);
   (b) DERIVED TPU-v5e roofline projection of both kernels at the Wan2.1
       point (compute + memory terms, 197 TFLOP/s & 819 GB/s);
   (c) the end-to-end attention-share model: with attention 44% of
-      step time (97s / 220s, Fig. 6b), speedup_e2e = 1 / (0.56 + 0.44/s).
+      step time (97s / 220s, Fig. 6b), speedup_e2e = 1 / (0.56 + 0.44/s);
+  (d) MEASURED plan-amortized speedup: planning (pool -> P_c -> top-k ->
+      LUTs) vs execution on a fixed plan, and the per-step time when one
+      plan is reused for K denoising steps
+      (SLAConfig.plan_refresh_interval; DESIGN.md "Plan/execute split").
 """
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import SLAConfig, compute_mask, sla_attention, sla_init
+from repro.core import (SLAConfig, compute_mask, plan_attention,
+                        sla_attention, sla_init)
 from repro.core.flops import full_attention_flops, sla_flops
 from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
 
@@ -41,10 +46,29 @@ def measured_cpu(n=2048, d=64, h=4):
     full_fn = jax.jit(lambda q, k, v: sla_attention(
         None, q, k, v, cfg.replace(mode="full")))
     sla_fn = jax.jit(lambda q, k, v: sla_attention(
-        params, q, k, v, cfg, impl="gather"))
+        params, q, k, v, cfg, backend="gather"))
     t_full = _time(full_fn, q, k, v)
     t_sla = _time(sla_fn, q, k, v)
     return t_full, t_sla
+
+
+def measured_plan_amortization(n=2048, d=64, h=4, refresh=(1, 4, 8)):
+    """Plan/execute split timings: planning cost vs execution cost, and
+    the amortized per-step attention time when one plan serves K steps."""
+    rng = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(r, (1, h, n, d), jnp.bfloat16)
+               for r in jax.random.split(rng, 3))
+    cfg = SLAConfig(block_q=64, block_kv=64, kh_frac=0.05, kl_frac=0.10)
+    params = sla_init(rng, h, d, cfg)
+
+    plan_fn = jax.jit(lambda q, k: plan_attention(q, k, cfg))
+    plan = jax.block_until_ready(plan_fn(q, k))
+    exec_fn = jax.jit(lambda q, k, v, plan: sla_attention(
+        params, q, k, v, cfg, backend="gather", plan=plan))
+    t_plan = _time(lambda q, k: plan_fn(q, k).mc, q, k)
+    t_exec = _time(exec_fn, q, k, v, plan)
+    per_step = {kk: t_plan / kk + t_exec for kk in refresh}
+    return t_plan, t_exec, per_step
 
 
 def tpu_projection():
@@ -81,6 +105,16 @@ def run():
     e2e = 1.0 / ((1 - att_share) + att_share / kernel_speedup)
     rows.append(("fig6.e2e_projected_speedup_x", 0, round(e2e, 2)))
     rows.append(("fig6.paper_e2e_speedup_x", 0, 2.2))
+    # (d) plan-amortized speedup across denoising steps
+    t_plan, t_exec, per_step = measured_plan_amortization()
+    rows.append(("fig6.plan_us", t_plan, round(t_plan, 1)))
+    rows.append(("fig6.execute_us", t_exec, round(t_exec, 1)))
+    base = per_step[1]
+    for kk, t in sorted(per_step.items()):
+        rows.append((f"fig6.plan_amortized.refresh_{kk}.step_us", t,
+                     round(t, 1)))
+        rows.append((f"fig6.plan_amortized.refresh_{kk}.speedup_x", t,
+                     round(base / t, 3)))
     return rows
 
 

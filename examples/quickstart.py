@@ -9,8 +9,8 @@ paper's operating point, agreement between the three execution paths
 import jax
 import jax.numpy as jnp
 
-from repro.core import (SLAConfig, compute_mask, sla_attention, sla_init,
-                        sparsity_stats, flops)
+from repro.core import (SLAConfig, compute_mask, plan_attention,
+                        sla_attention, sla_init, sparsity_stats, flops)
 from repro.core.phi import phi
 from repro.kernels.ops import sla_attention_core
 from repro.kernels.ref import sla_attention_core_reference
@@ -37,11 +37,15 @@ def main():
     print(f"attention FLOPs at Wan2.1 shape: full={acct['full']:.3e} "
           f"sla={acct['total']:.3e} reduction={acct['reduction_x']:.1f}x")
 
-    # 3. three execution paths agree
+    # 3. plan once, then all three execution backends agree on it
     params = sla_init(rng, H, D, cfg)
-    out_ref = sla_attention(params, q, k, v, cfg, impl="reference")
-    out_gather = sla_attention(params, q, k, v, cfg, impl="gather")
-    out_kernel = sla_attention(params, q, k, v, cfg, use_kernel=True)
+    plan = plan_attention(q, k, cfg)
+    out_ref = sla_attention(params, q, k, v, cfg, backend="reference",
+                            plan=plan)
+    out_gather = sla_attention(params, q, k, v, cfg, backend="gather",
+                               plan=plan)
+    out_kernel = sla_attention(params, q, k, v, cfg, backend="kernel",
+                               plan=plan)
     print("gather vs reference max|err|:",
           float(jnp.abs(out_gather - out_ref).max()))
     print("pallas vs reference max|err|:",

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 CI: fast tests first (fail fast on core numerics), then the
+# slow subprocess/distributed suites. Mirrors ROADMAP.md "Tier-1 verify".
+#
+#   scripts/ci.sh            # full split run
+#   scripts/ci.sh --fast     # fast tier only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# Never let a CI host with a half-configured accelerator hang test
+# collection; the suite is CPU-correct (Pallas runs in interpret mode).
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+PYTEST=(python -m pytest -q -p no:cacheprovider)
+
+echo "=== tier 1 / fast (core numerics, plans, kernels) ==="
+"${PYTEST[@]}" -x -m "not slow"
+
+if [[ "${1:-}" == "--fast" ]]; then
+    exit 0
+fi
+
+echo "=== tier 1 / slow (subprocess, distributed, end-to-end) ==="
+"${PYTEST[@]}" -m slow

@@ -1,7 +1,19 @@
-"""SLA core: the paper's primary contribution (sparse-linear attention)."""
+"""SLA core: the paper's primary contribution (sparse-linear attention).
+
+Organized as a plan/execute split (DESIGN.md):
+  masks.py    — P_c prediction + three-way block classification (Eq. 2-3)
+  plan.py     — SLAPlan pytree: LUTs + aggregation structure, built once
+  backends.py — execution backend registry (reference / gather / kernel)
+  sla.py      — the public `sla_attention` wrapper
+"""
+from repro.core.backends import (
+    available_backends,
+    execute,
+    get_backend,
+    register_backend,
+)
 from repro.core.config import SLAConfig
 from repro.core.masks import (
-    build_lut,
     classify_blocks,
     compute_mask,
     expand_mask,
@@ -10,12 +22,22 @@ from repro.core.masks import (
     sparsity_stats,
 )
 from repro.core.phi import PHI_KINDS, phi
+from repro.core.plan import (
+    SLAPlan,
+    build_col_lut,
+    build_lut,
+    plan_attention,
+    plan_from_mask,
+)
 from repro.core.sla import sla_attention, sla_init
 from repro.core import reference, flops
 
 __all__ = [
     "SLAConfig", "phi", "PHI_KINDS",
     "pool_blocks", "predict_pc", "classify_blocks", "compute_mask",
-    "build_lut", "expand_mask", "sparsity_stats",
+    "expand_mask", "sparsity_stats",
+    "SLAPlan", "plan_attention", "plan_from_mask",
+    "build_lut", "build_col_lut",
+    "execute", "get_backend", "register_backend", "available_backends",
     "sla_attention", "sla_init", "reference", "flops",
 ]

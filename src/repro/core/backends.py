@@ -1,0 +1,155 @@
+"""Attention execution backends: one registry, one `execute` interface.
+
+The plan/execute split (DESIGN.md): `core/plan.py` classifies blocks and
+builds LUTs once; this module runs the actual attention math given that
+plan. Three built-in backends, all returning (O^s, O^l):
+
+  reference  dense pure-jnp oracle (autodiff; O(N^2) compiled FLOPs —
+             validation only)
+  gather     LUT-gather XLA path whose compiled FLOPs equal the true
+             sparse cost (training / dry-run / any-backend production)
+  kernel     fused Pallas TPU kernels with custom_vjp (interpret mode
+             on CPU)
+
+`execute(plan, params, q, k, v, cfg, backend=...)` is the single entry
+point every model goes through — it owns mode dispatch ("sla" /
+"sparse_only" / "linear_only" / "l_plus_s" / "full"), the phi feature
+maps, GQA head broadcast, and the learned Proj merge (Eq. 6). New
+backends register with `@register_backend("name")`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SLAConfig
+from repro.core.phi import phi
+from repro.core.plan import SLAPlan, plan_attention
+from repro.core import reference as ref
+
+Params = Dict[str, jax.Array]
+# A backend maps (plan, q, k, v, qp, kp, cfg, scale) -> (O^s, O^l).
+BackendFn = Callable[..., Tuple[jax.Array, jax.Array]]
+
+_BACKENDS: Dict[str, BackendFn] = {}
+
+# Legacy spellings from the pre-registry stringly-typed API.
+_ALIASES = {"pallas": "kernel", "xla": "gather", "dense": "reference"}
+
+
+def register_backend(name: str) -> Callable[[BackendFn], BackendFn]:
+    """Decorator: register `fn` as the SLA execution backend `name`."""
+
+    def deco(fn: BackendFn) -> BackendFn:
+        _BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_backend(name: str) -> BackendFn:
+    key = _ALIASES.get(name, name)
+    try:
+        return _BACKENDS[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown SLA backend {name!r}; available: "
+            f"{sorted(_BACKENDS)}") from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+@register_backend("reference")
+def _reference_backend(plan, q, k, v, qp, kp, cfg, scale):
+    return ref.sla_forward_reference(q, k, v, qp, kp, plan.mc, cfg, scale)
+
+
+@register_backend("gather")
+def _gather_backend(plan, q, k, v, qp, kp, cfg, scale):
+    from repro.core.block_sparse_xla import sla_forward_gather
+    return sla_forward_gather(q, k, v, qp, kp, plan, cfg, scale)
+
+
+@register_backend("kernel")
+def _kernel_backend(plan, q, k, v, qp, kp, cfg, scale):
+    from repro.kernels import ops as kops
+    # interpret=True on CPU hosts; on a real TPU the kernel is compiled.
+    interpret = jax.default_backend() != "tpu"
+    return kops.sla_attention_core(q, k, v, qp, kp, plan, cfg,
+                                   scale=scale, interpret=interpret)
+
+
+def _repeat_kv(x: jax.Array, num_q_heads: int) -> jax.Array:
+    """GQA: broadcast KV heads to match Q heads. (B, Hkv, N, D) -> (B, H, N, D)."""
+    hkv = x.shape[1]
+    if hkv == num_q_heads:
+        return x
+    assert num_q_heads % hkv == 0
+    return jnp.repeat(x, num_q_heads // hkv, axis=1)
+
+
+def execute(
+    plan: Optional[SLAPlan],
+    params: Optional[Params],
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    cfg: SLAConfig,
+    scale: Optional[float] = None,
+    backend: str = "reference",
+) -> jax.Array:
+    """Run SLA attention under `cfg.mode` with the given execution backend.
+
+    q: (B, H, N, D); k, v: (B, Hkv, N, D) with Hkv | H. `plan` is the
+    precomputed SLAPlan for (q, k); pass None to plan inline (the
+    classic fused path — planning then costs on every call). Modes that
+    need no block structure ("full", "linear_only") ignore the plan.
+
+    Returns (B, H, N, D) in q.dtype.
+    """
+    in_dtype = q.dtype
+    h = q.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+
+    if cfg.mode == "full":
+        return ref.full_attention(q, k, v, cfg.causal, scale).astype(in_dtype)
+
+    if cfg.mode == "linear_only":
+        qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
+        o = ref.full_linear(qp, kp, v)
+        if params is not None:
+            o = jnp.einsum("bhnd,hde->bhne", o, params["proj"].astype(jnp.float32))
+        return o.astype(in_dtype)
+
+    if plan is None:
+        plan = plan_attention(q, k, cfg, scale)
+    else:
+        tm, tn = q.shape[2] // cfg.block_q, k.shape[2] // cfg.block_kv
+        if plan.mc.shape[-2:] != (tm, tn):
+            raise ValueError(
+                f"stale SLAPlan: plan is for {plan.mc.shape[-2:]} blocks "
+                f"but (q, k) need ({tm}, {tn}) — re-plan with "
+                f"plan_attention(q, k, cfg)")
+
+    if cfg.mode == "sparse_only":
+        o_s, _ = ref.sparse_component(q, k, v, plan.mc, cfg, scale)
+        return o_s.astype(in_dtype)
+
+    qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
+
+    if cfg.mode == "l_plus_s":
+        o_s, _ = ref.sparse_component(q, k, v, plan.mc, cfg, scale)
+        o_l = ref.full_linear(qp, kp, v)
+        return (o_s + o_l).astype(in_dtype)
+
+    if cfg.mode != "sla":
+        raise ValueError(f"unknown SLA mode {cfg.mode!r}")
+
+    o_s, o_l = get_backend(backend)(plan, q, k, v, qp, kp, cfg, scale)
+
+    proj = params["proj"].astype(jnp.float32)
+    o = o_s + jnp.einsum("bhnd,hde->bhne", o_l, proj)
+    return o.astype(in_dtype)

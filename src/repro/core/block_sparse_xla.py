@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import SLAConfig
-from repro.core.masks import build_lut
+from repro.core.plan import SLAPlan
 from repro.core.reference import _safe_div
 
 NEG_INF = -1e30
@@ -124,24 +124,25 @@ def sparse_component_gather(
 
 def sla_forward_gather(
     q: jax.Array, k: jax.Array, v: jax.Array,
-    qp: jax.Array, kp: jax.Array, mc: jax.Array, cfg: SLAConfig,
+    qp: jax.Array, kp: jax.Array, plan: SLAPlan, cfg: SLAConfig,
     scale: float | None = None, chunk: int = 8,
 ) -> Tuple[jax.Array, jax.Array]:
     """(O^s, O^l) with gather-based sparse part and matmul-aggregated
-    linear part. Shapes: (B, H, N, D)."""
+    linear part. The block structure (row LUT + marginal aggregation
+    matrix) comes from the precomputed `plan`. Shapes: (B, H, N, D)."""
     b, h, n, d = q.shape
-    tn = mc.shape[-1]
-    lut, cnts = build_lut(mc, cfg.num_critical(tn))
-    o_s, _ = sparse_component_gather(q, k, v, lut, cnts, cfg, scale, chunk)
+    tn = plan.num_kv_blocks
+    o_s, _ = sparse_component_gather(q, k, v, plan.lut, plan.counts, cfg,
+                                     scale, chunk)
 
     kpb = kp.astype(jnp.float32).reshape(b, h, tn, cfg.block_kv, d)
     vb = v.astype(jnp.float32).reshape(b, h, tn, cfg.block_kv, d)
     hb = jnp.einsum("bhnkd,bhnke->bhnde", kpb, vb)
     zb = jnp.sum(kpb, axis=-2)
-    a = (mc == 0).astype(jnp.float32)
+    a = plan.marginal
     hi = jnp.einsum("bhmn,bhnde->bhmde", a, hb)
     zi = jnp.einsum("bhmn,bhnd->bhmd", a, zb)
-    tm = mc.shape[-2]
+    tm = plan.num_q_blocks
     qpb = qp.astype(jnp.float32).reshape(b, h, tm, cfg.block_q, d)
     num = jnp.einsum("bhmqd,bhmde->bhmqe", qpb, hi)
     den = jnp.einsum("bhmqd,bhmd->bhmq", qpb, zi)[..., None]

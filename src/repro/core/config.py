@@ -38,6 +38,11 @@ class SLAConfig:
         *marginal* (still covered by the linear branch — graceful, not
         lossy-skip). Gives the dK/dV kernel a static column-LUT width.
         None disables (pure-paper mask; reference path only).
+      plan_refresh_interval: cross-timestep plan reuse (DESIGN.md
+        "Plan/execute split"): during diffusion sampling, recompute the
+        per-layer SLAPlan every this-many denoising steps and reuse it in
+        between (DiT block-sparsity patterns are stable across adjacent
+        timesteps). 1 = plan every step (exact paper behavior).
     """
 
     block_q: int = 64
@@ -51,6 +56,7 @@ class SLAConfig:
     fixed_budget: Optional[int] = None
     proj_init: str = "zeros"
     col_capacity_factor: Optional[float] = 2.0
+    plan_refresh_interval: int = 1
     window: int = 0  # sliding-window constraint in TOKENS (0 = none);
     #                  applied at block granularity: out-of-window blocks are
     #                  forced negligible (exact-zero weight under SWA).

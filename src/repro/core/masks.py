@@ -6,13 +6,11 @@ over (T_m x T_n) blocks and classifies every block into
   negligible (-1, bottom k_l%)     -> skipped,
   marginal (0, the rest)           -> linear attention.
 
-Also builds the static-shape lookup table (LUT) of critical block indices per
-query row used by the Pallas TPU kernel (scalar-prefetch index maps; see
-DESIGN.md "Hardware adaptation").
+The static-shape lookup tables (LUTs) consumed by the execution backends
+are built from M_c in `core/plan.py` (`plan_attention` / `SLAPlan`; see
+DESIGN.md "Plan/execute split") — this module is classification math only.
 """
 from __future__ import annotations
-
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -131,53 +129,6 @@ def compute_mask(
     w.r.t. the loss, matching the paper: TopK is not differentiated)."""
     pc = predict_pc(jax.lax.stop_gradient(q), jax.lax.stop_gradient(k), cfg, scale)
     return classify_blocks(pc, cfg)
-
-
-def build_lut(mc: jax.Array, k_sel: int) -> Tuple[jax.Array, jax.Array]:
-    """Static-shape critical-block lookup table for the TPU kernel.
-
-    Args:
-      mc: (..., Tm, Tn) int8 classification.
-      k_sel: static LUT width (>= max #critical per row; use
-        cfg.num_critical(Tn)).
-
-    Returns:
-      lut:    (..., Tm, k_sel) int32 — critical block indices, ascending,
-              padded with the row's first critical index (always valid).
-      counts: (..., Tm) int32 — number of live entries per row.
-    """
-    tn = mc.shape[-1]
-    is_crit = (mc == 1).astype(jnp.int32)
-    counts = jnp.sum(is_crit, axis=-1)
-    # Sort key: critical blocks first (ascending j), then the rest.
-    j = jnp.arange(tn, dtype=jnp.int32)
-    key = is_crit * (2 * tn) - j
-    idx = jnp.argsort(-key, axis=-1, stable=True)[..., :k_sel].astype(jnp.int32)
-    slot = jnp.arange(k_sel, dtype=jnp.int32)
-    live = slot < counts[..., None]
-    pad = idx[..., :1]  # first critical index — always a real block
-    lut = jnp.where(live, idx, pad)
-    return lut, counts
-
-
-def build_col_lut(mc: jax.Array, w_col: int) -> Tuple[jax.Array, jax.Array]:
-    """Column LUT for the dK/dV kernel: per KV column, the critical row idxs.
-
-    Requires the column-capacity constraint (counts <= w_col by construction).
-    Returns (col_lut (..., Tn, w_col) int32, col_counts (..., Tn) int32).
-    """
-    tm = mc.shape[-2]
-    is_crit = (mc == 1).astype(jnp.int32)
-    counts = jnp.sum(is_crit, axis=-2)
-    i = jnp.arange(tm, dtype=jnp.int32)[:, None]
-    key = is_crit * (2 * tm) - i
-    idx = jnp.argsort(-key, axis=-2, stable=True)[..., :w_col, :].astype(jnp.int32)
-    idx = jnp.swapaxes(idx, -1, -2)  # (..., Tn, w_col)
-    slot = jnp.arange(w_col, dtype=jnp.int32)
-    live = slot < counts[..., None]
-    pad = idx[..., :1]
-    lut = jnp.where(live, idx, pad)
-    return lut, counts
 
 
 def expand_mask(mc: jax.Array, block_q: int, block_kv: int) -> jax.Array:

@@ -1,0 +1,165 @@
+"""SLA planning subsystem: classify once, execute many times.
+
+SLA's cost model (PAPER.md Eq. 2-3) splits attention into a cheap
+*planning* step — pool(Q) pool(K)^T -> P_c -> three-way block
+classification -> row/column lookup tables — and the *execution* step
+that consumes the resulting block structure.  This module owns the
+planning step end to end: `plan_attention(q, k, cfg)` returns an
+`SLAPlan`, an immutable pytree carrying every derived structure any
+backend (reference / gather / Pallas kernel) needs, so
+
+  * the backward pass reuses the forward's LUTs (threaded through the
+    `custom_vjp` residuals in kernels/ops.py — never rebuilt), and
+  * a plan computed at one diffusion timestep can be reused for the
+    next K steps (`SLAConfig.plan_refresh_interval`; DiT block-sparsity
+    patterns are stable across adjacent denoising steps — see
+    DESIGN.md "Plan/execute split").
+
+This is the ONLY place LUTs are constructed; `core/masks.py` keeps the
+classification math (P_c, M_c) and `core/backends.py` the execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SLAConfig
+from repro.core.masks import compute_mask
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SLAPlan:
+    """Immutable result of SLA block planning — a pure-array pytree.
+
+    Shapes (B = batch, H = q heads, Tm/Tn = q/kv block counts):
+      mc:         (B, H, Tm, Tn) int8   three-way classification (Eq. 3)
+      lut:        (B, H, Tm, K)  int32  critical block ids per query row
+      counts:     (B, H, Tm)     int32  live entries per row LUT
+      col_lut:    (B, H, Tn, W)  int32  critical row ids per KV column
+                                        (dK/dV kernel; capacity-capped)
+      col_counts: (B, H, Tn)     int32  live entries per column LUT
+      marginal:   (B, H, Tm, Tn) f32    aggregation matrix A (1 where a
+                                        block is marginal; the App. A.3
+                                        pre-aggregation matmul operand)
+
+    All leaves are arrays, so a plan jit-traces, shards, and scans like
+    any activation; static facts (K, W, block sizes) are recovered from
+    leaf shapes + the SLAConfig at execution time.
+    """
+
+    mc: jax.Array
+    lut: jax.Array
+    counts: jax.Array
+    col_lut: jax.Array
+    col_counts: jax.Array
+    marginal: jax.Array
+
+    @property
+    def k_sel(self) -> int:
+        return self.lut.shape[-1]
+
+    @property
+    def w_col(self) -> int:
+        return self.col_lut.shape[-1]
+
+    @property
+    def num_q_blocks(self) -> int:
+        return self.mc.shape[-2]
+
+    @property
+    def num_kv_blocks(self) -> int:
+        return self.mc.shape[-1]
+
+    def stats(self) -> dict:
+        """Sparsity statistics (fractions of each block class)."""
+        total = self.mc.size
+        crit = jnp.sum(self.mc == 1) / total
+        marg = jnp.sum(self.mc == 0) / total
+        neg = jnp.sum(self.mc == -1) / total
+        return {
+            "critical_frac": crit,
+            "marginal_frac": marg,
+            "negligible_frac": neg,
+            "sparsity": 1.0 - crit,  # paper: 1 - computed fraction
+        }
+
+
+def build_lut(mc: jax.Array, k_sel: int) -> Tuple[jax.Array, jax.Array]:
+    """Static-shape critical-block lookup table for the TPU kernel.
+
+    Args:
+      mc: (..., Tm, Tn) int8 classification.
+      k_sel: static LUT width (>= max #critical per row; use
+        cfg.num_critical(Tn)).
+
+    Returns:
+      lut:    (..., Tm, k_sel) int32 — critical block indices, ascending,
+              padded with the row's first critical index (always valid).
+      counts: (..., Tm) int32 — number of live entries per row.
+    """
+    tn = mc.shape[-1]
+    is_crit = (mc == 1).astype(jnp.int32)
+    counts = jnp.sum(is_crit, axis=-1)
+    # Sort key: critical blocks first (ascending j), then the rest.
+    j = jnp.arange(tn, dtype=jnp.int32)
+    key = is_crit * (2 * tn) - j
+    idx = jnp.argsort(-key, axis=-1, stable=True)[..., :k_sel].astype(jnp.int32)
+    slot = jnp.arange(k_sel, dtype=jnp.int32)
+    live = slot < counts[..., None]
+    pad = idx[..., :1]  # first critical index — always a real block
+    lut = jnp.where(live, idx, pad)
+    return lut, counts
+
+
+def build_col_lut(mc: jax.Array, w_col: int) -> Tuple[jax.Array, jax.Array]:
+    """Column LUT for the dK/dV kernel: per KV column, the critical row idxs.
+
+    Requires the column-capacity constraint (counts <= w_col by construction).
+    Returns (col_lut (..., Tn, w_col) int32, col_counts (..., Tn) int32).
+    """
+    tm = mc.shape[-2]
+    is_crit = (mc == 1).astype(jnp.int32)
+    counts = jnp.sum(is_crit, axis=-2)
+    i = jnp.arange(tm, dtype=jnp.int32)[:, None]
+    key = is_crit * (2 * tm) - i
+    idx = jnp.argsort(-key, axis=-2, stable=True)[..., :w_col, :].astype(jnp.int32)
+    idx = jnp.swapaxes(idx, -1, -2)  # (..., Tn, w_col)
+    slot = jnp.arange(w_col, dtype=jnp.int32)
+    live = slot < counts[..., None]
+    pad = idx[..., :1]
+    lut = jnp.where(live, idx, pad)
+    return lut, counts
+
+
+def plan_from_mask(mc: jax.Array, cfg: SLAConfig) -> SLAPlan:
+    """Derive every execution structure from a classification M_c."""
+    tm, tn = mc.shape[-2], mc.shape[-1]
+    lut, counts = build_lut(mc, cfg.num_critical(tn))
+    col_lut, col_counts = build_col_lut(mc, cfg.col_capacity(tm, tn))
+    marginal = (mc == 0).astype(jnp.float32)
+    return SLAPlan(mc=mc, lut=lut, counts=counts,
+                   col_lut=col_lut, col_counts=col_counts,
+                   marginal=marginal)
+
+
+def plan_attention(
+    q: jax.Array, k: jax.Array, cfg: SLAConfig,
+    scale: Optional[float] = None,
+) -> SLAPlan:
+    """Build an SLAPlan from (q, k): P_c -> M_c -> LUTs -> A.
+
+    q: (B, H, N, D); k: (B, Hkv, N, D) with Hkv | H (GQA heads are
+    broadcast so the plan always has one row of structure per q head).
+    Gradient-stopped end to end — the plan is a constant w.r.t. the
+    loss (TopK is not differentiated, matching the paper).
+    """
+    h = q.shape[1]
+    if k.shape[1] != h:
+        assert h % k.shape[1] == 0
+        k = jnp.repeat(k, h // k.shape[1], axis=1)
+    mc = compute_mask(q, k, cfg, scale)
+    return plan_from_mask(mc, cfg)

@@ -1,9 +1,13 @@
-"""SLA attention module — functional public API.
+"""SLA attention module — functional public API (plan/execute wrapper).
 
 Usage:
     cfg = SLAConfig(kh_frac=0.05, kl_frac=0.10, phi="softmax")
     params = sla_init(rng, num_heads, head_dim, cfg)
-    out = sla_attention(params, q, k, v, cfg)        # (B, H, N, D)
+    out = sla_attention(params, q, k, v, cfg)                 # (B, H, N, D)
+
+    # plan once, execute many times (cross-timestep reuse):
+    plan = plan_attention(q, k, cfg)
+    out = sla_attention(params, q, k, v, cfg, plan=plan)
 
 Modes (cfg.mode):
   "sla"          O = O^s + Proj(O^l)                      (paper, Eq. 6)
@@ -12,8 +16,9 @@ Modes (cfg.mode):
   "l_plus_s"     O = O^s + full-linear(O)                  (Table 2 baseline)
   "full"         exact softmax attention
 
-Set use_kernel=True to run the fused Pallas TPU kernel (interpret mode on
-CPU); False runs the pure-jnp reference path (autodiff-differentiable).
+`backend` selects the execution path from the core.backends registry:
+"reference" (dense oracle), "gather" (LUT-gather XLA — true sparse
+compiled FLOPs), or "kernel" (fused Pallas; interpret mode off-TPU).
 """
 from __future__ import annotations
 
@@ -22,10 +27,9 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import backends
 from repro.core.config import SLAConfig
-from repro.core.masks import compute_mask
-from repro.core.phi import phi
-from repro.core import reference as ref
+from repro.core.plan import SLAPlan
 
 Params = Dict[str, jax.Array]
 
@@ -42,73 +46,20 @@ def sla_init(rng: jax.Array, num_heads: int, head_dim: int,
     return {"proj": proj}
 
 
-def _repeat_kv(x: jax.Array, num_q_heads: int) -> jax.Array:
-    """GQA: broadcast KV heads to match Q heads. (B, Hkv, N, D) -> (B, H, N, D)."""
-    hkv = x.shape[1]
-    if hkv == num_q_heads:
-        return x
-    assert num_q_heads % hkv == 0
-    return jnp.repeat(x, num_q_heads // hkv, axis=1)
-
-
 def sla_attention(
     params: Optional[Params],
     q: jax.Array, k: jax.Array, v: jax.Array,
     cfg: SLAConfig,
     scale: Optional[float] = None,
-    use_kernel: bool = False,
-    interpret: bool = True,
-    impl: str = "reference",
+    backend: str = "reference",
+    plan: Optional[SLAPlan] = None,
 ) -> jax.Array:
     """SLA attention. q: (B, H, N, D); k, v: (B, Hkv, N, D) with Hkv | H.
 
-    impl: "reference" (dense oracle) or "gather" (LUT-gather XLA path whose
-    compiled FLOPs equal the true sparse cost — use for dry-run/training).
-    use_kernel=True overrides impl with the fused Pallas kernel.
+    `plan`: a precomputed SLAPlan (from `plan_attention`) — pass it to
+    amortize planning across calls; None plans inline from (q, k).
 
     Returns (B, H, N, D) in q.dtype.
     """
-    in_dtype = q.dtype
-    h = q.shape[1]
-    k = _repeat_kv(k, h)
-    v = _repeat_kv(v, h)
-
-    if cfg.mode == "full":
-        return ref.full_attention(q, k, v, cfg.causal, scale).astype(in_dtype)
-
-    if cfg.mode == "linear_only":
-        qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
-        o = ref.full_linear(qp, kp, v)
-        if params is not None:
-            o = jnp.einsum("bhnd,hde->bhne", o, params["proj"].astype(jnp.float32))
-        return o.astype(in_dtype)
-
-    mc = compute_mask(q, k, cfg, scale)
-
-    if cfg.mode == "sparse_only":
-        o_s, _ = ref.sparse_component(q, k, v, mc, cfg, scale)
-        return o_s.astype(in_dtype)
-
-    qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
-
-    if cfg.mode == "l_plus_s":
-        o_s, _ = ref.sparse_component(q, k, v, mc, cfg, scale)
-        o_l = ref.full_linear(qp, kp, v)
-        return (o_s + o_l).astype(in_dtype)
-
-    if cfg.mode != "sla":
-        raise ValueError(f"unknown SLA mode {cfg.mode!r}")
-
-    if use_kernel:
-        from repro.kernels import ops as kops
-        o_s, o_l = kops.sla_attention_core(q, k, v, qp, kp, mc, cfg,
-                                           scale=scale, interpret=interpret)
-    elif impl == "gather":
-        from repro.core.block_sparse_xla import sla_forward_gather
-        o_s, o_l = sla_forward_gather(q, k, v, qp, kp, mc, cfg, scale)
-    else:
-        o_s, o_l = ref.sla_forward_reference(q, k, v, qp, kp, mc, cfg, scale)
-
-    proj = params["proj"].astype(jnp.float32)
-    o = o_s + jnp.einsum("bhnd,hde->bhne", o_l, proj)
-    return o.astype(in_dtype)
+    return backends.execute(plan, params, q, k, v, cfg,
+                            scale=scale, backend=backend)

@@ -1,8 +1,14 @@
 """jit'd SLA attention op: Pallas kernels + custom_vjp (Alg. 1 + Alg. 2).
 
-`sla_attention_core(q, k, v, qp, kp, mc, cfg)` returns (O^s, O^l); the
+`sla_attention_core(q, k, v, qp, kp, plan, cfg)` returns (O^s, O^l); the
 caller applies Proj and the sum (Eq. 6). Differentiable w.r.t. q, k, v,
-qp, kp (the mask mc is a constant, as in the paper).
+qp, kp (the plan is a constant, as in the paper: TopK is not
+differentiated).
+
+The block structure arrives as an `SLAPlan` (core/plan.py): row LUT for
+the forward/dQ kernels, column LUT for the dK/dV kernel. Both are
+threaded through the custom_vjp residuals so the backward pass consumes
+the forward's plan verbatim — no LUT is ever rebuilt here.
 
 Division of labor (DESIGN.md §3):
   * sparse fwd + linear merge ........ Pallas kernel (sla_fwd)
@@ -14,14 +20,14 @@ Division of labor (DESIGN.md §3):
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import SLAConfig
-from repro.core.masks import build_col_lut, build_lut
+from repro.core.plan import SLAPlan, plan_from_mask
 from repro.kernels.sla_fwd import sla_fwd
 from repro.kernels.sla_bwd import sla_bwd_dq, sla_bwd_dkv
 
@@ -29,9 +35,9 @@ EPS = 1e-6
 
 
 def _flat(x):
-    """(B, H, N, D) -> (B*H, N, D)."""
-    b, h, n, d = x.shape
-    return x.reshape(b * h, n, d)
+    """(B, H, ...) -> (B*H, ...)."""
+    b, h = x.shape[:2]
+    return x.reshape(b * h, *x.shape[2:])
 
 
 def _block(x, blk):
@@ -85,57 +91,55 @@ def _linear_bwd(do_l, qp, hi, zi, a, kp, v, block_q, block_kv):
             dv_l.reshape(bh, -1, d))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
-def _sla_core(q, k, v, qp, kp, mc, cfg: SLAConfig, scale: float,
-              interpret: bool):
-    o_s, o_l = _fwd_impl(q, k, v, qp, kp, mc, cfg, scale, interpret)[:2]
+@functools.partial(jax.custom_vjp, nondiff_argnums=(10, 11, 12))
+def _sla_core(q, k, v, qp, kp, marginal, lut, counts, col_lut, col_counts,
+              cfg: SLAConfig, scale: float, interpret: bool):
+    o_s, o_l = _fwd_impl(q, k, v, qp, kp, marginal, lut, counts, cfg,
+                         scale, interpret)[:2]
     return o_s.reshape(q.shape), o_l.reshape(q.shape)
 
 
-def _fwd_impl(q, k, v, qp, kp, mc, cfg, scale, interpret):
+def _fwd_impl(q, k, v, qp, kp, marginal, lut, counts, cfg, scale,
+              interpret):
     fq, fk, fv, fqp, fkp = map(_flat, (q, k, v, qp, kp))
-    b, h, tm, tn = mc.shape
-    fmc = mc.reshape(b * h, tm, tn)
-    k_sel = cfg.num_critical(tn)
-    lut, counts = build_lut(fmc, k_sel)
-    a = (fmc == 0).astype(jnp.float32)
+    a, flut, fcounts = map(_flat, (marginal, lut, counts))
     hb, zb = _hz_blocks(fkp, fv, cfg.block_kv)
     hi, zi = _aggregate(a, hb, zb)
-    o_s, o_l, lse = sla_fwd(lut, counts, fq, fk, fv, fqp, hi, zi,
+    o_s, o_l, lse = sla_fwd(flut, fcounts, fq, fk, fv, fqp, hi, zi,
                             scale=scale, causal=cfg.causal,
                             block_q=cfg.block_q, block_kv=cfg.block_kv,
                             interpret=interpret)
-    return o_s, o_l, lse, lut, counts, a, hi, zi, fmc
+    return o_s, o_l, lse, a, hi, zi, flut, fcounts
 
 
-def _sla_core_fwd(q, k, v, qp, kp, mc, cfg, scale, interpret):
-    o_s, o_l, lse, lut, counts, a, hi, zi, fmc = _fwd_impl(
-        q, k, v, qp, kp, mc, cfg, scale, interpret)
+def _sla_core_fwd(q, k, v, qp, kp, marginal, lut, counts, col_lut,
+                  col_counts, cfg, scale, interpret):
+    o_s, o_l, lse, a, hi, zi, flut, fcounts = _fwd_impl(
+        q, k, v, qp, kp, marginal, lut, counts, cfg, scale, interpret)
     shape = q.shape
-    res = (q, k, v, qp, kp, fmc, o_s, lse, a, hi, zi)
+    res = (q, k, v, qp, kp, o_s, lse, a, hi, zi,
+           flut, fcounts, _flat(col_lut), _flat(col_counts))
     out = (o_s.reshape(shape), o_l.reshape(shape))
     return out, res
 
 
 def _sla_core_bwd(cfg, scale, interpret, res, cts):
-    q, k, v, qp, kp, fmc, o_s, lse, a, hi, zi = res
+    (q, k, v, qp, kp, o_s, lse, a, hi, zi,
+     flut, fcounts, fcol_lut, fcol_counts) = res
     do_s, do_l = cts
     shape = q.shape
     fq, fk, fv, fqp, fkp = map(_flat, (q, k, v, qp, kp))
     fdo_s, fdo_l = map(_flat, (do_s, do_l))
     fdo_s = fdo_s.astype(jnp.float32)
 
-    # --- sparse component (Pallas kernels) ---
+    # --- sparse component (Pallas kernels, LUTs reused from the fwd plan) ---
     d_s = jnp.sum(fdo_s * o_s, axis=-1)  # (BH, N)
-    dq = sla_bwd_dq(*build_lut(fmc, cfg.num_critical(fmc.shape[-1])),
-                    fq, fk, fv, fdo_s, lse, d_s,
+    dq = sla_bwd_dq(flut, fcounts, fq, fk, fv, fdo_s, lse, d_s,
                     scale=scale, causal=cfg.causal,
                     block_q=cfg.block_q, block_kv=cfg.block_kv,
                     interpret=interpret)
-    w_col = cfg.col_capacity(fmc.shape[-2], fmc.shape[-1])
-    col_lut, col_counts = build_col_lut(fmc, w_col)
-    dk, dv_s = sla_bwd_dkv(col_lut, col_counts, fq, fk, fv, fdo_s, lse, d_s,
-                           scale=scale, causal=cfg.causal,
+    dk, dv_s = sla_bwd_dkv(fcol_lut, fcol_counts, fq, fk, fv, fdo_s, lse,
+                           d_s, scale=scale, causal=cfg.causal,
                            block_q=cfg.block_q, block_kv=cfg.block_kv,
                            interpret=interpret)
 
@@ -146,10 +150,14 @@ def _sla_core_bwd(cfg, scale, interpret, res, cts):
 
     b, h = shape[0], shape[1]
     unflat = lambda x: x.reshape(b, h, shape[2], shape[3])
+    tm, tn = a.shape[-2:]
+    k_sel, w_col = flut.shape[-1], fcol_lut.shape[-1]
+    f0 = lambda *s: np.zeros((b, h) + s, dtype=jax.dtypes.float0)
+    d_marginal = jnp.zeros((b, h, tm, tn), jnp.float32)  # plan: constant
     return (unflat(dq).astype(q.dtype), unflat(dk).astype(k.dtype),
             unflat(dv).astype(v.dtype), unflat(dqp).astype(qp.dtype),
             unflat(dkp).astype(kp.dtype),
-            np.zeros((b, h) + fmc.shape[-2:], dtype=jax.dtypes.float0))
+            d_marginal, f0(tm, k_sel), f0(tm), f0(tn, w_col), f0(tn))
 
 
 _sla_core.defvjp(_sla_core_fwd, _sla_core_bwd)
@@ -157,10 +165,17 @@ _sla_core.defvjp(_sla_core_fwd, _sla_core_bwd)
 
 def sla_attention_core(
     q: jax.Array, k: jax.Array, v: jax.Array,
-    qp: jax.Array, kp: jax.Array, mc: jax.Array, cfg: SLAConfig,
+    qp: jax.Array, kp: jax.Array,
+    plan: Union[SLAPlan, jax.Array], cfg: SLAConfig,
     scale: float | None = None, interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Fused-kernel SLA core. All of q,k,v,qp,kp are (B, H, N, D); mc is
-    (B, H, Tm, Tn) int8. Returns (O^s, O^l) f32, each (B, H, N, D)."""
+    """Fused-kernel SLA core. All of q,k,v,qp,kp are (B, H, N, D); `plan`
+    is an SLAPlan (or, for convenience, a raw (B, H, Tm, Tn) int8 M_c,
+    from which a plan is derived). Returns (O^s, O^l) f32, (B, H, N, D).
+    """
+    if not isinstance(plan, SLAPlan):
+        plan = plan_from_mask(plan, cfg)
     scale = float(q.shape[-1] ** -0.5) if scale is None else float(scale)
-    return _sla_core(q, k, v, qp, kp, mc, cfg, scale, bool(interpret))
+    return _sla_core(q, k, v, qp, kp, plan.marginal, plan.lut,
+                     plan.counts, plan.col_lut, plan.col_counts, cfg,
+                     scale, bool(interpret))

@@ -30,7 +30,8 @@ from repro.models import registry  # noqa: E402
 from repro.optim.adamw import AdamWConfig  # noqa: E402
 from repro.roofline.analysis import (model_flops,
                                      roofline_terms)  # noqa: E402
-from repro.roofline.hlo_cost import analyze as hlo_analyze  # noqa: E402
+from repro.roofline.hlo_cost import (analyze as hlo_analyze,  # noqa: E402
+                                     xla_cost_analysis)
 
 # Cells that are skipped by design (DESIGN.md §Arch-applicability).
 SKIPS = {
@@ -40,7 +41,7 @@ SKIPS = {
 }
 
 
-def build_cell(cfg, shape, mesh, impl: str = "gather"):
+def build_cell(cfg, shape, mesh, backend: str = "gather"):
     """Returns (fn, args, in_shardings, out_shardings)."""
     params, opt = abstract_state(cfg)
     p_shard = param_shardings(mesh, params)
@@ -50,7 +51,7 @@ def build_cell(cfg, shape, mesh, impl: str = "gather"):
         b_shard = batch_shardings(mesh, batch, shape.global_batch)
         opt_shard = {"m": p_shard, "v": p_shard,
                      "step": NamedSharding(mesh, P())}
-        fn = make_train_step(cfg, AdamWConfig(), impl=impl)
+        fn = make_train_step(cfg, AdamWConfig(), backend=backend)
         return (fn, (params, opt, batch),
                 (p_shard, opt_shard, b_shard),
                 (p_shard, opt_shard, NamedSharding(mesh, P()),
@@ -59,7 +60,7 @@ def build_cell(cfg, shape, mesh, impl: str = "gather"):
         batch = registry.prefill_specs(cfg, shape)
         batch = {k: v for k, v in batch.items() if v is not None}
         b_shard = batch_shardings(mesh, batch, shape.global_batch)
-        fn = make_prefill_step(cfg, impl=impl)
+        fn = make_prefill_step(cfg, backend=backend)
         return fn, (params, batch), (p_shard, b_shard), None
     # decode — the cache is donated (in-place update; see jit below)
     token, cache = registry.decode_specs(cfg, shape)
@@ -71,7 +72,7 @@ def build_cell(cfg, shape, mesh, impl: str = "gather"):
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             out_dir: pathlib.Path, impl: str = "gather") -> dict:
+             out_dir: pathlib.Path, backend: str = "gather") -> dict:
     mesh_name = "multi" if multi_pod else "single"
     tag = f"{arch}__{shape_name}__{mesh_name}"
     out_path = out_dir / f"{tag}.json"
@@ -104,7 +105,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = xla_cost_analysis(compiled)
             hlo_text = compiled.as_text()
         # loop-aware cost model (XLA cost_analysis counts scan bodies
         # ONCE — ~88x undercount on deep stacks; see roofline/hlo_cost.py)

@@ -24,12 +24,12 @@ def cast_params_bf16(params):
 
 
 def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
-                    impl: str = "gather") -> Callable:
+                    backend: str = "gather") -> Callable:
     mdl = registry.get_model(cfg)
 
     def train_step(params, opt_state, batch):
         def loss_of(p):
-            return mdl.loss_fn(cast_params_bf16(p), cfg, batch, impl=impl)
+            return mdl.loss_fn(cast_params_bf16(p), cfg, batch, backend=backend)
 
         loss, grads = jax.value_and_grad(loss_of)(params)
         params, opt_state, metrics = adamw.update(params, grads, opt_state,
@@ -39,22 +39,22 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
     return train_step
 
 
-def make_prefill_step(cfg: ArchConfig, impl: str = "gather") -> Callable:
+def make_prefill_step(cfg: ArchConfig, backend: str = "gather") -> Callable:
     mdl = registry.get_model(cfg)
 
     if cfg.family == "encdec":
         def prefill_step(params, batch):
-            return mdl.prefill(params, cfg, batch, impl=impl)
+            return mdl.prefill(params, cfg, batch, backend=backend)
     elif cfg.family == "dit":
         def prefill_step(params, batch):
             # DiT "prefill" = one denoising forward (its inference step)
             return mdl.forward(params, cfg, batch["latents"], batch["t"],
-                               batch.get("cond"), impl=impl)
+                               batch.get("cond"), backend=backend)
     elif cfg.family == "vlm":
         def prefill_step(params, batch):
             x, _, (kc, vc) = mdl.forward(
                 params, cfg, batch["tokens"],
-                prefix_embeds=batch["patch_embeds"], impl=impl,
+                prefix_embeds=batch["patch_embeds"], backend=backend,
                 return_cache=True)
             cache = {"k": kc, "v": vc,
                      "pos": jnp.int32(batch["tokens"].shape[1]
@@ -62,7 +62,7 @@ def make_prefill_step(cfg: ArchConfig, impl: str = "gather") -> Callable:
             return x[:, -1], cache
     else:
         def prefill_step(params, batch):
-            return mdl.prefill(params, cfg, batch["tokens"], impl=impl)
+            return mdl.prefill(params, cfg, batch["tokens"], backend=backend)
 
     return prefill_step
 

@@ -147,12 +147,16 @@ def attention(
     sla_cfg: SLAConfig,
     window: int = 0,
     causal: bool = True,
-    impl: str = "gather",
+    backend: str = "gather",
+    plan=None,
 ) -> jax.Array:
     """Unified attention entry. kind: "sla" | "full" | "swa".
 
-    k, v may have fewer (GQA) heads. impl selects the SLA execution path
-    ("gather" XLA / "reference" dense / "kernel" Pallas-interpret).
+    k, v may have fewer (GQA) heads. `backend` names an SLA execution
+    backend from the core.backends registry ("gather" XLA / "reference"
+    dense / "kernel" fused Pallas). `plan` is an optional precomputed
+    SLAPlan for (q, k) — pass it to reuse block structure across calls
+    (e.g. adjacent diffusion timesteps); None plans inline.
     """
     if kind == "full":
         h = q.shape[1]
@@ -166,10 +170,8 @@ def attention(
         return _swa_attention(q, kk, vv, window, causal)
     if kind == "sla":
         cfg = dataclasses.replace(sla_cfg, causal=causal)
-        use_kernel = impl == "kernel"
         return sla_attention(sla_params, q, k, v, cfg,
-                             use_kernel=use_kernel,
-                             impl="gather" if impl == "gather" else "reference")
+                             backend=backend, plan=plan)
     raise ValueError(f"unknown attention kind {kind!r}")
 
 

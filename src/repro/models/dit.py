@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import plan as plan_lib
 from repro.distributed import ctx
 from repro.models.common import attention, dense_init, mse_loss, rms_norm
 
@@ -67,14 +68,21 @@ def _timestep_embedding(t: jax.Array, dim: int = 256) -> jax.Array:
 
 def forward(params, cfg: ArchConfig, latents, t,
             cond: Optional[jax.Array] = None,
-            compute_dtype=jnp.bfloat16, impl: str = "gather",
-            sla_mode: Optional[str] = None) -> jax.Array:
+            compute_dtype=jnp.bfloat16, backend: str = "gather",
+            sla_mode: Optional[str] = None,
+            plans=None, return_plans: bool = False):
     """latents: (B, N, patch_dim); t: (B,) diffusion time in [0,1];
     cond: (B, Lc, d) stub text embeddings. Returns velocity prediction
     with the same shape as latents.
 
     sla_mode overrides cfg.sla.mode (used by the ablation benchmarks to
-    run full / linear_only / sparse_only / l_plus_s variants)."""
+    run full / linear_only / sparse_only / l_plus_s variants).
+
+    Cross-timestep plan reuse (DESIGN.md "Plan/execute split"): pass
+    `return_plans=True` to also return the per-layer SLAPlan pytree
+    (leading axis = layer, stacked by the layer scan); pass that pytree
+    back as `plans=` on a later denoising step to skip block planning
+    entirely. With plans given, this function performs zero planning."""
     x = jnp.einsum("bnp,pd->bnd", latents.astype(compute_dtype),
                    params["patch_in"].astype(compute_dtype))
     temb = jnp.einsum("be,ed->bd", _timestep_embedding(t * 1000.0),
@@ -89,8 +97,12 @@ def forward(params, cfg: ArchConfig, latents, t,
     kind = "sla" if cfg.attention_kind == "sla" else cfg.attention_kind
     if sla_mode is not None:
         kind = "sla"
+    # Self-attention needs a block plan only in the sparse SLA modes.
+    plan_needed = (kind == "sla"
+                   and sla_cfg.mode not in ("full", "linear_only"))
 
-    def body(x, p):
+    def body(x, xs):
+        p, layer_plan = xs
         mod = jnp.einsum("bd,de->be", temb, p["ada"].astype(temb.dtype))
         sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
         xn = rms_norm(x, p["ln1"]) * (1 + sc1[:, None]) + sh1[:, None]
@@ -100,8 +112,11 @@ def forward(params, cfg: ArchConfig, latents, t,
             .reshape(b, n, hkv, dh).transpose(0, 2, 1, 3)
         v = jnp.einsum("bsd,de->bse", xn, p["wv"].astype(x.dtype)) \
             .reshape(b, n, hkv, dh).transpose(0, 2, 1, 3)
+        if plan_needed and layer_plan is None:
+            layer_plan = plan_lib.plan_attention(q, k, sla_cfg)
         o = attention({"proj": p["sla_proj"]}, q, k, v, kind, sla_cfg,
-                      causal=False, impl=impl)
+                      causal=False, backend=backend,
+                      plan=layer_plan if plan_needed else None)
         o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
         x = ctx.shard_residual(
             x + g1[:, None] * jnp.einsum("bse,ed->bsd", o,
@@ -124,15 +139,59 @@ def forward(params, cfg: ArchConfig, latents, t,
         g, u = jnp.split(hmid, 2, axis=-1)
         x = ctx.shard_residual(x + g2[:, None] * jnp.einsum(
             "bsf,fd->bsd", jax.nn.silu(g) * u, p["mlp_wo"].astype(x.dtype)))
-        return x, None
+        return x, (layer_plan if return_plans and plan_needed else None)
 
-    x, _ = jax.lax.scan(ctx.maybe_remat(body), x, params["layers"])
+    # `plans=None` cannot ride through scan xs (no leading layer axis), so
+    # the no-plan path scans params only and the body plans inline.
+    if plans is None:
+        x, out_plans = jax.lax.scan(
+            ctx.maybe_remat(lambda x, p: body(x, (p, None))),
+            x, params["layers"])
+    else:
+        x, out_plans = jax.lax.scan(ctx.maybe_remat(body), x,
+                                    (params["layers"], plans))
     x = rms_norm(x, params["ln_f"])
-    return jnp.einsum("bnd,dp->bnp", x, params["patch_out"].astype(x.dtype))
+    out = jnp.einsum("bnd,dp->bnp", x, params["patch_out"].astype(x.dtype))
+    if return_plans:
+        return out, out_plans
+    return out
+
+
+def sample(params, cfg: ArchConfig, noise, *, num_steps: int = 8,
+           cond: Optional[jax.Array] = None, compute_dtype=jnp.bfloat16,
+           backend: str = "gather",
+           refresh_interval: Optional[int] = None) -> jax.Array:
+    """Euler rectified-flow sampler with cross-timestep plan reuse.
+
+    Integrates dx/dt = v(x, t) from t=1 (noise, (B, N, patch_dim)) down
+    to t=0 over `num_steps` uniform steps. Every `refresh_interval`
+    steps (default: cfg.sla.plan_refresh_interval) the forward pass
+    re-plans each layer's block structure and the plans are reused for
+    the steps in between — block-sparsity patterns are stable across
+    adjacent denoising timesteps, so planning cost amortizes by ~1/K.
+    With refresh_interval >= num_steps, each layer plans exactly once.
+    """
+    k_refresh = (cfg.sla.plan_refresh_interval if refresh_interval is None
+                 else refresh_interval)
+    k_refresh = max(1, int(k_refresh))
+    b = noise.shape[0]
+    dt = 1.0 / num_steps
+    x = noise
+    plans = None
+    for step in range(num_steps):
+        t = jnp.full((b,), 1.0 - step * dt, jnp.float32)
+        if step % k_refresh == 0:
+            vel, plans = forward(params, cfg, x, t, cond, compute_dtype,
+                                 backend, return_plans=True)
+        else:
+            vel = forward(params, cfg, x, t, cond, compute_dtype, backend,
+                          plans=plans)
+        x = x - dt * vel.astype(x.dtype)
+    return x
 
 
 def loss_fn(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
-            impl: str = "gather", sla_mode: Optional[str] = None):
+            backend: str = "gather", sla_mode: Optional[str] = None):
     """Flow-matching (rectified flow): x_t = (1-t) x0 + t noise; the model
     predicts the velocity (noise - x0). batch: latents (B,N,P), noise,
     t (B,), cond (optional)."""
@@ -142,5 +201,5 @@ def loss_fn(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
     xt = (1.0 - t[:, None, None]) * x0 + t[:, None, None] * noise
     target = noise - x0
     pred = forward(params, cfg, xt, t, batch.get("cond"), compute_dtype,
-                   impl, sla_mode)
+                   backend, sla_mode)
     return mse_loss(pred, target)

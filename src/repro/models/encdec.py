@@ -57,7 +57,7 @@ def init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
     }
 
 
-def _mha(p, pre, x, kv_x, cfg: ArchConfig, causal, kind, positions, impl):
+def _mha(p, pre, x, kv_x, cfg: ArchConfig, causal, kind, positions, backend):
     b, s, d = x.shape
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = jnp.einsum("bsd,de->bse", x, p[pre + "q"].astype(x.dtype)) \
@@ -72,7 +72,7 @@ def _mha(p, pre, x, kv_x, cfg: ArchConfig, causal, kind, positions, impl):
         k = rope(k, jnp.arange(sk, dtype=jnp.int32), cfg.rope_theta)
     sla_params = {"proj": p["sla_proj"]} if kind == "sla" else None
     o = attention(sla_params, q, k, v, kind, cfg.sla, causal=causal,
-                  impl=impl)
+                  backend=backend)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
     return jnp.einsum("bse,ed->bsd", o, p[pre + "o"].astype(x.dtype))
 
@@ -85,7 +85,7 @@ def _mlp(p, x):
 
 
 def encode(params, cfg: ArchConfig, audio_embeds,
-           compute_dtype=jnp.bfloat16, impl: str = "gather"):
+           compute_dtype=jnp.bfloat16, backend: str = "gather"):
     """audio_embeds: (B, T, d) stub frame embeddings -> encoder states."""
     x = audio_embeds.astype(compute_dtype)
     b, t = x.shape[:2]
@@ -95,7 +95,7 @@ def encode(params, cfg: ArchConfig, audio_embeds,
     def body(x, p):
         x = ctx.shard_residual(
             x + _mha(p, "w", rms_norm(x, p["ln1"]),
-                     rms_norm(x, p["ln1"]), cfg, False, kind, pos, impl))
+                     rms_norm(x, p["ln1"]), cfg, False, kind, pos, backend))
         x = ctx.shard_residual(x + _mlp(p, rms_norm(x, p["ln2"])))
         return x, None
 
@@ -104,7 +104,7 @@ def encode(params, cfg: ArchConfig, audio_embeds,
 
 
 def decode(params, cfg: ArchConfig, tokens, enc_states,
-           compute_dtype=jnp.bfloat16, impl: str = "gather"):
+           compute_dtype=jnp.bfloat16, backend: str = "gather"):
     x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
     b, s = x.shape[:2]
     pos = jnp.arange(s, dtype=jnp.int32)[None].repeat(b, 0)
@@ -113,10 +113,10 @@ def decode(params, cfg: ArchConfig, tokens, enc_states,
     def body(x, p):
         xn = rms_norm(x, p["ln1"])
         x = ctx.shard_residual(
-            x + _mha(p, "w", xn, xn, cfg, True, "full", pos, impl))
+            x + _mha(p, "w", xn, xn, cfg, True, "full", pos, backend))
         x = ctx.shard_residual(
             x + _mha(p, "x", rms_norm(x, p["ln_x"]), enc, cfg, False,
-                     "full", None, impl))
+                     "full", None, backend))
         x = ctx.shard_residual(x + _mlp(p, rms_norm(x, p["ln2"])))
         return x, None
 
@@ -125,10 +125,10 @@ def decode(params, cfg: ArchConfig, tokens, enc_states,
 
 
 def loss_fn(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
-            impl: str = "gather"):
+            backend: str = "gather"):
     """batch: audio_embeds (B,T,d), tokens (B,S), targets (B,S)."""
-    enc = encode(params, cfg, batch["audio_embeds"], compute_dtype, impl)
-    x = decode(params, cfg, batch["tokens"], enc, compute_dtype, impl)
+    enc = encode(params, cfg, batch["audio_embeds"], compute_dtype, backend)
+    x = decode(params, cfg, batch["tokens"], enc, compute_dtype, backend)
     return chunked_softmax_xent(x, params["embed"], batch["targets"],
                                 batch.get("mask"))
 
@@ -150,9 +150,9 @@ def make_cache(cfg: ArchConfig, batch: int, enc_len: int,
 
 
 def prefill(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
-            impl: str = "gather", dec_len: Optional[int] = None):
+            backend: str = "gather", dec_len: Optional[int] = None):
     """Encode audio + precompute per-layer cross K/V."""
-    enc = encode(params, cfg, batch["audio_embeds"], compute_dtype, impl)
+    enc = encode(params, cfg, batch["audio_embeds"], compute_dtype, backend)
     b, t, d = enc.shape
     hkv, dh = cfg.num_kv_heads, cfg.head_dim
 

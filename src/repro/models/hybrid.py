@@ -57,7 +57,7 @@ def _segments(cfg: ArchConfig):
     return sizes
 
 
-def _shared_block(p, x, cfg: ArchConfig, positions, impl,
+def _shared_block(p, x, cfg: ArchConfig, positions, backend,
                   kv_cache=None, pos=None):
     """SLA-attention transformer block (single shared param set)."""
     b, s, d = x.shape
@@ -90,7 +90,7 @@ def _shared_block(p, x, cfg: ArchConfig, positions, impl,
                        vv.astype(jnp.float32)).astype(x.dtype)
     else:
         o = attention({"proj": p["sla_proj"]}, q, k, v, "sla", cfg.sla,
-                      causal=True, impl=impl)
+                      causal=True, backend=backend)
         new_cache = (k, v)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
     x = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
@@ -103,7 +103,7 @@ def _shared_block(p, x, cfg: ArchConfig, positions, impl,
 
 
 def forward(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
-            impl: str = "gather", return_cache: bool = False):
+            backend: str = "gather", return_cache: bool = False):
     x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
     b, s = x.shape[:2]
     positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
@@ -124,7 +124,7 @@ def forward(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
         ssm_states.append(sts)
         conv_tails.append(tails)
         x, kv = _shared_block(params["shared_attn"], x, cfg, positions,
-                              impl)
+                              backend)
         attn_kvs.append(kv)
         start += seg
     x = rms_norm(x, params["ln_f"])
@@ -140,8 +140,8 @@ def forward(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
 
 
 def loss_fn(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
-            impl: str = "gather"):
-    x, _ = forward(params, cfg, batch["tokens"], compute_dtype, impl)
+            backend: str = "gather"):
+    x, _ = forward(params, cfg, batch["tokens"], compute_dtype, backend)
     return chunked_softmax_xent(x, params["embed"], batch["targets"],
                                 batch.get("mask"))
 
@@ -164,8 +164,8 @@ def make_cache(cfg: ArchConfig, batch: int, max_len: int,
 
 
 def prefill(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
-            impl: str = "gather"):
-    x, _, cache = forward(params, cfg, tokens, compute_dtype, impl,
+            backend: str = "gather"):
+    x, _, cache = forward(params, cfg, tokens, compute_dtype, backend,
                           return_cache=True)
     cache["pos"] = jnp.int32(tokens.shape[1])
     return x[:, -1], cache

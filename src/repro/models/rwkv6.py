@@ -125,7 +125,7 @@ def _channel_mix(p, x, prev=None):
 
 
 def forward(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
-            impl: str = "gather", return_cache: bool = False):
+            backend: str = "gather", return_cache: bool = False):
     x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
 
     def body(x, p):
@@ -144,7 +144,7 @@ def forward(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
 
 
 def loss_fn(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
-            impl: str = "gather"):
+            backend: str = "gather"):
     from repro.models.common import chunked_softmax_xent
     x, _ = forward(params, cfg, batch["tokens"], compute_dtype)
     return chunked_softmax_xent(x, params["embed"], batch["targets"],
@@ -166,7 +166,7 @@ def make_cache(cfg: ArchConfig, batch: int, max_len: int,
 
 
 def prefill(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
-            impl: str = "gather"):
+            backend: str = "gather"):
     x, _, (st, x1, x2) = forward(params, cfg, tokens, compute_dtype,
                                  return_cache=True)
     cache = {"state": st, "x1": x1, "x2": x2,

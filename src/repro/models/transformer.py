@@ -100,7 +100,7 @@ def _qkv(p, x, cfg: ArchConfig, positions):
     return q, k, v
 
 
-def _attn(p, x, kind, cfg: ArchConfig, positions, impl) -> Tuple[jax.Array,
+def _attn(p, x, kind, cfg: ArchConfig, positions, backend) -> Tuple[jax.Array,
                                                                  jax.Array,
                                                                  jax.Array]:
     """Returns (attn_out (B,S,d), k_cache, v_cache)."""
@@ -113,7 +113,7 @@ def _attn(p, x, kind, cfg: ArchConfig, positions, impl) -> Tuple[jax.Array,
 
     def do_sla(q, k, v):
         return attention(sla_params, q, k, v, "sla", sla_cfg,
-                         causal=True, impl=impl)
+                         causal=True, backend=backend)
 
     def do_full(q, k, v):
         return attention(None, q, k, v, "full", sla_cfg, causal=True)
@@ -158,7 +158,7 @@ def _ffn(p, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
 # --------------------------------------------------------------------------
 def forward(params, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
             prefix_embeds: Optional[jax.Array] = None,
-            compute_dtype=jnp.bfloat16, impl: str = "gather",
+            compute_dtype=jnp.bfloat16, backend: str = "gather",
             return_cache: bool = False):
     """Returns hidden states (B, S, d); optionally the per-layer KV cache.
 
@@ -179,7 +179,7 @@ def forward(params, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
 
     def body(x, layer):
         p, kind = layer
-        a, k, v = _attn(p, rms_norm(x, p["ln1"]), kind, cfg, positions, impl)
+        a, k, v = _attn(p, rms_norm(x, p["ln1"]), kind, cfg, positions, backend)
         # constraining the block OUTPUT (pre-residual-add) turns the TP
         # boundary all-reduce into a reduce-scatter (half the wire bytes)
         x = ctx.shard_residual(x + ctx.shard_residual(a))
@@ -198,12 +198,12 @@ def forward(params, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
 
 
 def loss_fn(params, cfg: ArchConfig, batch: dict,
-            compute_dtype=jnp.bfloat16, impl: str = "gather") -> jax.Array:
+            compute_dtype=jnp.bfloat16, backend: str = "gather") -> jax.Array:
     """Next-token cross-entropy (+ MoE aux). batch: tokens, targets[, mask,
     patch_embeds]."""
     x, aux = forward(params, cfg, batch["tokens"],
                      prefix_embeds=batch.get("patch_embeds"),
-                     compute_dtype=compute_dtype, impl=impl)
+                     compute_dtype=compute_dtype, backend=backend)
     npatch = 0
     if batch.get("patch_embeds") is not None:
         npatch = batch["patch_embeds"].shape[1]
@@ -218,10 +218,10 @@ def loss_fn(params, cfg: ArchConfig, batch: dict,
 # serving: prefill + single-token decode over a static-size KV cache
 # --------------------------------------------------------------------------
 def prefill(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
-            impl: str = "gather"):
+            backend: str = "gather"):
     """Run the prompt; returns (last_hidden (B, d), cache dict)."""
     x, _, (kc, vc) = forward(params, cfg, tokens,
-                             compute_dtype=compute_dtype, impl=impl,
+                             compute_dtype=compute_dtype, backend=backend,
                              return_cache=True)
     cache = {"k": kc, "v": vc, "pos": jnp.int32(tokens.shape[1])}
     return x[:, -1], cache

@@ -41,21 +41,21 @@ class ServeStats:
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, batch_size: int = 4,
                  max_len: int = 512, greedy: bool = True,
-                 impl: str = "gather"):
+                 backend: str = "gather"):
         self.cfg = cfg
         self.params = params
         self.mdl = registry.get_model(cfg)
         self.batch_size = batch_size
         self.max_len = max_len
         self.greedy = greedy
-        self.impl = impl
+        self.backend = backend
         self.stats = ServeStats()
 
-        mdl, impl_ = self.mdl, impl
+        mdl, backend_ = self.mdl, backend
 
         @jax.jit
         def _prefill(params, tokens):
-            return mdl.prefill(params, cfg, tokens, impl=impl_)
+            return mdl.prefill(params, cfg, tokens, backend=backend_)
 
         @jax.jit
         def _decode(params, token, cache):

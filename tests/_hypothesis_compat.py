@@ -1,0 +1,71 @@
+"""Degrade-gracefully shim around `hypothesis`.
+
+The property tests use a tiny subset of hypothesis (`@given` with
+floats / integers / booleans / sampled_from strategies plus
+`@settings(max_examples=..., deadline=None)`). When hypothesis is
+installed, this module re-exports the real thing. When it is not
+(offline CI images), `@given` degrades to a deterministic fixed-sample
+`pytest.mark.parametrize` sweep drawn from a seeded PRNG — weaker than
+real property search, but the invariants still get exercised and the
+suite collects everywhere.
+
+Usage in tests:
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline fallback
+    import random
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _FIXED_EXAMPLES = 10  # fixed sweep size (max_examples is best-effort)
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rnd: random.Random):
+            return self._draw(rnd)
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies` spelling
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+    def settings(*args, **kwargs):
+        """No-op decorator (deadline / max_examples are hypothesis-only)."""
+
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        """Fixed-sample stand-in: parametrize over deterministic draws."""
+        names = sorted(strategies)
+        rnd = random.Random(0x51A)
+        samples = [tuple(strategies[n].draw(rnd) for n in names)
+                   for _ in range(_FIXED_EXAMPLES)]
+
+        def deco(fn):
+            return pytest.mark.parametrize(",".join(names), samples)(fn)
+
+        return deco

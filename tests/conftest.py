@@ -10,6 +10,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import jax
 import pytest
 
+# Modules dominated by subprocess / multi-device / end-to-end runs; the
+# CI split (scripts/ci.sh) runs them after the fast numerics tier.
+SLOW_MODULES = {"test_distributed", "test_system", "test_fault_tolerance"}
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: subprocess / end-to-end tests (scripts/ci.sh "
+        "runs them in a second pass after the fast tier)")
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.module.__name__ in SLOW_MODULES:
+            item.add_marker(pytest.mark.slow)
+
 
 @pytest.fixture(scope="session")
 def rng():

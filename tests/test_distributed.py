@@ -15,7 +15,11 @@ def _run(code: str, devices: int = 8) -> str:
     env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
            "PYTHONPATH": f"{ROOT}/src:{ROOT}",
            "PATH": "/usr/bin:/bin:/usr/local/bin",
-           "HOME": "/root"}
+           "HOME": "/root",
+           # fake-device children must never try to init a real
+           # accelerator (stripped env + installed libtpu hangs on TPU
+           # metadata discovery; host-device fakes need the cpu platform)
+           "JAX_PLATFORMS": "cpu"}
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env,
                          timeout=560)
@@ -99,6 +103,7 @@ def test_dryrun_cell_compiles_on_8_devices():
         from repro.launch.dryrun import build_cell
         from repro.launch.mesh import make_host_mesh
         from repro.roofline.analysis import collective_bytes
+        from repro.roofline.hlo_cost import xla_cost_analysis
 
         cfg = get_arch("qwen3-1.7b").smoke()
         shape = get_shape("train_4k", smoke=True)
@@ -107,7 +112,7 @@ def test_dryrun_cell_compiles_on_8_devices():
         with mesh:
             c = jax.jit(fn, in_shardings=in_sh,
                         out_shardings=out_sh).lower(*args).compile()
-            cost = c.cost_analysis()
+            cost = xla_cost_analysis(c)
             coll = collective_bytes(c.as_text())
         assert cost.get("flops", 0) > 0
         assert coll["count"] >= 0

@@ -4,10 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.core import SLAConfig, build_lut, compute_mask, predict_pc
-from repro.core.masks import block_valid, build_col_lut, classify_blocks
+from repro.core import SLAConfig, build_lut, build_col_lut, compute_mask, \
+    predict_pc
+from repro.core.masks import block_valid, classify_blocks
 
 
 def _qk(seed, b=1, h=2, n=128, d=16):

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.roofline.hlo_cost import analyze
+from repro.roofline.hlo_cost import analyze, xla_cost_analysis
 from repro.roofline.analysis import roofline_terms
 
 
@@ -22,7 +22,7 @@ def test_scan_flops_scaled_by_trip_count():
     expect = 8 * 2 * 128**3
     assert abs(res["flops"] - expect) / expect < 0.05
     # XLA's own analysis undercounts the same program ~8x
-    xla = jax.jit(scanned).lower(x).compile().cost_analysis()["flops"]
+    xla = xla_cost_analysis(jax.jit(scanned).lower(x).compile())["flops"]
     assert res["flops"] > 6 * xla
 
 
@@ -74,6 +74,7 @@ def test_roofline_terms_pick_dominant():
     assert t3["dominant"] == "collective_s"
 
 
+@pytest.mark.slow
 def test_collectives_parsed_and_scaled(tmp_path):
     """Collective inside a scan body is multiplied by the trip count."""
     import subprocess, sys, textwrap, pathlib
@@ -82,8 +83,12 @@ def test_collectives_parsed_and_scaled(tmp_path):
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.roofline.hlo_cost import analyze
-        mesh = jax.make_mesh((4,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        try:
+            from jax.sharding import AxisType
+            mesh = jax.make_mesh((4,), ("d",),
+                                 axis_types=(AxisType.Auto,))
+        except ImportError:
+            mesh = jax.make_mesh((4,), ("d",))
         w = jnp.ones((64, 64))
         def f(x):
             def body(c, _):
@@ -103,7 +108,11 @@ def test_collectives_parsed_and_scaled(tmp_path):
         [sys.executable, "-c", code],
         env={"XLA_FLAGS": "--xla_force_host_platform_device_count=4",
              "PYTHONPATH": f"{root}/src", "HOME": "/root",
-             "PATH": "/usr/bin:/bin"},
+             "PATH": "/usr/bin:/bin",
+             # fake-device test must never try to init a real accelerator
+             # (a stripped env + installed libtpu hangs on TPU metadata;
+             # host-device fakes need the cpu platform)
+             "JAX_PLATFORMS": "cpu"},
         capture_output=True, text=True, timeout=300)
     assert out.returncode == 0, out.stderr[-2000:]
     coll, flops = out.stdout.split("COLL")[1].split()

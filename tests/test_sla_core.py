@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SLAConfig, compute_mask, sla_attention, sla_init
+from repro.core import (SLAConfig, compute_mask, plan_attention,
+                        sla_attention, sla_init)
 from repro.core import reference as ref
 from repro.core.block_sparse_xla import sla_forward_gather
 from repro.core.phi import PHI_KINDS, phi
@@ -47,9 +48,9 @@ def test_gather_path_matches_reference():
         cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25,
                         kl_frac=0.25, causal=causal)
         qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
-        mc = compute_mask(q, k, cfg)
-        og = sla_forward_gather(q, k, v, qp, kp, mc, cfg)
-        orf = ref.sla_forward_reference(q, k, v, qp, kp, mc, cfg)
+        plan = plan_attention(q, k, cfg)
+        og = sla_forward_gather(q, k, v, qp, kp, plan, cfg)
+        orf = ref.sla_forward_reference(q, k, v, qp, kp, plan.mc, cfg)
         np.testing.assert_allclose(np.asarray(og[0]), np.asarray(orf[0]),
                                    atol=2e-5)
         np.testing.assert_allclose(np.asarray(og[1]), np.asarray(orf[1]),
