@@ -11,7 +11,10 @@ No GPU/TPU in this container, so four complementary measurements:
   (d) MEASURED plan-amortized speedup: planning (pool -> P_c -> top-k ->
       LUTs) vs execution on a fixed plan, and the per-step time when one
       plan is reused for K denoising steps
-      (SLAConfig.plan_refresh_interval; DESIGN.md "Plan/execute split").
+      (SLAConfig.plan_refresh_interval; DESIGN.md "Plan/execute split");
+  (e) MEASURED fixed-K vs drift-adaptive refresh on a small DiT sampling
+      run: re-plan counts, retained-mass traces, and per-step wall time
+      for each policy (DESIGN.md "Plan lifetime & drift").
 """
 import time
 
@@ -19,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (SLAConfig, compute_mask, plan_attention,
-                        sla_attention, sla_init)
+                        resolve, sla_attention, sla_init)
 from repro.core.flops import full_attention_flops, sla_flops
 from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
 
@@ -36,7 +39,7 @@ def _time(fn, *args, reps=5):
     return (time.time() - t0) / reps * 1e6  # us
 
 
-def measured_cpu(n=2048, d=64, h=4):
+def measured_cpu(n=2048, d=64, h=4, backend="gather"):
     rng = jax.random.PRNGKey(0)
     q, k, v = (jax.random.normal(r, (1, h, n, d), jnp.bfloat16)
                for r in jax.random.split(rng, 3))
@@ -46,13 +49,14 @@ def measured_cpu(n=2048, d=64, h=4):
     full_fn = jax.jit(lambda q, k, v: sla_attention(
         None, q, k, v, cfg.replace(mode="full")))
     sla_fn = jax.jit(lambda q, k, v: sla_attention(
-        params, q, k, v, cfg, backend="gather"))
+        params, q, k, v, cfg, backend=backend))
     t_full = _time(full_fn, q, k, v)
     t_sla = _time(sla_fn, q, k, v)
     return t_full, t_sla
 
 
-def measured_plan_amortization(n=2048, d=64, h=4, refresh=(1, 4, 8)):
+def measured_plan_amortization(n=2048, d=64, h=4, refresh=(1, 4, 8),
+                               backend="gather"):
     """Plan/execute split timings: planning cost vs execution cost, and
     the amortized per-step attention time when one plan serves K steps."""
     rng = jax.random.PRNGKey(0)
@@ -64,11 +68,54 @@ def measured_plan_amortization(n=2048, d=64, h=4, refresh=(1, 4, 8)):
     plan_fn = jax.jit(lambda q, k: plan_attention(q, k, cfg))
     plan = jax.block_until_ready(plan_fn(q, k))
     exec_fn = jax.jit(lambda q, k, v, plan: sla_attention(
-        params, q, k, v, cfg, backend="gather", plan=plan))
+        params, q, k, v, cfg, backend=backend, plan=plan))
     t_plan = _time(lambda q, k: plan_fn(q, k).mc, q, k)
     t_exec = _time(exec_fn, q, k, v, plan)
     per_step = {kk: t_plan / kk + t_exec for kk in refresh}
     return t_plan, t_exec, per_step
+
+
+def measured_refresh_policies(num_steps=8, backend="gather",
+                              thresholds=(0.02, 0.1), fixed_k=(1, 4)):
+    """Fixed-K vs drift-adaptive refresh on a small DiT sampling run:
+    per-policy re-plan counts, retained-mass traces, per-step wall time
+    (DESIGN.md "Plan lifetime & drift")."""
+    from repro.configs.base import ArchConfig
+    from repro.models import dit
+
+    cfg = ArchConfig(
+        name="dit-fig6", family="dit", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=4, head_dim=32, d_ff=256, vocab_size=0,
+        patch_dim=8, cross_attn=False, attention_kind="sla",
+        sla=SLAConfig(block_q=32, block_kv=32, kh_frac=0.25, kl_frac=0.25))
+    params = dit.init(jax.random.PRNGKey(0), cfg)
+    # zero-init output head -> zero velocity -> zero drift; give the
+    # sampler a real trajectory so the policies have something to track
+    params["patch_out"] = jax.random.normal(
+        jax.random.PRNGKey(7), params["patch_out"].shape) * 0.5
+    noise = jax.random.normal(jax.random.PRNGKey(1), (1, 512, 8))
+
+    out = {}
+    for kk in fixed_k:
+        fn = jax.jit(lambda x, kk=kk: dit.sample(
+            params, cfg, x, num_steps=num_steps, backend=backend,
+            refresh_mode="fixed", refresh_interval=kk, return_trace=True))
+        _, trace = jax.block_until_ready(fn(noise))
+        t_us = _time(lambda x: fn(x)[0], noise) / num_steps
+        out[f"fixed_k{kk}"] = dict(
+            replans=int(trace["replan_count"].sum()), retention=1.0,
+            step_us=t_us)
+    for thr in thresholds:
+        fn = jax.jit(lambda x, t: dit.sample(
+            params, cfg, x, num_steps=num_steps, backend=backend,
+            refresh_mode="adaptive", drift_threshold=t, return_trace=True))
+        tj = jnp.float32(thr)
+        _, trace = jax.block_until_ready(fn(noise, tj))
+        t_us = _time(lambda x: fn(x, tj)[0], noise) / num_steps
+        out[f"adaptive_thr{thr}"] = dict(
+            replans=int(trace["replan_count"].sum()),
+            retention=float(trace["retention"].mean()), step_us=t_us)
+    return out
 
 
 def tpu_projection():
@@ -84,9 +131,10 @@ def tpu_projection():
     return t_full * 1e6, t_sla * 1e6
 
 
-def run():
+def run(backend="gather"):
+    backend = resolve(backend)  # unknown backend= fails loudly, up front
     rows = []
-    t_full_cpu, t_sla_cpu = measured_cpu()
+    t_full_cpu, t_sla_cpu = measured_cpu(backend=backend)
     rows.append(("fig6.cpu_measured.full_us", t_full_cpu,
                  round(t_full_cpu, 1)))
     rows.append(("fig6.cpu_measured.sla_us", t_sla_cpu,
@@ -106,7 +154,7 @@ def run():
     rows.append(("fig6.e2e_projected_speedup_x", 0, round(e2e, 2)))
     rows.append(("fig6.paper_e2e_speedup_x", 0, 2.2))
     # (d) plan-amortized speedup across denoising steps
-    t_plan, t_exec, per_step = measured_plan_amortization()
+    t_plan, t_exec, per_step = measured_plan_amortization(backend=backend)
     rows.append(("fig6.plan_us", t_plan, round(t_plan, 1)))
     rows.append(("fig6.execute_us", t_exec, round(t_exec, 1)))
     base = per_step[1]
@@ -115,9 +163,22 @@ def run():
                      round(t, 1)))
         rows.append((f"fig6.plan_amortized.refresh_{kk}.speedup_x", t,
                      round(base / t, 3)))
+    # (e) fixed-K vs drift-adaptive refresh policies on a DiT sampler
+    for name, m in measured_refresh_policies(backend=backend).items():
+        rows.append((f"fig6.refresh.{name}.replans", m["replans"],
+                     m["replans"]))
+        rows.append((f"fig6.refresh.{name}.retained_mass", m["retention"],
+                     round(m["retention"], 4)))
+        rows.append((f"fig6.refresh.{name}.step_us", m["step_us"],
+                     round(m["step_us"], 1)))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="gather",
+                    help="SLA execution backend (core.backends registry)")
+    args = ap.parse_args()
+    for r in run(backend=args.backend):
         print(",".join(str(x) for x in r))

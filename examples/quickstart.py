@@ -9,14 +9,15 @@ paper's operating point, agreement between the three execution paths
 import jax
 import jax.numpy as jnp
 
-from repro.core import (SLAConfig, compute_mask, plan_attention,
+from repro.core import (SLAConfig, compute_mask, plan_attention, resolve,
                         sla_attention, sla_init, sparsity_stats, flops)
 from repro.core.phi import phi
 from repro.kernels.ops import sla_attention_core
 from repro.kernels.ref import sla_attention_core_reference
 
 
-def main():
+def main(backend: str = "gather"):
+    backend = resolve(backend)  # unknown backend= fails loudly, up front
     rng = jax.random.PRNGKey(0)
     B, H, N, D = 1, 4, 1024, 64
     cfg = SLAConfig(block_q=64, block_kv=64, kh_frac=0.05, kl_frac=0.10,
@@ -53,7 +54,8 @@ def main():
 
     # 4. everything is differentiable (the paper's fine-tuning mode)
     def loss(p, q):
-        return jnp.sum(sla_attention(p, q, k, v, cfg) ** 2)
+        return jnp.sum(sla_attention(p, q, k, v, cfg,
+                                     backend=backend) ** 2)
 
     gp, gq = jax.grad(loss, argnums=(0, 1))(params, q)
     print("grad norms: proj", float(jnp.linalg.norm(gp["proj"])),
@@ -61,4 +63,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="gather",
+                    help="SLA execution backend (core.backends registry)")
+    main(backend=ap.parse_args().backend)

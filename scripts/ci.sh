@@ -2,8 +2,9 @@
 # Tier-1 CI: fast tests first (fail fast on core numerics), then the
 # slow subprocess/distributed suites. Mirrors ROADMAP.md "Tier-1 verify".
 #
-#   scripts/ci.sh            # full split run
-#   scripts/ci.sh --fast     # fast tier only
+#   scripts/ci.sh                 # full split run
+#   scripts/ci.sh --fast          # fast tier only
+#   scripts/ci.sh --conformance   # cross-backend conformance matrix only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,6 +14,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 PYTEST=(python -m pytest -q -p no:cacheprovider)
+
+if [[ "${1:-}" == "--conformance" ]]; then
+    # The backend-parity matrix (backends x dtypes x causal x
+    # fresh/reused plan) from tests/test_conformance.py, standalone:
+    # the cheap gate for kernel/backend changes.
+    echo "=== conformance matrix (backends x dtypes x plans) ==="
+    "${PYTEST[@]}" -x tests/test_conformance.py
+    exit 0
+fi
 
 echo "=== tier 1 / fast (core numerics, plans, kernels) ==="
 "${PYTEST[@]}" -x -m "not slow"

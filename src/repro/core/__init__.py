@@ -11,6 +11,7 @@ from repro.core.backends import (
     execute,
     get_backend,
     register_backend,
+    resolve,
 )
 from repro.core.config import SLAConfig
 from repro.core.masks import (
@@ -27,7 +28,10 @@ from repro.core.plan import (
     build_col_lut,
     build_lut,
     plan_attention,
+    plan_drift,
     plan_from_mask,
+    plan_retention,
+    refresh_plan,
 )
 from repro.core.sla import sla_attention, sla_init
 from repro.core import reference, flops
@@ -37,7 +41,9 @@ __all__ = [
     "pool_blocks", "predict_pc", "classify_blocks", "compute_mask",
     "expand_mask", "sparsity_stats",
     "SLAPlan", "plan_attention", "plan_from_mask",
+    "plan_drift", "plan_retention", "refresh_plan",
     "build_lut", "build_col_lut",
     "execute", "get_backend", "register_backend", "available_backends",
+    "resolve",
     "sla_attention", "sla_init", "reference", "flops",
 ]

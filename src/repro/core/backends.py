@@ -49,14 +49,24 @@ def register_backend(name: str) -> Callable[[BackendFn], BackendFn]:
     return deco
 
 
-def get_backend(name: str) -> BackendFn:
+def resolve(name: str) -> str:
+    """Canonical backend name for `name` (resolving legacy aliases).
+
+    The ONE validation/error path for stringly-typed backend selection:
+    drivers, benchmarks, and examples call this at entry so an unknown
+    `backend=` fails loudly up front instead of silently falling back
+    (or failing deep inside a jit trace)."""
     key = _ALIASES.get(name, name)
-    try:
-        return _BACKENDS[key]
-    except KeyError:
+    if key not in _BACKENDS:
         raise ValueError(
             f"unknown SLA backend {name!r}; available: "
-            f"{sorted(_BACKENDS)}") from None
+            f"{sorted(_BACKENDS)} (aliases: "
+            f"{ {a: t for a, t in sorted(_ALIASES.items())} })")
+    return key
+
+
+def get_backend(name: str) -> BackendFn:
+    return _BACKENDS[resolve(name)]
 
 
 def available_backends() -> Tuple[str, ...]:
@@ -109,6 +119,7 @@ def execute(
 
     Returns (B, H, N, D) in q.dtype.
     """
+    backend = resolve(backend)  # fail loudly even in plan-free modes
     in_dtype = q.dtype
     h = q.shape[1]
     k = _repeat_kv(k, h)

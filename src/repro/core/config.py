@@ -42,7 +42,18 @@ class SLAConfig:
         "Plan/execute split"): during diffusion sampling, recompute the
         per-layer SLAPlan every this-many denoising steps and reuse it in
         between (DiT block-sparsity patterns are stable across adjacent
-        timesteps). 1 = plan every step (exact paper behavior).
+        timesteps). 1 = plan every step (exact paper behavior). Only
+        consulted when plan_refresh_mode == "fixed".
+      plan_refresh_mode: "fixed" re-plans on the static
+        plan_refresh_interval schedule; "adaptive" measures plan drift
+        (core/plan.plan_drift — the critical-mass retention of the
+        reused structure) every step and re-plans a layer only when its
+        drift reaches plan_drift_threshold (DESIGN.md "Plan lifetime &
+        drift").
+      plan_drift_threshold: drift level (1 - retention, in [0, 1]) at
+        which an adaptive refresh rebuilds the plan. 0.0 re-plans every
+        step (exact paper behavior); 1.0 never re-plans after the first
+        (blind reuse).
     """
 
     block_q: int = 64
@@ -57,6 +68,8 @@ class SLAConfig:
     proj_init: str = "zeros"
     col_capacity_factor: Optional[float] = 2.0
     plan_refresh_interval: int = 1
+    plan_refresh_mode: str = "fixed"
+    plan_drift_threshold: float = 0.1
     window: int = 0  # sliding-window constraint in TOKENS (0 = none);
     #                  applied at block granularity: out-of-window blocks are
     #                  forced negligible (exact-zero weight under SWA).

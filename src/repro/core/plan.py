@@ -27,7 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import SLAConfig
-from repro.core.masks import compute_mask
+from repro.core.masks import classify_blocks, compute_mask, predict_pc
+
+EPS = 1e-12
 
 
 @jax.tree_util.register_dataclass
@@ -163,3 +165,104 @@ def plan_attention(
         k = jnp.repeat(k, h // k.shape[1], axis=1)
     mc = compute_mask(q, k, cfg, scale)
     return plan_from_mask(mc, cfg)
+
+
+# ---------------------------------------------------------------------------
+# plan lifetime: drift measurement + adaptive refresh
+# (DESIGN.md "Plan lifetime & drift")
+# ---------------------------------------------------------------------------
+def plan_retention(
+    plan: SLAPlan, q: jax.Array, k: jax.Array, cfg: SLAConfig,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Critical-mass retention of a (possibly stale) plan at (q, k).
+
+    Recomputes the pooled compressed map P_c for the *current* (q, k)
+    (cheap: O(T^2) in blocks, not tokens) and measures what fraction of
+    the P_c mass a fresh critical set would capture is still covered by
+    the stale plan's critical set:
+
+        r = sum(P_c * [mc_stale == +1]) / sum(P_c * [mc_fresh == +1])
+
+    clipped to [0, 1]. r == 1.0 exactly when (q, k) still classify to
+    the plan's structure; r decays toward 0 as the denoising trajectory
+    (or prefill content) moves away from the state the plan was built
+    on. Drift is `1 - r` (see `plan_drift`).
+
+    Gradient-stopped like planning itself. Returns (B, H) float32.
+    """
+    return _retention_and_fresh_mc(plan, q, k, cfg, scale)[0]
+
+
+def _retention_and_fresh_mc(
+    plan: SLAPlan, q: jax.Array, k: jax.Array, cfg: SLAConfig,
+    scale: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Retention (B, H) plus the fresh classification M_c it was measured
+    against — `refresh_plan` rebuilds from the latter so a drift-triggered
+    re-plan never recomputes the pool/P_c/top-k front half."""
+    h = q.shape[1]
+    if k.shape[1] != h:
+        assert h % k.shape[1] == 0
+        k = jnp.repeat(k, h // k.shape[1], axis=1)
+    q = jax.lax.stop_gradient(q)
+    k = jax.lax.stop_gradient(k)
+    pc = predict_pc(q, k, cfg, scale)  # (B, H, Tm, Tn) f32
+    if pc.shape[-2:] != plan.mc.shape[-2:]:
+        raise ValueError(
+            f"stale SLAPlan: plan is for {plan.mc.shape[-2:]} blocks but "
+            f"(q, k) pool to {pc.shape[-2:]} — shapes must match to "
+            f"measure drift")
+    stale = jnp.sum(pc * (plan.mc == 1), axis=(-2, -1))
+    mc_fresh = classify_blocks(pc, cfg)
+    fresh = jnp.sum(pc * (mc_fresh == 1), axis=(-2, -1))
+    r = stale / jnp.maximum(fresh, EPS)
+    return jnp.clip(r, 0.0, 1.0), mc_fresh
+
+
+def plan_drift(
+    plan: SLAPlan, q: jax.Array, k: jax.Array, cfg: SLAConfig,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Plan drift `1 - plan_retention(...)` in [0, 1], shape (B, H).
+
+    0 means the reused plan still captures everything a fresh plan
+    would; 1 means the stale critical set covers none of the current
+    P_c mass. `SLAConfig.plan_drift_threshold` gates re-planning on
+    this value (re-plan when drift >= threshold)."""
+    return 1.0 - plan_retention(plan, q, k, cfg, scale)
+
+
+def refresh_plan(
+    plan: SLAPlan, q: jax.Array, k: jax.Array, cfg: SLAConfig,
+    threshold, scale: Optional[float] = None,
+) -> Tuple[SLAPlan, jax.Array, jax.Array]:
+    """Drift-gated re-plan: keep `plan` while it retains critical mass.
+
+    Measures `plan_drift` (reduced with max over batch/heads — one
+    over-drifted head forces the re-plan, the conservative choice) and
+    rebuilds the plan under `lax.cond` when drift >= threshold, so the
+    planning pipeline only runs when the structure has actually moved
+    and the whole decision stays jit-traceable with static shapes.
+
+    `threshold` may be a python float or a traced scalar:
+      0.0 -> re-plan on every call (exact paper behavior),
+      1.0 -> never re-plan after the first (blind reuse).
+
+    Returns (plan', retention_scalar f32, replanned bool).
+    """
+    r, mc_fresh = _retention_and_fresh_mc(plan, q, k, cfg, scale)
+    retention = jnp.min(r)
+    # threshold >= 1.0 means "never", even at the clipped drift == 1.0
+    # extreme — the docs' blind-reuse contract beats the >= comparison
+    replanned = jnp.logical_and((1.0 - retention) >= threshold,
+                                jnp.asarray(threshold) < 1.0)
+    # the drift metric already classified the fresh structure; the
+    # rebuild only derives LUTs from it (and is guaranteed to match the
+    # classification the decision was based on)
+    new_plan = jax.lax.cond(
+        replanned,
+        lambda ops: plan_from_mask(ops[0], cfg),
+        lambda ops: ops[1],
+        (mc_fresh, plan))
+    return new_plan, retention, replanned

@@ -9,6 +9,11 @@ Usage:
     plan = plan_attention(q, k, cfg)
     out = sla_attention(params, q, k, v, cfg, plan=plan)
 
+    # drift-gated refresh (DESIGN.md "Plan lifetime & drift"): keep the
+    # plan while it retains critical mass, rebuild when it decays:
+    plan, retention, replanned = refresh_plan(plan, q, k, cfg,
+                                              cfg.plan_drift_threshold)
+
 Modes (cfg.mode):
   "sla"          O = O^s + Proj(O^l)                      (paper, Eq. 6)
   "sparse_only"  O = O^s                                   (Table 2 baseline)
@@ -29,7 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import backends
 from repro.core.config import SLAConfig
-from repro.core.plan import SLAPlan
+from repro.core.plan import SLAPlan, refresh_plan  # noqa: F401 — re-export
 
 Params = Dict[str, jax.Array]
 

@@ -25,7 +25,20 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="gather",
+                    help="SLA execution backend (core.backends registry)")
+    ap.add_argument("--plan-reuse", default="off",
+                    choices=["off", "adaptive"],
+                    help="reuse SLA prefill plans across request chunks, "
+                         "refreshing on measured drift")
+    ap.add_argument("--drift-threshold", type=float, default=None,
+                    help="re-plan a layer when its plan drift "
+                         "(1 - retained critical mass) reaches this "
+                         "(default: cfg.sla.plan_drift_threshold)")
     args = ap.parse_args(argv)
+
+    from repro.core import backends as backend_registry
+    backend_registry.resolve(args.backend)  # unknown names fail here, loudly
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -40,13 +53,21 @@ def main(argv=None):
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
     engine = ServingEngine(cfg, params, batch_size=args.batch,
-                           max_len=args.prompt_len + args.max_new + 8)
+                           max_len=args.prompt_len + args.max_new + 8,
+                           backend=args.backend,
+                           plan_reuse=args.plan_reuse,
+                           drift_threshold=args.drift_threshold)
     t0 = time.time()
     done = engine.run(reqs)
     st = engine.stats
     print(f"{len(done)} requests in {time.time()-t0:.1f}s | "
           f"prefill {st.prefill_tokens} tok / {st.prefill_s:.2f}s | "
           f"decode {st.decode_tokens} tok / {st.decode_s:.2f}s")
+    if args.plan_reuse != "off":
+        print(f"plan reuse: {st.plan_builds} built, {st.plan_reuses} "
+              f"reused, {st.plan_replans} drift re-plans | retention "
+              f"{st.last_retention:.3f} (threshold: drift >= "
+              f"{engine.drift_threshold})")
     return done
 
 

@@ -70,7 +70,8 @@ def forward(params, cfg: ArchConfig, latents, t,
             cond: Optional[jax.Array] = None,
             compute_dtype=jnp.bfloat16, backend: str = "gather",
             sla_mode: Optional[str] = None,
-            plans=None, return_plans: bool = False):
+            plans=None, return_plans: bool = False,
+            drift_threshold=None):
     """latents: (B, N, patch_dim); t: (B,) diffusion time in [0,1];
     cond: (B, Lc, d) stub text embeddings. Returns velocity prediction
     with the same shape as latents.
@@ -82,7 +83,16 @@ def forward(params, cfg: ArchConfig, latents, t,
     `return_plans=True` to also return the per-layer SLAPlan pytree
     (leading axis = layer, stacked by the layer scan); pass that pytree
     back as `plans=` on a later denoising step to skip block planning
-    entirely. With plans given, this function performs zero planning."""
+    entirely. With plans given and drift_threshold=None, this function
+    performs zero planning.
+
+    Drift-adaptive refresh (DESIGN.md "Plan lifetime & drift"): with
+    `plans=` AND `drift_threshold=` (float or traced scalar), each
+    layer measures the retained critical mass of its reused plan
+    against the current (q, k) and re-plans under `lax.cond` only when
+    drift reaches the threshold — jit-traceable, static shapes. The
+    return value gains a trailing info dict
+    {"retention": (L,), "replanned": (L,)}."""
     x = jnp.einsum("bnp,pd->bnd", latents.astype(compute_dtype),
                    params["patch_in"].astype(compute_dtype))
     temb = jnp.einsum("be,ed->bd", _timestep_embedding(t * 1000.0),
@@ -100,9 +110,13 @@ def forward(params, cfg: ArchConfig, latents, t,
     # Self-attention needs a block plan only in the sparse SLA modes.
     plan_needed = (kind == "sla"
                    and sla_cfg.mode not in ("full", "linear_only"))
+    adaptive = (drift_threshold is not None and plans is not None
+                and plan_needed)
 
     def body(x, xs):
         p, layer_plan = xs
+        retention = jnp.float32(1.0)
+        replanned = jnp.bool_(False)
         mod = jnp.einsum("bd,de->be", temb, p["ada"].astype(temb.dtype))
         sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
         xn = rms_norm(x, p["ln1"]) * (1 + sc1[:, None]) + sh1[:, None]
@@ -114,6 +128,9 @@ def forward(params, cfg: ArchConfig, latents, t,
             .reshape(b, n, hkv, dh).transpose(0, 2, 1, 3)
         if plan_needed and layer_plan is None:
             layer_plan = plan_lib.plan_attention(q, k, sla_cfg)
+        elif adaptive:
+            layer_plan, retention, replanned = plan_lib.refresh_plan(
+                layer_plan, q, k, sla_cfg, drift_threshold)
         o = attention({"proj": p["sla_proj"]}, q, k, v, kind, sla_cfg,
                       causal=False, backend=backend,
                       plan=layer_plan if plan_needed else None)
@@ -139,54 +156,143 @@ def forward(params, cfg: ArchConfig, latents, t,
         g, u = jnp.split(hmid, 2, axis=-1)
         x = ctx.shard_residual(x + g2[:, None] * jnp.einsum(
             "bsf,fd->bsd", jax.nn.silu(g) * u, p["mlp_wo"].astype(x.dtype)))
-        return x, (layer_plan if return_plans and plan_needed else None)
+        ys = (layer_plan if return_plans and plan_needed else None,
+              (retention, replanned) if adaptive else None)
+        return x, ys
 
     # `plans=None` cannot ride through scan xs (no leading layer axis), so
     # the no-plan path scans params only and the body plans inline.
     if plans is None:
-        x, out_plans = jax.lax.scan(
+        x, (out_plans, drift_ys) = jax.lax.scan(
             ctx.maybe_remat(lambda x, p: body(x, (p, None))),
             x, params["layers"])
     else:
-        x, out_plans = jax.lax.scan(ctx.maybe_remat(body), x,
-                                    (params["layers"], plans))
+        x, (out_plans, drift_ys) = jax.lax.scan(
+            ctx.maybe_remat(body), x, (params["layers"], plans))
     x = rms_norm(x, params["ln_f"])
     out = jnp.einsum("bnd,dp->bnp", x, params["patch_out"].astype(x.dtype))
+    rets = (out,)
     if return_plans:
-        return out, out_plans
-    return out
+        rets += (out_plans,)
+    if adaptive:
+        rets += ({"retention": drift_ys[0], "replanned": drift_ys[1]},)
+    return rets if len(rets) > 1 else out
 
 
 def sample(params, cfg: ArchConfig, noise, *, num_steps: int = 8,
            cond: Optional[jax.Array] = None, compute_dtype=jnp.bfloat16,
            backend: str = "gather",
-           refresh_interval: Optional[int] = None) -> jax.Array:
+           refresh_interval: Optional[int] = None,
+           refresh_mode: Optional[str] = None,
+           drift_threshold=None,
+           return_trace: bool = False):
     """Euler rectified-flow sampler with cross-timestep plan reuse.
 
     Integrates dx/dt = v(x, t) from t=1 (noise, (B, N, patch_dim)) down
-    to t=0 over `num_steps` uniform steps. Every `refresh_interval`
-    steps (default: cfg.sla.plan_refresh_interval) the forward pass
-    re-plans each layer's block structure and the plans are reused for
-    the steps in between — block-sparsity patterns are stable across
-    adjacent denoising timesteps, so planning cost amortizes by ~1/K.
-    With refresh_interval >= num_steps, each layer plans exactly once.
+    to t=0 over `num_steps` uniform steps.
+
+    Plan refresh policy (`refresh_mode`, default
+    cfg.sla.plan_refresh_mode):
+
+    * "fixed": every `refresh_interval` steps (default
+      cfg.sla.plan_refresh_interval) the forward pass re-plans each
+      layer's block structure and the plans are reused in between —
+      block-sparsity patterns are stable across adjacent denoising
+      timesteps, so planning cost amortizes by ~1/K. With
+      refresh_interval >= num_steps, each layer plans exactly once.
+    * "adaptive": plan once on the first step, then carry
+      (x, plans) through a `lax.scan` over the remaining steps; each
+      layer measures the drift of its reused plan against the current
+      (q, k) and re-plans under `lax.cond` only when drift reaches
+      `drift_threshold` (default cfg.sla.plan_drift_threshold; may be a
+      traced scalar — one jit covers every threshold). The per-step
+      re-plan decision is data-dependent but fully jit-traceable: no
+      python-level branching inside the scanned body.
+
+    With `return_trace=True` also returns {"retention": (S-1, L),
+    "replanned": (S-1, L), "replan_count": (L,)} — counts exclude the
+    mandatory step-0 planning. In fixed mode the trace is the static
+    schedule (retention is reported as 1, unmeasured).
     """
-    k_refresh = (cfg.sla.plan_refresh_interval if refresh_interval is None
-                 else refresh_interval)
-    k_refresh = max(1, int(k_refresh))
+    mode = (cfg.sla.plan_refresh_mode if refresh_mode is None
+            else refresh_mode)
+    if mode not in ("fixed", "adaptive"):
+        raise ValueError(f"unknown plan_refresh_mode {mode!r}; "
+                         "expected 'fixed' or 'adaptive'")
     b = noise.shape[0]
     dt = 1.0 / num_steps
     x = noise
-    plans = None
-    for step in range(num_steps):
-        t = jnp.full((b,), 1.0 - step * dt, jnp.float32)
-        if step % k_refresh == 0:
-            vel, plans = forward(params, cfg, x, t, cond, compute_dtype,
-                                 backend, return_plans=True)
-        else:
-            vel = forward(params, cfg, x, t, cond, compute_dtype, backend,
-                          plans=plans)
-        x = x - dt * vel.astype(x.dtype)
+    nl = cfg.num_layers
+
+    def tvec(step):
+        """(B,) diffusion time for a python-int or traced step index."""
+        return (jnp.full((b,), 1.0, jnp.float32)
+                - jnp.asarray(step, jnp.float32) * dt)
+
+    def euler(x, vel):
+        return x - dt * vel.astype(x.dtype)
+
+    def static_trace(replan_flags):
+        """Trace dict for modes whose refresh schedule is static
+        (retention is reported as 1, unmeasured). Flags cover steps
+        1..num_steps-1 (step 0 always plans)."""
+        rep = (jnp.asarray(replan_flags, bool)[:, None]
+               .repeat(nl, 1).reshape(num_steps - 1, nl))
+        return {"retention": jnp.ones((num_steps - 1, nl)),
+                "replanned": rep,
+                "replan_count": jnp.sum(rep, axis=0)}
+
+    if mode == "fixed":
+        k_refresh = (cfg.sla.plan_refresh_interval
+                     if refresh_interval is None else refresh_interval)
+        k_refresh = max(1, int(k_refresh))
+        plans = None
+        for step in range(num_steps):
+            if step % k_refresh == 0:
+                vel, plans = forward(params, cfg, x, tvec(step), cond,
+                                     compute_dtype, backend,
+                                     return_plans=True)
+            else:
+                vel = forward(params, cfg, x, tvec(step), cond,
+                              compute_dtype, backend, plans=plans)
+            x = euler(x, vel)
+        if return_trace:
+            return x, static_trace([s % k_refresh == 0
+                                    for s in range(1, num_steps)])
+        return x
+
+    # adaptive: mandatory plan on step 0, then a scanned drift-gated loop
+    thr = (cfg.sla.plan_drift_threshold if drift_threshold is None
+           else drift_threshold)
+    plan_needed = (cfg.attention_kind == "sla"
+                   and cfg.sla.mode not in ("full", "linear_only"))
+    if not plan_needed:
+        # plan-free attention: nothing to refresh — plain Euler steps
+        for step in range(num_steps):
+            x = euler(x, forward(params, cfg, x, tvec(step), cond,
+                                 compute_dtype, backend))
+        if return_trace:
+            return x, static_trace([False] * (num_steps - 1))
+        return x
+
+    vel, plans = forward(params, cfg, x, tvec(0), cond, compute_dtype,
+                         backend, return_plans=True)
+    x = euler(x, vel)
+
+    def step_body(carry, step):
+        x, plans = carry
+        vel, plans, info = forward(params, cfg, x, tvec(step), cond,
+                                   compute_dtype, backend, plans=plans,
+                                   return_plans=True, drift_threshold=thr)
+        return (euler(x, vel), plans), (info["retention"],
+                                        info["replanned"])
+
+    (x, _), (rets, reps) = jax.lax.scan(
+        step_body, (x, plans), jnp.arange(1, num_steps))
+    if return_trace:
+        trace = {"retention": rets, "replanned": reps,
+                 "replan_count": jnp.sum(reps, axis=0)}
+        return x, trace
     return x
 
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import plan as plan_lib
 from repro.distributed import ctx
 from repro.models import moe as moe_lib
 from repro.models.common import (NEG_INF, attention, chunked_softmax_xent,
@@ -100,20 +101,37 @@ def _qkv(p, x, cfg: ArchConfig, positions):
     return q, k, v
 
 
-def _attn(p, x, kind, cfg: ArchConfig, positions, backend) -> Tuple[jax.Array,
-                                                                 jax.Array,
-                                                                 jax.Array]:
-    """Returns (attn_out (B,S,d), k_cache, v_cache)."""
+def _attn(p, x, kind, cfg: ArchConfig, positions, backend,
+          layer_plan=None, drift_threshold=None, want_plan=False):
+    """Returns (attn_out (B,S,d), k_cache, v_cache, plan, retention,
+    replanned).
+
+    Plan reuse for LM prefill (DESIGN.md "Plan lifetime & drift"):
+    `want_plan=True` with layer_plan=None plans inline and returns the
+    plan; a given `layer_plan` is reused — and, when `drift_threshold`
+    is set, refreshed under `lax.cond` when its retained critical mass
+    decays (same drift metric as the DiT sampler). The plan is built
+    outside the kind switch so it rides the layer scan with static
+    shapes even in mixed-kind stacks (non-SLA layers just carry it)."""
     b, s, _ = x.shape
     q, k, v = _qkv(p, x, cfg, positions)
     sla_cfg = cfg.sla
     if cfg.sliding_window:
         sla_cfg = dataclasses.replace(sla_cfg, window=cfg.sliding_window)
     sla_params = {"proj": p["sla_proj"]}
+    retention = jnp.float32(1.0)
+    replanned = jnp.bool_(False)
+    if want_plan or layer_plan is not None:
+        plan_cfg = dataclasses.replace(sla_cfg, causal=True)
+        if layer_plan is None:
+            layer_plan = plan_lib.plan_attention(q, k, plan_cfg)
+        elif drift_threshold is not None:
+            layer_plan, retention, replanned = plan_lib.refresh_plan(
+                layer_plan, q, k, plan_cfg, drift_threshold)
 
     def do_sla(q, k, v):
         return attention(sla_params, q, k, v, "sla", sla_cfg,
-                         causal=True, backend=backend)
+                         causal=True, backend=backend, plan=layer_plan)
 
     def do_full(q, k, v):
         return attention(None, q, k, v, "full", sla_cfg, causal=True)
@@ -139,7 +157,7 @@ def _attn(p, x, kind, cfg: ArchConfig, positions, backend) -> Tuple[jax.Array,
     out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
     out = jnp.einsum("bse,ed->bsd", out,
                      ctx.fsdp_gather(p["wo"].astype(x.dtype), "row"))
-    return out, k, v
+    return out, k, v, layer_plan, retention, replanned
 
 
 def _ffn(p, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
@@ -159,12 +177,21 @@ def _ffn(p, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
 def forward(params, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
             prefix_embeds: Optional[jax.Array] = None,
             compute_dtype=jnp.bfloat16, backend: str = "gather",
-            return_cache: bool = False):
+            return_cache: bool = False,
+            plans=None, return_plans: bool = False,
+            drift_threshold=None):
     """Returns hidden states (B, S, d); optionally the per-layer KV cache.
 
     VLM (cfg.frontend == "vision_stub"): prefix_embeds (B, P, d) are
     prepended to the token embeddings (patch positions share the rope
     position space, positions 0..P-1).
+
+    LM-prefill plan reuse (DESIGN.md "Plan lifetime & drift"): with
+    `return_plans=True` the per-layer SLAPlan stack rides out of the
+    layer scan; pass it back as `plans=` on a later same-shape prefill
+    to reuse the block structure, optionally with `drift_threshold=` to
+    refresh drifted layers under `lax.cond`. Return value order:
+    (x, aux[, caches][, plans][, drift info dict]).
     """
     emb = params["embed"]
     parts = []
@@ -176,25 +203,43 @@ def forward(params, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
     b, s, _ = x.shape
     positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
     kinds = layer_kinds(cfg)
+    want_plan = return_plans or plans is not None
+    adaptive = drift_threshold is not None and plans is not None
 
     def body(x, layer):
-        p, kind = layer
-        a, k, v = _attn(p, rms_norm(x, p["ln1"]), kind, cfg, positions, backend)
+        if plans is not None:
+            p, kind, layer_plan = layer
+        else:
+            (p, kind), layer_plan = layer, None
+        a, k, v, layer_plan, ret, rep = _attn(
+            p, rms_norm(x, p["ln1"]), kind, cfg, positions, backend,
+            layer_plan=layer_plan, drift_threshold=drift_threshold,
+            want_plan=want_plan)
         # constraining the block OUTPUT (pre-residual-add) turns the TP
         # boundary all-reduce into a reduce-scatter (half the wire bytes)
         x = ctx.shard_residual(x + ctx.shard_residual(a))
         f, aux = _ffn(p, rms_norm(x, p["ln2"]), cfg)
         x = ctx.shard_residual(x + ctx.shard_residual(f))
-        ys = (aux, (k, v)) if return_cache else (aux, None)
+        ys = (aux, (k, v) if return_cache else None,
+              layer_plan if want_plan else None,
+              (ret, rep) if adaptive else None)
         return x, ys
 
-    x, (auxs, caches) = jax.lax.scan(
-        ctx.maybe_remat(body), x, (params["layers"], kinds))
+    xs = (params["layers"], kinds)
+    if plans is not None:
+        xs = xs + (plans,)
+    x, (auxs, caches, out_plans, drift_ys) = jax.lax.scan(
+        ctx.maybe_remat(body), x, xs)
     x = rms_norm(x, params["ln_f"])
     aux = jnp.sum(auxs)
+    rets = (x, aux)
     if return_cache:
-        return x, aux, caches  # caches: (k (L,B,Hkv,S,Dh), v ...)
-    return x, aux
+        rets += (caches,)  # caches: (k (L,B,Hkv,S,Dh), v ...)
+    if return_plans:
+        rets += (out_plans,)
+    if adaptive:
+        rets += ({"retention": drift_ys[0], "replanned": drift_ys[1]},)
+    return rets
 
 
 def loss_fn(params, cfg: ArchConfig, batch: dict,
@@ -218,13 +263,23 @@ def loss_fn(params, cfg: ArchConfig, batch: dict,
 # serving: prefill + single-token decode over a static-size KV cache
 # --------------------------------------------------------------------------
 def prefill(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
-            backend: str = "gather"):
-    """Run the prompt; returns (last_hidden (B, d), cache dict)."""
-    x, _, (kc, vc) = forward(params, cfg, tokens,
-                             compute_dtype=compute_dtype, backend=backend,
-                             return_cache=True)
+            backend: str = "gather", plans=None, drift_threshold=None,
+            return_plans: bool = False):
+    """Run the prompt; returns (last_hidden (B, d), cache dict).
+
+    Plan reuse across prefill chunks (serving): `return_plans=True`
+    additionally returns the per-layer SLAPlan stack; pass it back as
+    `plans=` (with `drift_threshold=` for drift-gated refresh) on the
+    next same-shape prefill chunk — the serving engine amortizes block
+    planning across the request stream this way. Return value order:
+    (last_hidden, cache[, plans][, drift info])."""
+    out = forward(params, cfg, tokens, compute_dtype=compute_dtype,
+                  backend=backend, return_cache=True, plans=plans,
+                  return_plans=return_plans,
+                  drift_threshold=drift_threshold)
+    x, (kc, vc) = out[0], out[2]
     cache = {"k": kc, "v": vc, "pos": jnp.int32(tokens.shape[1])}
-    return x[:, -1], cache
+    return (x[:, -1], cache) + out[3:]
 
 
 def decode_step(params, cfg: ArchConfig, token, cache,

@@ -6,6 +6,16 @@ kernel accelerates exactly this long-context prefill), then tokens are
 decoded until each request's budget. Slot-level finish masking lets short
 requests exit early (their logits keep computing but sampling freezes —
 the static-shape analogue of continuous batching).
+
+Prefill plan reuse (DESIGN.md "Plan lifetime & drift"): with
+`plan_reuse="adaptive"` the engine pads every prefill chunk to one
+static (batch, length) bucket, plans the per-layer SLA block structure
+once on the first chunk, and reuses it across subsequent chunks of the
+request stream — re-planning a layer only when the measured plan drift
+(1 - retained critical mass) reaches `drift_threshold`. Block-sparsity
+structure is dominated by positional/locality patterns, so consecutive
+prefill chunks share most of it; the drift metric catches the ones that
+don't.
 """
 from __future__ import annotations
 
@@ -36,12 +46,26 @@ class ServeStats:
     decode_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    # plan-reuse accounting (layer granularity; DESIGN.md "Plan
+    # lifetime & drift"): builds = first-chunk plans, replans =
+    # drift-triggered rebuilds, reuses = layers served by a stale plan.
+    plan_builds: int = 0
+    plan_replans: int = 0
+    plan_reuses: int = 0
+    last_retention: float = 1.0
 
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, batch_size: int = 4,
                  max_len: int = 512, greedy: bool = True,
-                 backend: str = "gather"):
+                 backend: str = "gather", plan_reuse: str = "off",
+                 drift_threshold: Optional[float] = None):
+        from repro.core import backends as backend_registry
+        backend = backend_registry.resolve(backend)  # fail loudly, early
+        if plan_reuse not in ("off", "adaptive"):
+            raise ValueError(
+                f"unknown plan_reuse mode {plan_reuse!r}; expected "
+                "'off' or 'adaptive'")
         self.cfg = cfg
         self.params = params
         self.mdl = registry.get_model(cfg)
@@ -49,19 +73,46 @@ class ServingEngine:
         self.max_len = max_len
         self.greedy = greedy
         self.backend = backend
+        self.plan_reuse = plan_reuse
+        self.drift_threshold = (cfg.sla.plan_drift_threshold
+                                if drift_threshold is None
+                                else float(drift_threshold))
         self.stats = ServeStats()
+        self._plans = None
+        self._bucket: Optional[int] = None  # static prefill (len) bucket
 
-        mdl, backend_ = self.mdl, backend
+        mdl, backend_, thr = self.mdl, backend, self.drift_threshold
+        if plan_reuse != "off":
+            import inspect
+            prefill_fn = getattr(mdl, "prefill", None)
+            if (prefill_fn is None or "plans" not in
+                    inspect.signature(prefill_fn).parameters):
+                raise ValueError(
+                    f"plan_reuse={plan_reuse!r} requires a model family "
+                    f"with plan-aware prefill (got family {cfg.family!r})")
 
         @jax.jit
         def _prefill(params, tokens):
             return mdl.prefill(params, cfg, tokens, backend=backend_)
 
         @jax.jit
+        def _prefill_plan(params, tokens):
+            return mdl.prefill(params, cfg, tokens, backend=backend_,
+                               return_plans=True)
+
+        @jax.jit
+        def _prefill_reuse(params, tokens, plans):
+            return mdl.prefill(params, cfg, tokens, backend=backend_,
+                               plans=plans, drift_threshold=thr,
+                               return_plans=True)
+
+        @jax.jit
         def _decode(params, token, cache):
             return mdl.decode_step(params, cfg, token, cache)
 
         self._prefill = _prefill
+        self._prefill_plan = _prefill_plan
+        self._prefill_reuse = _prefill_reuse
         self._decode = _decode
 
     def _grow_cache(self, cache):
@@ -77,22 +128,79 @@ class ServingEngine:
             return leaf
         return jax.tree_util.tree_map_with_path(pad, cache)
 
+    def _prefill_bucket(self, requests: List[Request]) -> int:
+        """Static prefill length shared by every chunk (plan-reuse mode):
+        the longest prompt rounded up to a whole number of SLA query
+        blocks, so reused plans always see the same block grid."""
+        block = max(self.cfg.sla.block_q, 1)
+        plen = max(len(r.prompt) for r in requests)
+        return max(block, ((plen + block - 1) // block) * block)
+
     def run(self, requests: List[Request]) -> List[Request]:
+        if self.plan_reuse != "off":
+            bucket = self._prefill_bucket(requests)
+            if self._bucket is None or bucket > self._bucket:
+                # a longer prompt grows the bucket; cached plans are for
+                # the old block grid, so they die with it
+                self._plans = None
+                self._bucket = bucket
+            budget = max(r.max_new_tokens for r in requests)
+            if self._bucket + budget > self.max_len:
+                # past this point decode would write beyond the cache and
+                # dynamic_update_slice would clamp onto the last slot —
+                # silent token corruption, so fail loudly instead
+                raise ValueError(
+                    f"max_len={self.max_len} cannot hold the prefill "
+                    f"bucket ({self._bucket} tokens — longest prompt "
+                    f"rounded up to sla.block_q={self.cfg.sla.block_q}) "
+                    f"plus {budget} decode tokens; raise max_len to >= "
+                    f"{self._bucket + budget}")
         done: List[Request] = []
         for i in range(0, len(requests), self.batch_size):
             group = requests[i: i + self.batch_size]
             done.extend(self._run_group(group))
         return done
 
+    def _run_prefill(self, toks: jnp.ndarray):
+        """Prefill one chunk, routing through the plan-reuse path when
+        enabled. Returns last_hidden, cache."""
+        if self.plan_reuse == "off":
+            return self._prefill(self.params, toks)
+        nl = self.cfg.num_layers
+        if self._plans is None:
+            last_hidden, cache, plans = self._prefill_plan(self.params,
+                                                           toks)
+            self.stats.plan_builds += nl
+        else:
+            last_hidden, cache, plans, info = self._prefill_reuse(
+                self.params, toks, self._plans)
+            replans = int(np.sum(np.asarray(info["replanned"])))
+            self.stats.plan_replans += replans
+            self.stats.plan_reuses += nl - replans
+            self.stats.last_retention = float(
+                np.min(np.asarray(info["retention"])))
+        self._plans = plans
+        return last_hidden, cache
+
     def _run_group(self, group: List[Request]) -> List[Request]:
         b = len(group)
-        plen = max(len(r.prompt) for r in group)
-        budget = max(r.max_new_tokens for r in group)
-        toks = np.zeros((b, plen), np.int32)
+        if self.plan_reuse == "off":
+            bpad, plen = b, max(len(r.prompt) for r in group)
+        else:
+            # one static (batch, len) bucket so every chunk shares the
+            # reused plans' shapes; surplus rows decode into the void
+            bpad, plen = self.batch_size, self._bucket
+        toks = np.zeros((bpad, plen), np.int32)
         for j, r in enumerate(group):
             toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
+        for j in range(b, bpad):
+            # surplus rows cycle real prompts: all-zero rows would feed
+            # the min-over-batch drift metric garbage (q, k) and force
+            # spurious re-plans on every partial chunk
+            toks[j] = toks[j % b]
+        budget = max(r.max_new_tokens for r in group)
         t0 = time.time()
-        last_hidden, cache = self._prefill(self.params, jnp.asarray(toks))
+        last_hidden, cache = self._run_prefill(jnp.asarray(toks))
         cache = self._grow_cache(cache)
         jax.block_until_ready(last_hidden)
         self.stats.prefill_tokens += b * plen

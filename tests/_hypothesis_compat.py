@@ -64,6 +64,8 @@ except ImportError:  # offline fallback
         rnd = random.Random(0x51A)
         samples = [tuple(strategies[n].draw(rnd) for n in names)
                    for _ in range(_FIXED_EXAMPLES)]
+        if len(names) == 1:  # parametrize wants scalars, not 1-tuples
+            samples = [s[0] for s in samples]
 
         def deco(fn):
             return pytest.mark.parametrize(",".join(names), samples)(fn)

@@ -1,0 +1,206 @@
+"""Cross-backend conformance matrix (ISSUE 2 satellite).
+
+One table-driven suite asserting that every execution backend
+(reference / gather / kernel-interpret) computes the same forward
+attention, across dtypes (f32 / bf16), causal / non-causal masks, and
+fresh vs reused (stale) plans — replacing the ad-hoc parity asserts
+that used to live in test_plan.py / test_kernels.py. Run standalone via
+`scripts/ci.sh --conformance`.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SLAConfig, get_backend, plan_attention, resolve,
+                        sla_attention, sla_init)
+from repro.core.phi import phi
+
+BACKENDS = ("reference", "gather", "kernel")
+DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+# Per-dtype tolerances: f32 disagreement is numerical noise; bf16 adds
+# ~3 decimal digits of input rounding on top.
+TOL = {"f32": dict(atol=5e-5, rtol=5e-5),
+       "bf16": dict(atol=5e-2, rtol=5e-2)}
+
+
+def _cfg(causal, phi_kind="softmax"):
+    return SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25,
+                     causal=causal, phi=phi_kind, proj_init="identity")
+
+
+def _case(seed, dtype, causal, plan_state, phi_kind="softmax",
+          b=1, h=2, n=128, d=16):
+    """Returns (plan, q, k, v, qp, kp, cfg) for one matrix cell.
+
+    plan_state "fresh": plan built from the very (q, k) being executed.
+    plan_state "reused": plan built from an earlier (q0, k0), then the
+    inputs move on — the cross-timestep / cross-chunk serving situation;
+    backends must still agree on the *stale* structure.
+    """
+    cfg = _cfg(causal, phi_kind)
+    rs = jax.random.split(jax.random.PRNGKey(seed), 6)
+    q0, k0 = (jax.random.normal(r, (b, h, n, d), dtype) for r in rs[:2])
+    plan = plan_attention(q0, k0, cfg)
+    if plan_state == "reused":
+        q = q0 + 0.3 * jax.random.normal(rs[2], q0.shape, dtype)
+        k = k0 + 0.3 * jax.random.normal(rs[3], k0.shape, dtype)
+    else:
+        q, k = q0, k0
+    v = jax.random.normal(rs[4], (b, h, n, d), dtype)
+    qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
+    return plan, q, k, v, qp, kp, cfg
+
+
+MATRIX = [
+    pytest.param(backend, dtype, causal, plan_state,
+                 id=f"{backend}-{dtype}-"
+                    f"{'causal' if causal else 'bidir'}-{plan_state}")
+    for backend in BACKENDS if backend != "reference"
+    for dtype in DTYPES
+    for causal in (False, True)
+    for plan_state in ("fresh", "reused")
+]
+
+
+@pytest.mark.parametrize("backend,dtype,causal,plan_state", MATRIX)
+def test_backend_forward_conformance(backend, dtype, causal, plan_state):
+    """(O^s, O^l) of every backend match the dense reference oracle."""
+    plan, q, k, v, qp, kp, cfg = _case(0, DTYPES[dtype], causal,
+                                       plan_state)
+    os_r, ol_r = get_backend("reference")(plan, q, k, v, qp, kp, cfg, None)
+    os_b, ol_b = get_backend(backend)(plan, q, k, v, qp, kp, cfg, None)
+    np.testing.assert_allclose(np.asarray(os_b, np.float32),
+                               np.asarray(os_r, np.float32),
+                               **TOL[dtype], err_msg=f"{backend} O^s")
+    np.testing.assert_allclose(np.asarray(ol_b, np.float32),
+                               np.asarray(ol_r, np.float32),
+                               **TOL[dtype], err_msg=f"{backend} O^l")
+
+
+@pytest.mark.parametrize("backend,dtype,causal,plan_state", MATRIX)
+def test_public_api_conformance(backend, dtype, causal, plan_state):
+    """Same matrix through the public sla_attention (Proj merge, Eq. 6)."""
+    plan, q, k, v, _, _, cfg = _case(1, DTYPES[dtype], causal, plan_state)
+    params = sla_init(jax.random.PRNGKey(0), q.shape[1], q.shape[-1], cfg)
+    out_r = sla_attention(params, q, k, v, cfg, backend="reference",
+                          plan=plan)
+    out_b = sla_attention(params, q, k, v, cfg, backend=backend, plan=plan)
+    np.testing.assert_allclose(np.asarray(out_b, np.float32),
+                               np.asarray(out_r, np.float32),
+                               **TOL[dtype], err_msg=backend)
+
+
+@pytest.mark.parametrize("phi_kind", ["elu1", "relu"])
+@pytest.mark.parametrize("backend", [b for b in BACKENDS
+                                     if b != "reference"])
+def test_phi_variant_conformance(backend, phi_kind):
+    """Linear-branch feature-map variants agree across backends (f32)."""
+    plan, q, k, v, qp, kp, cfg = _case(2, jnp.float32, False, "fresh",
+                                       phi_kind=phi_kind)
+    _, ol_r = get_backend("reference")(plan, q, k, v, qp, kp, cfg, None)
+    _, ol_b = get_backend(backend)(plan, q, k, v, qp, kp, cfg, None)
+    np.testing.assert_allclose(np.asarray(ol_b), np.asarray(ol_r),
+                               **TOL["f32"], err_msg=phi_kind)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_reused_plan_matches_fresh_when_inputs_unchanged(backend):
+    """If (q, k) have not moved, executing on a reused plan is exactly
+    executing on a fresh plan — the plan-reuse numerics contract."""
+    plan, q, k, v, _, _, cfg = _case(3, jnp.float32, False, "fresh")
+    params = sla_init(jax.random.PRNGKey(0), q.shape[1], q.shape[-1], cfg)
+    v2 = v + 0.25  # fresh values; the structure depends only on (q, k)
+    out_reused = sla_attention(params, q, k, v2, cfg, backend=backend,
+                               plan=plan)
+    out_fresh = sla_attention(params, q, k, v2, cfg, backend=backend)
+    np.testing.assert_allclose(np.asarray(out_reused),
+                               np.asarray(out_fresh), atol=1e-6)
+
+
+# Forward shape/block sweep (the coverage the old ad-hoc
+# test_kernels.test_fwd_matches_oracle carried): batch/head counts,
+# sequence lengths, head dims incl. tiny d=8, and both block sizes.
+SHAPE_SWEEP = [
+    # (b, h, n, d, dtype, causal, block)
+    (1, 1, 64, 16, jnp.float32, False, 16),
+    (2, 2, 128, 32, jnp.float32, True, 16),
+    (1, 2, 128, 64, jnp.float32, False, 32),
+    (2, 1, 256, 16, jnp.bfloat16, False, 32),
+    (1, 2, 128, 32, jnp.bfloat16, True, 16),
+    (1, 4, 128, 8, jnp.float32, True, 32),  # tiny head dim
+]
+
+
+@pytest.mark.parametrize("backend", [b for b in BACKENDS
+                                     if b != "reference"])
+@pytest.mark.parametrize("b,h,n,d,dtype,causal,block", SHAPE_SWEEP)
+def test_backend_shape_sweep(backend, b, h, n, d, dtype, causal, block):
+    cfg = SLAConfig(block_q=block, block_kv=block, kh_frac=0.25,
+                    kl_frac=0.25, causal=causal)
+    rs = jax.random.split(jax.random.PRNGKey(5), 3)
+    q, k, v = (jax.random.normal(r, (b, h, n, d), dtype) * 1.3
+               for r in rs)
+    qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
+    plan = plan_attention(q, k, cfg)
+    os_r, ol_r = get_backend("reference")(plan, q, k, v, qp, kp, cfg, None)
+    os_b, ol_b = get_backend(backend)(plan, q, k, v, qp, kp, cfg, None)
+    tol = TOL["f32" if dtype == jnp.float32 else "bf16"]
+    np.testing.assert_allclose(np.asarray(os_b, np.float32),
+                               np.asarray(os_r, np.float32), **tol,
+                               err_msg=f"{backend} O^s")
+    np.testing.assert_allclose(np.asarray(ol_b, np.float32),
+                               np.asarray(ol_r, np.float32), **tol,
+                               err_msg=f"{backend} O^l")
+
+
+def test_gqa_conformance():
+    """KV-head broadcast (GQA) agrees across backends via the public API."""
+    cfg = _cfg(False)
+    rs = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(rs[0], (1, 4, 128, 16))
+    k = jax.random.normal(rs[1], (1, 2, 128, 16))
+    v = jax.random.normal(rs[2], (1, 2, 128, 16))
+    params = sla_init(jax.random.PRNGKey(0), 4, 16, cfg)
+    plan = plan_attention(q, k, cfg)
+    out_r = sla_attention(params, q, k, v, cfg, backend="reference",
+                          plan=plan)
+    for backend in ("gather", "kernel"):
+        out_b = sla_attention(params, q, k, v, cfg, backend=backend,
+                              plan=plan)
+        np.testing.assert_allclose(np.asarray(out_b), np.asarray(out_r),
+                                   **TOL["f32"], err_msg=backend)
+
+
+# ---------------------------------------------------------------------------
+# loud failure on unknown backend names — one resolve() error path
+# ---------------------------------------------------------------------------
+def test_resolve_canonicalizes_and_fails_loudly():
+    assert resolve("gather") == "gather"
+    assert resolve("pallas") == "kernel"  # legacy alias
+    assert resolve("dense") == "reference"
+    with pytest.raises(ValueError, match="unknown SLA backend"):
+        resolve("cuda")
+
+
+def test_drivers_fail_loudly_on_unknown_backend():
+    """fig6 / quickstart / serving resolve the backend at entry — no
+    silent fallback, no deep-in-jit failure."""
+    import benchmarks.fig6_kernel_speed as fig6
+    import examples.quickstart as quickstart
+    with pytest.raises(ValueError, match="unknown SLA backend"):
+        fig6.run(backend="does-not-exist")
+    with pytest.raises(ValueError, match="unknown SLA backend"):
+        quickstart.main(backend="does-not-exist")
+    from repro.launch import serve
+    with pytest.raises(ValueError, match="unknown SLA backend"):
+        serve.main(["--arch", "qwen3-1.7b", "--smoke",
+                    "--backend", "does-not-exist"])
+    from repro.serving.engine import ServingEngine
+    from repro.configs import get_arch
+    with pytest.raises(ValueError, match="unknown SLA backend"):
+        ServingEngine(get_arch("qwen3-1.7b").smoke(), params=None,
+                      backend="does-not-exist")
+    with pytest.raises(ValueError, match="unknown plan_reuse"):
+        ServingEngine(get_arch("qwen3-1.7b").smoke(), params=None,
+                      plan_reuse="sometimes")

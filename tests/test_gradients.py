@@ -1,0 +1,121 @@
+"""Finite-difference gradient checks for the kernels/ops custom_vjp
+(ISSUE 2 satellite).
+
+Two layers of evidence, for both fresh and stale (reused) plans:
+  1. the hand-written custom_vjp matches core/reference.py autodiff on
+     the same plan, and
+  2. both match central finite differences of the loss itself.
+
+The stale-plan case is the load-bearing one for plan reuse: gradients
+must flow through *execution* on the fixed block structure, never
+through planning (the plan is a constant, as in the paper — TopK is not
+differentiated).
+
+Shapes are deliberately tiny (B=H=1, N=64, D=8) but the FD sweeps are
+O(#inputs x #directions) forward passes, so the module is marked slow
+(scripts/ci.sh runs it in the second tier).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SLAConfig, plan_attention, sla_attention, sla_init
+from repro.core.phi import phi
+from repro.kernels.ops import sla_attention_core
+from repro.kernels.ref import sla_attention_core_reference
+
+pytestmark = pytest.mark.slow
+
+EPS = 3e-2  # central-difference step (f32 sweet spot, calibrated)
+NAMES = ("q", "k", "v", "qp", "kp")
+
+
+def _setup(seed, stale):
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25)
+    b, h, n, d = 1, 1, 64, 8
+    rs = jax.random.split(jax.random.PRNGKey(seed), 8)
+    q, k, v = (jax.random.normal(r, (b, h, n, d)) for r in rs[:3])
+    plan = plan_attention(q, k, cfg)
+    if stale:
+        # the plan stays; the inputs move on (cross-timestep reuse)
+        q = q + 0.3 * jax.random.normal(rs[5], q.shape)
+        k = k + 0.3 * jax.random.normal(rs[6], k.shape)
+    qp, kp = phi(q, cfg.phi), phi(k, cfg.phi)
+    ws = jax.random.normal(rs[3], (b, h, n, d))
+    wl = jax.random.normal(rs[4], (b, h, n, d))
+
+    def loss_kernel(q, k, v, qp, kp):
+        o_s, o_l = sla_attention_core(q, k, v, qp, kp, plan, cfg)
+        return jnp.sum(o_s * ws) + jnp.sum(o_l * wl)
+
+    def loss_reference(q, k, v, qp, kp):
+        o_s, o_l = sla_attention_core_reference(q, k, v, qp, kp, plan.mc,
+                                                cfg)
+        return jnp.sum(o_s * ws) + jnp.sum(o_l * wl)
+
+    return (q, k, v, qp, kp), plan, cfg, loss_kernel, loss_reference
+
+
+@pytest.mark.parametrize("stale", [False, True],
+                         ids=["fresh-plan", "stale-plan"])
+def test_custom_vjp_matches_reference_autodiff(stale):
+    inputs, _, _, loss_k, loss_r = _setup(0, stale)
+    gk = jax.grad(loss_k, argnums=tuple(range(5)))(*inputs)
+    gr = jax.grad(loss_r, argnums=tuple(range(5)))(*inputs)
+    for name, a, b in zip(NAMES, gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=5e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("stale", [False, True],
+                         ids=["fresh-plan", "stale-plan"])
+def test_custom_vjp_matches_finite_differences(stale):
+    """Directional central differences vs the analytic custom_vjp, every
+    differentiable input, 3 random directions each."""
+    inputs, _, _, loss_k, _ = _setup(1, stale)
+    grads = jax.grad(loss_k, argnums=tuple(range(5)))(*inputs)
+    loss_jit = jax.jit(loss_k)
+    for i, (x, g, name) in enumerate(zip(inputs, grads, NAMES)):
+        for s in range(3):
+            dvec = jax.random.normal(jax.random.PRNGKey(100 + 10 * i + s),
+                                     x.shape)
+            dvec = dvec / jnp.linalg.norm(dvec)
+            plus = list(inputs)
+            plus[i] = x + EPS * dvec
+            minus = list(inputs)
+            minus[i] = x - EPS * dvec
+            fd = (loss_jit(*plus) - loss_jit(*minus)) / (2 * EPS)
+            an = jnp.vdot(g, dvec)
+            err = abs(float(fd) - float(an))
+            tol = 2e-2 * abs(float(an)) + 3e-4
+            assert err <= tol, (
+                f"{name} dir {s}: fd={float(fd):.6g} "
+                f"analytic={float(an):.6g} err={err:.3g} > tol={tol:.3g}")
+
+
+def test_gradients_flow_through_execution_not_planning():
+    """d loss / d q must be identical whether the plan is (a) precomputed
+    and passed in or (b) planned inline from (q, k): planning is
+    gradient-stopped, so the only gradient path is execution."""
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.25,
+                    proj_init="identity")
+    rs = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (jax.random.normal(r, (1, 2, 64, 8)) for r in rs)
+    params = sla_init(jax.random.PRNGKey(0), 2, 8, cfg)
+    plan = plan_attention(q, k, cfg)
+
+    def loss_fixed(q, k, v):
+        return jnp.sum(sla_attention(params, q, k, v, cfg,
+                                     backend="kernel", plan=plan) ** 2)
+
+    def loss_inline(q, k, v):
+        return jnp.sum(sla_attention(params, q, k, v, cfg,
+                                     backend="kernel") ** 2)
+
+    gf = jax.grad(loss_fixed, argnums=(0, 1, 2))(q, k, v)
+    gi = jax.grad(loss_inline, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", gf, gi):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, err_msg=f"d{name}")
+        assert bool(jnp.isfinite(a).all())
