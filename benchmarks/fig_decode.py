@@ -1,0 +1,81 @@
+"""Decode-time SLA: per-token attention FLOPs + measured decode latency.
+
+Two measurements (DESIGN.md "Decode-time SLA"):
+  (a) DERIVED per-token decode attention FLOPs across context lengths:
+      dense masked decode is O(S); decode-SLA pays critical-blocks +
+      an O(1) linear term (+ an amortized O(Tn / b_q) planning term),
+      so the reduction factor grows linearly with context.
+  (b) MEASURED wall time of one compiled decode_step on a toy
+      transformer, dense cache vs decode-SLA cache, on this host (the
+      CPU analogue of the paper's kernel race, decode edition).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SLAConfig
+from repro.core.flops import dense_decode_flops, sla_decode_flops
+
+CTXS = (4096, 16384, 65536, 262144)
+
+
+def flops_rows(d=128, h=12):
+    cfg = SLAConfig(block_q=64, block_kv=64, kh_frac=0.05, kl_frac=0.0,
+                    causal=True, decode_budget=26)  # 5% of 32k/64 blocks
+    rows = []
+    for n in CTXS:
+        f = sla_decode_flops(n, d, h, cfg)
+        rows.append((f"fig_decode.flops.n{n}", 0.0,
+                     f"dense={f['dense']:.3g} sla={f['total']:.3g} "
+                     f"x{f['reduction_x']:.1f}"))
+    return rows
+
+
+def measured_decode(prompt_len=64, max_len=256, reps=16):
+    """Compiled decode_step wall time: dense vs decode-SLA cache."""
+    import dataclasses
+
+    from repro.configs import get_arch
+    from repro.models import transformer as tfm
+
+    cfg = get_arch("qwen3-1.7b").smoke()
+    cfg = dataclasses.replace(cfg, sla=cfg.sla.replace(kh_frac=0.25,
+                                                       kl_frac=0.0))
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, prompt_len), 0,
+                              cfg.vocab_size)
+    token = jnp.array([1, 2], jnp.int32)
+    step = jax.jit(lambda p, t, c: tfm.decode_step(p, cfg, t, c))
+
+    def bench(cache):
+        logits, _ = step(params, token, cache)
+        jax.block_until_ready(logits)
+        t0 = time.time()
+        for _ in range(reps):
+            logits, _ = step(params, token, cache)
+        jax.block_until_ready(logits)
+        return (time.time() - t0) / reps * 1e6  # us
+
+    _, dense_cache = tfm.prefill(params, cfg, toks)
+    pad = max_len - prompt_len
+    dense_cache = {
+        "k": jnp.pad(dense_cache["k"], [(0, 0)] * 3 + [(0, pad), (0, 0)]),
+        "v": jnp.pad(dense_cache["v"], [(0, 0)] * 3 + [(0, pad), (0, 0)]),
+        "pos": dense_cache["pos"]}
+    _, sla_cache = tfm.prefill(params, cfg, toks, decode_max_len=max_len)
+    return bench(dense_cache), bench(sla_cache)
+
+
+def run(backend: str = "gather"):
+    rows = flops_rows()
+    t_dense, t_sla = measured_decode()
+    rows.append(("fig_decode.step_us.dense", t_dense, "S=256"))
+    rows.append(("fig_decode.step_us.sla", t_sla,
+                 f"x{t_dense / t_sla:.2f} vs dense"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -15,6 +15,7 @@ MODULES = [
     "table2_ablation",
     "table3_image",
     "fig6_kernel_speed",
+    "fig_decode",
 ]
 
 

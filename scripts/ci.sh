@@ -5,6 +5,7 @@
 #   scripts/ci.sh                 # full split run
 #   scripts/ci.sh --fast          # fast tier only
 #   scripts/ci.sh --conformance   # cross-backend conformance matrix only
+#   scripts/ci.sh --decode        # decode-time SLA parity + drift suites
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,6 +15,17 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 PYTEST=(python -m pytest -q -p no:cacheprovider)
+
+if [[ "${1:-}" == "--decode" ]]; then
+    # Decode-time SLA: incremental-plan properties, decode parity
+    # matrix, engine integration, and the drift-refresh suite (the
+    # long parity sweeps carry @pytest.mark.slow and run second).
+    echo "=== decode-SLA (fast: properties + parity) ==="
+    "${PYTEST[@]}" -x -m "not slow" tests/test_decode_sla.py tests/test_drift.py
+    echo "=== decode-SLA (slow: long parity sweeps) ==="
+    "${PYTEST[@]}" -m slow tests/test_decode_sla.py
+    exit 0
+fi
 
 if [[ "${1:-}" == "--conformance" ]]; then
     # The backend-parity matrix (backends x dtypes x causal x

@@ -8,18 +8,24 @@ Organized as a plan/execute split (DESIGN.md):
 """
 from repro.core.backends import (
     available_backends,
+    decode_execute,
     execute,
     get_backend,
     register_backend,
+    register_decode_backend,
     resolve,
+    resolve_decode,
 )
 from repro.core.config import SLAConfig
 from repro.core.masks import (
     classify_blocks,
+    classify_row,
     compute_mask,
     expand_mask,
     pool_blocks,
     predict_pc,
+    predict_pc_row,
+    row_valid,
     sparsity_stats,
 )
 from repro.core.phi import PHI_KINDS, phi
@@ -27,8 +33,10 @@ from repro.core.plan import (
     SLAPlan,
     build_col_lut,
     build_lut,
+    empty_plan,
     plan_attention,
     plan_drift,
+    plan_extend,
     plan_from_mask,
     plan_retention,
     refresh_plan,
@@ -40,10 +48,13 @@ __all__ = [
     "SLAConfig", "phi", "PHI_KINDS",
     "pool_blocks", "predict_pc", "classify_blocks", "compute_mask",
     "expand_mask", "sparsity_stats",
+    "predict_pc_row", "classify_row", "row_valid",
     "SLAPlan", "plan_attention", "plan_from_mask",
     "plan_drift", "plan_retention", "refresh_plan",
+    "empty_plan", "plan_extend",
     "build_lut", "build_col_lut",
     "execute", "get_backend", "register_backend", "available_backends",
     "resolve",
+    "decode_execute", "register_decode_backend", "resolve_decode",
     "sla_attention", "sla_init", "reference", "flops",
 ]

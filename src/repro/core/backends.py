@@ -164,3 +164,171 @@ def execute(
     proj = params["proj"].astype(jnp.float32)
     o = o_s + jnp.einsum("bhnd,hde->bhne", o_l, proj)
     return o.astype(in_dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode execution: one token against the static decode cache
+# (DESIGN.md "Decode-time SLA")
+# ---------------------------------------------------------------------------
+# A decode backend maps (state, qg, qpg, pos, cfg, scale) -> (O^s, O^l),
+# both (B, Hkv, G, D) f32, where G = H // Hkv is the GQA group size and
+# `state` is the per-layer decode-cache slice:
+#   k, v   : (B, Hkv, Smax, D)   static KV cache (Smax = Tn * block_kv)
+#   hblk   : (B, Hkv, Tn, D, D)  per-block running  h_j = sum phi(k) v^T
+#   zblk   : (B, Hkv, Tn, D)     per-block running  z_j = sum phi(k)
+#   htot   : (B, Hkv, D, D)      running total      H   = sum_j h_j
+#   ztot   : (B, Hkv, D)         running total      Z   = sum_j z_j
+#   lut    : (B, H, K) int32     live row's critical block ids
+#   cnt    : (B, H)    int32     live entries in lut
+#   marg   : (B, H)    int32     live row's marginal block count
+# The linear branch is the subtractive aggregation (paper App. A.3):
+#   H_marg = htot - sum_{j in lut} hblk[j]
+# exact because the decode plan classifies with kl_frac = 0 (every valid
+# non-critical block is marginal; SLAConfig.decode_plan_cfg).
+_DECODE_BACKENDS: Dict[str, BackendFn] = {}
+
+# The fused Pallas kernel is a prefill/training kernel; single-token
+# decode is gather-shaped, so "kernel" serves decode through the gather
+# path (same numerics, no Pallas launch per token).
+_DECODE_ALIASES = {"kernel": "gather", "pallas": "gather", "xla": "gather",
+                   "dense": "reference"}
+
+
+def register_decode_backend(name: str) -> Callable[[BackendFn], BackendFn]:
+    def deco(fn: BackendFn) -> BackendFn:
+        _DECODE_BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
+def resolve_decode(name: str) -> str:
+    """Canonical decode-backend name (loud failure, like `resolve`)."""
+    key = _DECODE_ALIASES.get(name, name)
+    if key not in _DECODE_BACKENDS:
+        raise ValueError(
+            f"unknown SLA decode backend {name!r}; available: "
+            f"{sorted(_DECODE_BACKENDS)} (aliases: "
+            f"{ {a: t for a, t in sorted(_DECODE_ALIASES.items())} })")
+    return key
+
+
+def _group_heads(x: jax.Array, hkv: int) -> jax.Array:
+    """(B, H, ...) -> (B, Hkv, G, ...): the same head layout jnp.repeat
+    produces (q head h <-> (h // G, h % G))."""
+    b, h = x.shape[:2]
+    return x.reshape(b, hkv, h // hkv, *x.shape[2:])
+
+
+def _gather_state(x: jax.Array, idx: jax.Array, k_sel: int) -> jax.Array:
+    """x: (B, Hkv, Tn, ...); idx: (B, Hkv, G*K) -> (B, Hkv, G, K, ...)."""
+    b, hkv = x.shape[:2]
+    pad = (1,) * (x.ndim - 3)
+    out = jnp.take_along_axis(x, idx.reshape(b, hkv, -1, *pad), axis=2)
+    return out.reshape(b, hkv, -1, k_sel, *x.shape[3:])
+
+
+@register_decode_backend("gather")
+def _decode_gather_backend(state, qg, qpg, pos, cfg, scale):
+    """O(K * bkv * d) sparse + O(K * d^2) subtractive linear per token."""
+    kc, vc = state["k"], state["v"]
+    b, hkv, smax, d = kc.shape
+    bkv = cfg.block_kv
+    tn = smax // bkv
+    lutg = _group_heads(state["lut"], hkv)          # (B, Hkv, G, K)
+    cntg = _group_heads(state["cnt"], hkv)          # (B, Hkv, G)
+    k_sel = lutg.shape[-1]
+    idx = lutg.reshape(b, hkv, -1)
+    kg = _gather_state(kc.reshape(b, hkv, tn, bkv, d), idx, k_sel)
+    vg = _gather_state(vc.reshape(b, hkv, tn, bkv, d), idx, k_sel)
+    s = jnp.einsum("bngd,bngkvd->bngkv", qg,
+                   kg.astype(jnp.float32)) * scale
+    cols = lutg[..., None] * bkv + jnp.arange(bkv)  # (B, Hkv, G, K, bkv)
+    live = jnp.arange(k_sel) < cntg[..., None]      # (B, Hkv, G, K)
+    s = jnp.where(jnp.logical_and(cols <= pos, live[..., None]), s, -1e30)
+    sf = s.reshape(b, hkv, -1, k_sel * bkv)
+    m = jnp.max(sf, axis=-1, keepdims=True)
+    p = jnp.exp(sf - m)
+    o_s = jnp.einsum("bngk,bngkd->bngd", p / jnp.sum(p, -1, keepdims=True),
+                     vg.reshape(b, hkv, -1, k_sel * bkv, d)
+                     .astype(jnp.float32))
+    # subtractive marginal aggregation from the running state
+    hg = _gather_state(state["hblk"], idx, k_sel)   # (B, Hkv, G, K, D, D)
+    zg = _gather_state(state["zblk"], idx, k_sel)   # (B, Hkv, G, K, D)
+    hg = jnp.where(live[..., None, None], hg, 0.0)
+    zg = jnp.where(live[..., None], zg, 0.0)
+    h_m = state["htot"][:, :, None] - jnp.sum(hg, axis=3)
+    z_m = state["ztot"][:, :, None] - jnp.sum(zg, axis=3)
+    num = jnp.einsum("bngd,bngde->bnge", qpg, h_m)
+    den = jnp.einsum("bngd,bngd->bng", qpg, z_m)[..., None]
+    o_l = ref._safe_div(num, den)
+    # rows with an empty marginal set produce exact zeros (the residual
+    # of the subtraction is f32 noise; never divide noise by noise)
+    margg = _group_heads(state["marg"], hkv)
+    o_l = jnp.where(margg[..., None] > 0, o_l, 0.0)
+    return o_s, o_l
+
+
+@register_decode_backend("reference")
+def _decode_reference_backend(state, qg, qpg, pos, cfg, scale):
+    """Dense O(S) oracle: expands the live row's block structure to a
+    token mask and aggregates marginal blocks directly (validation)."""
+    kc, vc = state["k"], state["v"]
+    b, hkv, smax, d = kc.shape
+    bkv = cfg.block_kv
+    tn = smax // bkv
+    lutg = _group_heads(state["lut"], hkv)
+    cntg = _group_heads(state["cnt"], hkv)
+    k_sel = lutg.shape[-1]
+    live = jnp.arange(k_sel) < cntg[..., None]
+    crit_blk = jnp.any(
+        jnp.logical_and(lutg[..., None] == jnp.arange(tn), live[..., None]),
+        axis=3)                                     # (B, Hkv, G, Tn)
+    crit_tok = jnp.repeat(crit_blk, bkv, axis=-1)   # (B, Hkv, G, Smax)
+    s = jnp.einsum("bngd,bnsd->bngs", qg, kc.astype(jnp.float32)) * scale
+    keep = jnp.logical_and(crit_tok, jnp.arange(smax) <= pos)
+    s = jnp.where(keep, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o_s = jnp.einsum("bngs,bnsd->bngd", p / jnp.sum(p, -1, keepdims=True),
+                     vc.astype(jnp.float32))
+    valid = jnp.arange(tn) <= pos // bkv
+    marg = jnp.logical_and(valid, ~crit_blk).astype(jnp.float32)
+    h_m = jnp.einsum("bngt,bntde->bngde", marg, state["hblk"])
+    z_m = jnp.einsum("bngt,bntd->bngd", marg, state["zblk"])
+    num = jnp.einsum("bngd,bngde->bnge", qpg, h_m)
+    den = jnp.einsum("bngd,bngd->bng", qpg, z_m)[..., None]
+    return o_s, ref._safe_div(num, den)
+
+
+def decode_execute(
+    state: Dict[str, jax.Array],
+    params: Optional[Params],
+    q: jax.Array, pos, cfg: SLAConfig,
+    scale: Optional[float] = None,
+    backend: str = "gather",
+) -> jax.Array:
+    """One-token SLA attention against the decode cache state.
+
+    q: (B, H, 1, D) the new token's query; `pos` its (traced) position.
+    Returns (B, H, D) in q.dtype — O^s + Proj(O^l) under cfg.mode "sla",
+    O^s alone under "sparse_only".
+    """
+    backend = resolve_decode(backend)
+    in_dtype = q.dtype
+    b, h, _, d = q.shape
+    hkv = state["k"].shape[1]
+    scale = (d**-0.5) if scale is None else scale
+    qg = _group_heads(q[:, :, 0, :].astype(jnp.float32), hkv)
+    qpg = _group_heads(phi(q[:, :, 0, :], cfg.phi), hkv)
+    o_s, o_l = _DECODE_BACKENDS[backend](state, qg, qpg, pos, cfg, scale)
+    o_s = o_s.reshape(b, h, d)
+    if cfg.mode == "sparse_only":
+        return o_s.astype(in_dtype)
+    if cfg.mode != "sla":
+        raise ValueError(
+            f"decode_execute supports modes 'sla'/'sparse_only', got "
+            f"{cfg.mode!r}")
+    proj = params["proj"].astype(jnp.float32)
+    o = o_s + jnp.einsum("bhd,hde->bhe", o_l.reshape(b, h, d), proj)
+    return o.astype(in_dtype)

@@ -6,7 +6,7 @@ b_q = b_kv = 64, k_h = 5% critical, k_l = 10% negligible, phi = softmax.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,7 +53,20 @@ class SLAConfig:
       plan_drift_threshold: drift level (1 - retention, in [0, 1]) at
         which an adaptive refresh rebuilds the plan. 0.0 re-plans every
         step (exact paper behavior); 1.0 never re-plans after the first
-        (blind reuse).
+        (blind reuse). A tuple gives one threshold PER LAYER (applied
+        layer-by-layer, not min-reduced across the stack; see
+        `drift_thresholds`).
+      decode_mode: autoregressive decode attention path: "dense" runs
+        masked softmax over the full static KV cache (O(S) per token);
+        "sla" runs decode-time SLA — incremental block plans
+        (`core/plan.plan_extend`) + an O(1)-per-token running linear
+        state (DESIGN.md "Decode-time SLA").
+      decode_budget: number of critical KV blocks per decode query row
+        (the static decode LUT width). None derives it from kh_frac at
+        the decode cache's maximum block count. A *fixed* budget keeps
+        the incremental row classification invariant to the block-grid
+        width, which is what makes `plan_extend` provably equal to
+        `plan_from_mask` on the full mask.
     """
 
     block_q: int = 64
@@ -69,7 +82,9 @@ class SLAConfig:
     col_capacity_factor: Optional[float] = 2.0
     plan_refresh_interval: int = 1
     plan_refresh_mode: str = "fixed"
-    plan_drift_threshold: float = 0.1
+    plan_drift_threshold: Union[float, Tuple[float, ...]] = 0.1
+    decode_mode: str = "dense"
+    decode_budget: Optional[int] = None
     window: int = 0  # sliding-window constraint in TOKENS (0 = none);
     #                  applied at block granularity: out-of-window blocks are
     #                  forced negligible (exact-zero weight under SWA).
@@ -90,6 +105,41 @@ class SLAConfig:
             return num_q_blocks
         avg = num_q_blocks * k_sel / num_kv_blocks
         return max(1, min(num_q_blocks, round(self.col_capacity_factor * avg)))
+
+    def drift_thresholds(self, num_layers: int) -> Tuple[float, ...]:
+        """Per-layer drift thresholds, normalized to a length-L tuple.
+
+        A scalar `plan_drift_threshold` is broadcast to every layer; a
+        tuple must already have one entry per layer. Callers apply each
+        layer's threshold to that layer's own drift (the ROADMAP
+        "per-layer, not min-reduced" semantics)."""
+        t = self.plan_drift_threshold
+        if isinstance(t, (tuple, list)):
+            if len(t) != num_layers:
+                raise ValueError(
+                    f"plan_drift_threshold has {len(t)} entries but the "
+                    f"model has {num_layers} layers")
+            return tuple(float(x) for x in t)
+        return (float(t),) * num_layers
+
+    def decode_plan_cfg(self, num_kv_blocks: int) -> "SLAConfig":
+        """Classification config for decode-time incremental plans.
+
+        Decode rows are classified causal with a *static* critical
+        budget (row classification becomes invariant to the block-grid
+        width — required for `plan_extend` == `plan_from_mask`), no
+        negligible class (at decode the linear branch is O(1) running
+        state, so skipping blocks saves nothing and would change
+        numerics vs the subtractive aggregation), and no column
+        capacity (the column LUT feeds only the training backward
+        pass; capping it would make row classification depend on other
+        rows and break incremental append)."""
+        budget = self.decode_budget
+        if budget is None:
+            budget = self.num_critical(num_kv_blocks)
+        return dataclasses.replace(
+            self, causal=True, kl_frac=0.0, col_capacity_factor=None,
+            fixed_budget=budget, window=0)
 
     def replace(self, **kw) -> "SLAConfig":
         return dataclasses.replace(self, **kw)

@@ -50,6 +50,55 @@ def sla_flops(n: int, d: int, h: int, cfg: SLAConfig,
     }
 
 
+def dense_decode_flops(n: int, d: int, h: int) -> float:
+    """Per-token dense masked decode: q K^T (2nd) + p V (2nd) per head —
+    O(S) in the context length (the decode_* cells' old cost model)."""
+    return 4.0 * n * d * h
+
+
+def sla_decode_flops(n: int, d: int, h: int, cfg: SLAConfig,
+                     num_critical: int | None = None) -> dict:
+    """Per-token decode-SLA attention FLOPs (DESIGN.md "Decode-time SLA").
+
+    sparse : attend the live row's K critical blocks (4 K b_kv d)
+    state  : O(1) running-state update phi(k) v^T + totals (~4 d^2)
+    linear : subtractive aggregation H - sum_crit h_j (2 K d^2) plus the
+             phi(q) H / phi(q) Z apply (2 d^2 + 2 d)
+    proj   : learned d x d merge (Eq. 6)
+    plan   : amortized block-boundary row classification — one O(Tn d)
+             pooled-score row + top-k every b_q tokens
+
+    Everything except `plan` is independent of the context length n:
+    the O(S) dense term is replaced by critical-blocks + an O(1) linear
+    term, with planning amortized to O(Tn / b_q) per token.
+    """
+    tn = max(1, n // cfg.block_kv)
+    if num_critical is not None:
+        k_sel = num_critical
+    elif cfg.decode_budget is not None:
+        k_sel = cfg.decode_budget  # the static decode budget
+    else:
+        k_sel = cfg.num_critical(tn)
+    k_sel = max(1, min(k_sel, tn))
+    sparse = 4.0 * k_sel * cfg.block_kv * d * h
+    state = 4.0 * d * d * h
+    linear = (2.0 * k_sel * d * d + 2.0 * d * d + 2.0 * d) * h
+    proj = 2.0 * d * d * h
+    plan = (2.0 * tn * d + 5.0 * tn) * h / cfg.block_q
+    total = sparse + state + linear + proj + plan
+    dense = dense_decode_flops(n, d, h)
+    return {
+        "sparse": sparse,
+        "state": state,
+        "linear": linear,
+        "proj": proj,
+        "plan": plan,
+        "total": total,
+        "dense": dense,
+        "reduction_x": dense / total,
+    }
+
+
 def sla_subtractive_agg_flops(n: int, d: int, h: int, cfg: SLAConfig) -> float:
     """Aggregation cost with the subtract-non-marginal optimization:
     H_i = H_total - sum_{crit+neg j} h_j   (paper App. A.3, gather form).

@@ -122,6 +122,73 @@ def classify_blocks(pc: jax.Array, cfg: SLAConfig) -> jax.Array:
     return mc
 
 
+# ---------------------------------------------------------------------------
+# row-local classification (decode-time incremental plans; DESIGN.md
+# "Decode-time SLA"). `row` may be a python int or a traced scalar, so the
+# same code serves one-shot tests and the jitted decode step.
+# ---------------------------------------------------------------------------
+def row_valid(row, tn: int, cfg: SLAConfig) -> jax.Array:
+    """(tn,) bool validity of one query-block row — the row `row` slice of
+    `block_valid` (causal + window constraints)."""
+    j = jnp.arange(tn)
+    valid = jnp.ones((tn,), bool)
+    if cfg.causal:
+        valid = jnp.logical_and(
+            valid, (row + 1) * cfg.block_q - 1 >= j * cfg.block_kv)
+    if cfg.window:
+        dist = jnp.abs(row * cfg.block_q - j * cfg.block_kv)
+        valid = jnp.logical_and(valid, dist < cfg.window + cfg.block_kv)
+    return valid
+
+
+def predict_pc_row(
+    qpool_row: jax.Array, kpool: jax.Array, row, cfg: SLAConfig,
+    scale: float | None = None,
+) -> jax.Array:
+    """One row of the compressed map P_c from already-pooled inputs.
+
+    qpool_row: (..., D) mean-pooled q of block `row`; kpool: (..., Tn, D)
+    mean-pooled k per KV block (entries of invalid blocks are ignored).
+    Equals `predict_pc(q, k, cfg)[..., row, :]` when the pools match
+    `pool_blocks` of the same (q, k)."""
+    d = qpool_row.shape[-1]
+    scale = (d**-0.5) if scale is None else scale
+    s = jnp.einsum("...d,...nd->...n", qpool_row.astype(jnp.float32),
+                   kpool.astype(jnp.float32)) * scale
+    if cfg.causal or cfg.window:
+        s = jnp.where(row_valid(row, kpool.shape[-2], cfg), s, NEG_INF)
+    return jax.nn.softmax(s, axis=-1)
+
+
+def classify_row(pc_row: jax.Array, row, cfg: SLAConfig) -> jax.Array:
+    """Classify one query-block row: `classify_blocks(pc, cfg)[..., row, :]`.
+
+    pc_row: (..., Tn) f32 -> (..., Tn) int8. Row classification is
+    row-local only without the column-capacity pass, so this requires
+    cfg.col_capacity_factor is None (use `SLAConfig.decode_plan_cfg`).
+    """
+    assert cfg.col_capacity_factor is None, (
+        "classify_row is row-local; column capacity couples rows — "
+        "classify with SLAConfig.decode_plan_cfg(...)")
+    tn = pc_row.shape[-1]
+    n_crit = cfg.num_critical(tn)
+    n_neg = cfg.num_negligible(tn)
+    valid = row_valid(row, tn, cfg)
+    score = jnp.where(valid, pc_row, -1.0)
+    if cfg.causal:
+        assert cfg.block_q == cfg.block_kv, "causal SLA requires b_q == b_kv"
+    if cfg.force_diagonal or cfg.causal:
+        diag_col = row * cfg.block_q // cfg.block_kv
+        score = jnp.where(jnp.arange(tn) == diag_col, 2.0, score)
+    order = jnp.argsort(-score, axis=-1, stable=True)
+    rank = jnp.argsort(order, axis=-1, stable=True)
+    mc = jnp.zeros(pc_row.shape, jnp.int8)
+    mc = jnp.where(rank < n_crit, jnp.int8(1), mc)
+    if n_neg > 0:
+        mc = jnp.where(rank >= tn - n_neg, jnp.int8(-1), mc)
+    return jnp.where(valid, mc, jnp.int8(-1))
+
+
 def compute_mask(
     q: jax.Array, k: jax.Array, cfg: SLAConfig, scale: float | None = None
 ) -> jax.Array:

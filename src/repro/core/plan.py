@@ -137,11 +137,18 @@ def build_col_lut(mc: jax.Array, w_col: int) -> Tuple[jax.Array, jax.Array]:
     return lut, counts
 
 
-def plan_from_mask(mc: jax.Array, cfg: SLAConfig) -> SLAPlan:
-    """Derive every execution structure from a classification M_c."""
+def plan_from_mask(mc: jax.Array, cfg: SLAConfig,
+                   col_width: Optional[int] = None) -> SLAPlan:
+    """Derive every execution structure from a classification M_c.
+
+    `col_width` overrides the column-LUT width (cfg.col_capacity).
+    Inference-only consumers that never run the dK/dV backward pass —
+    the decode cache — pass 1 so the plan does not carry a dead
+    O(Tm x Tn)-per-head structure."""
     tm, tn = mc.shape[-2], mc.shape[-1]
     lut, counts = build_lut(mc, cfg.num_critical(tn))
-    col_lut, col_counts = build_col_lut(mc, cfg.col_capacity(tm, tn))
+    col_lut, col_counts = build_col_lut(
+        mc, cfg.col_capacity(tm, tn) if col_width is None else col_width)
     marginal = (mc == 0).astype(jnp.float32)
     return SLAPlan(mc=mc, lut=lut, counts=counts,
                    col_lut=col_lut, col_counts=col_counts,
@@ -165,6 +172,65 @@ def plan_attention(
         k = jnp.repeat(k, h // k.shape[1], axis=1)
     mc = compute_mask(q, k, cfg, scale)
     return plan_from_mask(mc, cfg)
+
+
+# ---------------------------------------------------------------------------
+# incremental plan maintenance (decode-time SLA; DESIGN.md "Decode-time SLA")
+# ---------------------------------------------------------------------------
+def empty_plan(
+    cfg: SLAConfig, batch: int, heads: int, tm: int, tn: int,
+) -> SLAPlan:
+    """All-negligible plan over a static (tm, tn) block grid — the
+    decode-time starting point that `plan_extend` appends rows into."""
+    mc = jnp.full((batch, heads, tm, tn), -1, jnp.int8)
+    return plan_from_mask(mc, cfg)
+
+
+def plan_extend(plan: SLAPlan, mc_row: jax.Array, row) -> SLAPlan:
+    """Append one query-block row to a plan: O(Tn * K), no argsort rebuild.
+
+    mc_row: (..., Tn) int8 classification of row `row` (a python int or
+    traced scalar). Precondition: `row` is the first unwritten row of
+    the plan (rows are appended monotonically, each exactly once — the
+    decode path crosses each block boundary once), so the column-LUT
+    update is a pure append at each column's current fill level.
+
+    Equality contract (tests/test_decode_sla.py property suite):
+    starting from `empty_plan` and appending rows 0..R-1 of a full
+    classification M_c reproduces `plan_from_mask(M_c)` exactly on
+    `mc`, `lut`, `counts`, `col_counts`, and `marginal`, and on every
+    *live* `col_lut` slot (slot < col_counts). Dead col_lut padding
+    slots may differ — plan_from_mask pads with the column's first
+    critical row id, the incremental path leaves stale values — and no
+    backend reads them (every consumer gates on counts).
+    """
+    nd = plan.mc.ndim
+    row = jnp.asarray(row, jnp.int32)
+    mc_row = mc_row.astype(plan.mc.dtype)
+    mc = jax.lax.dynamic_update_slice_in_dim(
+        plan.mc, mc_row[..., None, :], row, axis=nd - 2)
+    lut_r, cnt_r = build_lut(mc_row[..., None, :], plan.k_sel)
+    lut = jax.lax.dynamic_update_slice_in_dim(
+        plan.lut, lut_r, row, axis=nd - 2)
+    counts = jax.lax.dynamic_update_slice_in_dim(
+        plan.counts, cnt_r, row, axis=nd - 2)
+    # Column-LUT append: the new row becomes the *last* critical entry of
+    # every column it is critical in (rows arrive in ascending order, and
+    # build_col_lut lists critical rows ascending, so live entries agree).
+    is_crit = mc_row == 1  # (..., Tn)
+    cc = plan.col_counts
+    can = jnp.logical_and(is_crit, cc < plan.w_col)
+    slot_hit = jnp.arange(plan.w_col, dtype=cc.dtype) == cc[..., None]
+    write = jnp.logical_and(can[..., None], slot_hit)
+    col_lut = jnp.where(write, row.astype(plan.col_lut.dtype),
+                        plan.col_lut)
+    col_counts = cc + can.astype(plan.col_counts.dtype)
+    marginal = jax.lax.dynamic_update_slice_in_dim(
+        plan.marginal,
+        (mc_row == 0).astype(plan.marginal.dtype)[..., None, :],
+        row, axis=nd - 2)
+    return SLAPlan(mc=mc, lut=lut, counts=counts, col_lut=col_lut,
+                   col_counts=col_counts, marginal=marginal)
 
 
 # ---------------------------------------------------------------------------

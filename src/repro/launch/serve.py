@@ -31,11 +31,19 @@ def main(argv=None):
                     choices=["off", "adaptive"],
                     help="reuse SLA prefill plans across request chunks, "
                          "refreshing on measured drift")
-    ap.add_argument("--drift-threshold", type=float, default=None,
+    ap.add_argument("--drift-threshold", default=None,
                     help="re-plan a layer when its plan drift "
-                         "(1 - retained critical mass) reaches this "
-                         "(default: cfg.sla.plan_drift_threshold)")
+                         "(1 - retained critical mass) reaches this; a "
+                         "comma-separated list gives one threshold per "
+                         "layer (default: cfg.sla.plan_drift_threshold)")
+    ap.add_argument("--decode-sla", action="store_true",
+                    help="decode with incremental SLA block plans + the "
+                         "O(1) linear running state instead of dense "
+                         "masked attention over the full cache")
     args = ap.parse_args(argv)
+    if args.drift_threshold is not None:
+        parts = [float(x) for x in str(args.drift_threshold).split(",")]
+        args.drift_threshold = parts[0] if len(parts) == 1 else tuple(parts)
 
     from repro.core import backends as backend_registry
     backend_registry.resolve(args.backend)  # unknown names fail here, loudly
@@ -56,7 +64,8 @@ def main(argv=None):
                            max_len=args.prompt_len + args.max_new + 8,
                            backend=args.backend,
                            plan_reuse=args.plan_reuse,
-                           drift_threshold=args.drift_threshold)
+                           drift_threshold=args.drift_threshold,
+                           decode_sla=args.decode_sla)
     t0 = time.time()
     done = engine.run(reqs)
     st = engine.stats
@@ -68,6 +77,12 @@ def main(argv=None):
               f"reused, {st.plan_replans} drift re-plans | retention "
               f"{st.last_retention:.3f} (threshold: drift >= "
               f"{engine.drift_threshold})")
+    if args.decode_sla:
+        print(f"decode plans: {st.decode_plan_builds} layer plans built "
+              f"at prefill, {st.decode_plan_extends} rows extended, "
+              f"{st.decode_plan_reuses} live rows reused, "
+              f"{st.decode_plan_replans} drift re-plans | retention "
+              f"{st.decode_last_retention:.3f}")
     return done
 
 

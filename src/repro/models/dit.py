@@ -87,12 +87,13 @@ def forward(params, cfg: ArchConfig, latents, t,
     performs zero planning.
 
     Drift-adaptive refresh (DESIGN.md "Plan lifetime & drift"): with
-    `plans=` AND `drift_threshold=` (float or traced scalar), each
-    layer measures the retained critical mass of its reused plan
-    against the current (q, k) and re-plans under `lax.cond` only when
-    drift reaches the threshold — jit-traceable, static shapes. The
-    return value gains a trailing info dict
-    {"retention": (L,), "replanned": (L,)}."""
+    `plans=` AND `drift_threshold=` (float, traced scalar, or a
+    per-layer (L,) array/tuple — each layer's refresh decision uses its
+    own entry, never min-reduced across the stack), each layer measures
+    the retained critical mass of its reused plan against the current
+    (q, k) and re-plans under `lax.cond` only when drift reaches the
+    threshold — jit-traceable, static shapes. The return value gains a
+    trailing info dict {"retention": (L,), "replanned": (L,)}."""
     x = jnp.einsum("bnp,pd->bnd", latents.astype(compute_dtype),
                    params["patch_in"].astype(compute_dtype))
     temb = jnp.einsum("be,ed->bd", _timestep_embedding(t * 1000.0),
@@ -112,9 +113,15 @@ def forward(params, cfg: ArchConfig, latents, t,
                    and sla_cfg.mode not in ("full", "linear_only"))
     adaptive = (drift_threshold is not None and plans is not None
                 and plan_needed)
+    if adaptive:
+        thresholds = jnp.broadcast_to(
+            jnp.asarray(drift_threshold, jnp.float32), (cfg.num_layers,))
 
     def body(x, xs):
-        p, layer_plan = xs
+        if adaptive:
+            p, layer_plan, thr = xs
+        else:
+            p, layer_plan = xs
         retention = jnp.float32(1.0)
         replanned = jnp.bool_(False)
         mod = jnp.einsum("bd,de->be", temb, p["ada"].astype(temb.dtype))
@@ -130,7 +137,7 @@ def forward(params, cfg: ArchConfig, latents, t,
             layer_plan = plan_lib.plan_attention(q, k, sla_cfg)
         elif adaptive:
             layer_plan, retention, replanned = plan_lib.refresh_plan(
-                layer_plan, q, k, sla_cfg, drift_threshold)
+                layer_plan, q, k, sla_cfg, thr)
         o = attention({"proj": p["sla_proj"]}, q, k, v, kind, sla_cfg,
                       causal=False, backend=backend,
                       plan=layer_plan if plan_needed else None)
@@ -167,8 +174,10 @@ def forward(params, cfg: ArchConfig, latents, t,
             ctx.maybe_remat(lambda x, p: body(x, (p, None))),
             x, params["layers"])
     else:
+        xs = ((params["layers"], plans, thresholds) if adaptive
+              else (params["layers"], plans))
         x, (out_plans, drift_ys) = jax.lax.scan(
-            ctx.maybe_remat(body), x, (params["layers"], plans))
+            ctx.maybe_remat(body), x, xs)
     x = rms_norm(x, params["ln_f"])
     out = jnp.einsum("bnd,dp->bnp", x, params["patch_out"].astype(x.dtype))
     rets = (out,)

@@ -102,17 +102,23 @@ def _qkv(p, x, cfg: ArchConfig, positions):
 
 
 def _attn(p, x, kind, cfg: ArchConfig, positions, backend,
-          layer_plan=None, drift_threshold=None, want_plan=False):
+          layer_plan=None, drift_threshold=None, want_plan=False,
+          decode_plan_cfg=None):
     """Returns (attn_out (B,S,d), k_cache, v_cache, plan, retention,
-    replanned).
+    replanned, decode_mc).
 
     Plan reuse for LM prefill (DESIGN.md "Plan lifetime & drift"):
     `want_plan=True` with layer_plan=None plans inline and returns the
     plan; a given `layer_plan` is reused — and, when `drift_threshold`
-    is set, refreshed under `lax.cond` when its retained critical mass
-    decays (same drift metric as the DiT sampler). The plan is built
-    outside the kind switch so it rides the layer scan with static
-    shapes even in mixed-kind stacks (non-SLA layers just carry it)."""
+    is set (a scalar: per-layer callers pass their layer's entry),
+    refreshed under `lax.cond` when its retained critical mass decays
+    (same drift metric as the DiT sampler). The plan is built outside
+    the kind switch so it rides the layer scan with static shapes even
+    in mixed-kind stacks (non-SLA layers just carry it).
+
+    `decode_plan_cfg` (DESIGN.md "Decode-time SLA") additionally
+    returns this layer's decode-grid block classification of the
+    prompt — the rows that seed the incremental decode plan."""
     b, s, _ = x.shape
     q, k, v = _qkv(p, x, cfg, positions)
     sla_cfg = cfg.sla
@@ -121,6 +127,12 @@ def _attn(p, x, kind, cfg: ArchConfig, positions, backend,
     sla_params = {"proj": p["sla_proj"]}
     retention = jnp.float32(1.0)
     replanned = jnp.bool_(False)
+    decode_mc = None
+    if decode_plan_cfg is not None:
+        from repro.core.masks import compute_mask
+        kr = k if k.shape[1] == q.shape[1] else \
+            jnp.repeat(k, q.shape[1] // k.shape[1], axis=1)
+        decode_mc = compute_mask(q, kr, decode_plan_cfg)
     if want_plan or layer_plan is not None:
         plan_cfg = dataclasses.replace(sla_cfg, causal=True)
         if layer_plan is None:
@@ -157,7 +169,7 @@ def _attn(p, x, kind, cfg: ArchConfig, positions, backend,
     out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
     out = jnp.einsum("bse,ed->bsd", out,
                      ctx.fsdp_gather(p["wo"].astype(x.dtype), "row"))
-    return out, k, v, layer_plan, retention, replanned
+    return out, k, v, layer_plan, retention, replanned, decode_mc
 
 
 def _ffn(p, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
@@ -179,7 +191,7 @@ def forward(params, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
             compute_dtype=jnp.bfloat16, backend: str = "gather",
             return_cache: bool = False,
             plans=None, return_plans: bool = False,
-            drift_threshold=None):
+            drift_threshold=None, decode_plan_cfg=None):
     """Returns hidden states (B, S, d); optionally the per-layer KV cache.
 
     VLM (cfg.frontend == "vision_stub"): prefix_embeds (B, P, d) are
@@ -190,8 +202,16 @@ def forward(params, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
     `return_plans=True` the per-layer SLAPlan stack rides out of the
     layer scan; pass it back as `plans=` on a later same-shape prefill
     to reuse the block structure, optionally with `drift_threshold=` to
-    refresh drifted layers under `lax.cond`. Return value order:
-    (x, aux[, caches][, plans][, drift info dict]).
+    refresh drifted layers under `lax.cond`. `drift_threshold` may be
+    a scalar or a per-layer (L,) array/tuple — each layer's refresh
+    decision uses its own entry (never min-reduced across the stack).
+
+    Decode-plan seeding (DESIGN.md "Decode-time SLA"): with
+    `decode_plan_cfg=` (an `SLAConfig.decode_plan_cfg(...)` result) the
+    per-layer decode-grid block classification of the prompt is also
+    returned — `prefill(..., decode_max_len=)` embeds it into the
+    static decode plan. Return value order:
+    (x, aux[, caches][, plans][, decode_mc][, drift info dict]).
     """
     emb = params["embed"]
     parts = []
@@ -205,16 +225,19 @@ def forward(params, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
     kinds = layer_kinds(cfg)
     want_plan = return_plans or plans is not None
     adaptive = drift_threshold is not None and plans is not None
+    if adaptive:
+        thresholds = jnp.broadcast_to(
+            jnp.asarray(drift_threshold, jnp.float32), (cfg.num_layers,))
 
     def body(x, layer):
-        if plans is not None:
-            p, kind, layer_plan = layer
-        else:
-            (p, kind), layer_plan = layer, None
-        a, k, v, layer_plan, ret, rep = _attn(
+        layer = list(layer)
+        p, kind = layer.pop(0), layer.pop(0)
+        layer_plan = layer.pop(0) if plans is not None else None
+        thr = layer.pop(0) if adaptive else None
+        a, k, v, layer_plan, ret, rep, dmc = _attn(
             p, rms_norm(x, p["ln1"]), kind, cfg, positions, backend,
-            layer_plan=layer_plan, drift_threshold=drift_threshold,
-            want_plan=want_plan)
+            layer_plan=layer_plan, drift_threshold=thr,
+            want_plan=want_plan, decode_plan_cfg=decode_plan_cfg)
         # constraining the block OUTPUT (pre-residual-add) turns the TP
         # boundary all-reduce into a reduce-scatter (half the wire bytes)
         x = ctx.shard_residual(x + ctx.shard_residual(a))
@@ -222,13 +245,16 @@ def forward(params, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
         x = ctx.shard_residual(x + ctx.shard_residual(f))
         ys = (aux, (k, v) if return_cache else None,
               layer_plan if want_plan else None,
+              dmc if decode_plan_cfg is not None else None,
               (ret, rep) if adaptive else None)
         return x, ys
 
     xs = (params["layers"], kinds)
     if plans is not None:
         xs = xs + (plans,)
-    x, (auxs, caches, out_plans, drift_ys) = jax.lax.scan(
+    if adaptive:
+        xs = xs + (thresholds,)
+    x, (auxs, caches, out_plans, decode_mcs, drift_ys) = jax.lax.scan(
         ctx.maybe_remat(body), x, xs)
     x = rms_norm(x, params["ln_f"])
     aux = jnp.sum(auxs)
@@ -237,6 +263,8 @@ def forward(params, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
         rets += (caches,)  # caches: (k (L,B,Hkv,S,Dh), v ...)
     if return_plans:
         rets += (out_plans,)
+    if decode_plan_cfg is not None:
+        rets += (decode_mcs,)  # (L, B, H, Tm, Tn) int8 decode-grid rows
     if adaptive:
         rets += ({"retention": drift_ys[0], "replanned": drift_ys[1]},)
     return rets
@@ -262,9 +290,81 @@ def loss_fn(params, cfg: ArchConfig, batch: dict,
 # --------------------------------------------------------------------------
 # serving: prefill + single-token decode over a static-size KV cache
 # --------------------------------------------------------------------------
+def _seed_decode_state(cfg: ArchConfig, kc, vc, decode_mcs, max_len: int):
+    """Decode-SLA cache state from the prefill caches (DESIGN.md
+    "Decode-time SLA").
+
+    kc, vc: (L, B, Hkv, S, Dh) prompt caches; decode_mcs: (L, B, H,
+    Tm_p, Tn_p) decode-grid classification of the prompt rows. Builds
+    the static-grid incremental plan plus the linear branch's running
+    state: per-block h_j = sum phi(k) v^T / z_j = sum phi(k) partials
+    and their running totals (updated O(1) per decoded token)."""
+    from repro.core.phi import phi
+    sla = cfg.sla
+    bq, bkv = sla.block_q, sla.block_kv
+    nl, b, hkv, s, dh = kc.shape
+    tn = max_len // bkv
+    tm_p, tn_p = s // bq, s // bkv
+    dcfg = sla.decode_plan_cfg(tn)
+    mc = jnp.full((nl, b, cfg.num_heads, tn, tn), -1, jnp.int8)
+    mc = mc.at[..., :tm_p, :tn_p].set(decode_mcs)
+    # col_width=1: decode never runs the dK/dV backward, so the plan
+    # skips the O(Tn^2)-per-head column LUT (it would otherwise ride —
+    # and be where()-selected — in every decode step's scan carry)
+    plan = plan_lib.plan_from_mask(mc, dcfg, col_width=1)
+    kp = phi(kc, sla.phi)  # f32
+    kpb = kp.reshape(nl, b, hkv, tn_p, bkv, dh)
+    vb = vc.astype(jnp.float32).reshape(nl, b, hkv, tn_p, bkv, dh)
+    pad = [(0, 0)] * 3 + [(0, tn - tn_p)]
+    hblk = jnp.pad(jnp.einsum("...nkd,...nke->...nde", kpb, vb),
+                   pad + [(0, 0), (0, 0)])
+    zblk = jnp.pad(jnp.sum(kpb, axis=-2), pad + [(0, 0)])
+    kpool = jnp.pad(
+        jnp.sum(kc.astype(jnp.float32)
+                .reshape(nl, b, hkv, tn_p, bkv, dh), axis=-2),
+        pad + [(0, 0)])
+    k_sel = dcfg.num_critical(tn)
+    return {
+        "hblk": hblk, "zblk": zblk,
+        "htot": jnp.sum(hblk, axis=3), "ztot": jnp.sum(zblk, axis=3),
+        "kpool": kpool,
+        "qpool": jnp.zeros((nl, b, cfg.num_heads, dh), jnp.float32),
+        "plan": plan,
+        "rows": jnp.int32(tm_p),
+        "live_lut": jnp.zeros((nl, b, cfg.num_heads, k_sel), jnp.int32),
+        "live_cnt": jnp.zeros((nl, b, cfg.num_heads), jnp.int32),
+        "live_marg": jnp.zeros((nl, b, cfg.num_heads), jnp.int32),
+        "extends": jnp.zeros((nl,), jnp.int32),
+        "replans": jnp.zeros((nl,), jnp.int32),
+        "reuses": jnp.zeros((nl,), jnp.int32),
+        "retention": jnp.ones((nl,), jnp.float32),
+    }
+
+
+def _check_decode_grid(cfg: ArchConfig, seq_len: int, max_len: int):
+    sla = cfg.sla
+    if sla.block_q != sla.block_kv:
+        raise ValueError("decode-time SLA requires block_q == block_kv")
+    if sla.window or cfg.sliding_window:
+        # the subtractive linear state cannot exclude out-of-window past
+        # blocks (decode_plan_cfg classifies with window=0), so decode
+        # would silently diverge from the window-constrained prefill —
+        # fail loudly instead
+        raise ValueError(
+            "decode-time SLA does not support window-constrained SLA "
+            "layers (SLAConfig.window / cfg.sliding_window); use dense "
+            "decode for sliding-window configs")
+    if seq_len % sla.block_q or max_len % sla.block_q:
+        raise ValueError(
+            f"decode-time SLA needs block-aligned lengths: prompt "
+            f"{seq_len} and max_len {max_len} must be multiples of "
+            f"sla.block_q={sla.block_q}")
+
+
 def prefill(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
             backend: str = "gather", plans=None, drift_threshold=None,
-            return_plans: bool = False):
+            return_plans: bool = False,
+            decode_max_len: Optional[int] = None):
     """Run the prompt; returns (last_hidden (B, d), cache dict).
 
     Plan reuse across prefill chunks (serving): `return_plans=True`
@@ -272,31 +372,85 @@ def prefill(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
     `plans=` (with `drift_threshold=` for drift-gated refresh) on the
     next same-shape prefill chunk — the serving engine amortizes block
     planning across the request stream this way. Return value order:
-    (last_hidden, cache[, plans][, drift info])."""
+    (last_hidden, cache[, plans][, drift info]).
+
+    Decode-time SLA (DESIGN.md "Decode-time SLA"): `decode_max_len=`
+    sizes a static decode block grid, pads the KV caches out to it, and
+    seeds the cache with the incremental decode plan (prompt rows
+    classified on the decode grid) plus the linear branch's running
+    H/Z state — `decode_step` then runs SLA decode instead of dense."""
+    dcfg = None
+    if decode_max_len is not None:
+        _check_decode_grid(cfg, tokens.shape[1], decode_max_len)
+        dcfg = cfg.sla.decode_plan_cfg(decode_max_len // cfg.sla.block_kv)
     out = forward(params, cfg, tokens, compute_dtype=compute_dtype,
                   backend=backend, return_cache=True, plans=plans,
                   return_plans=return_plans,
-                  drift_threshold=drift_threshold)
+                  drift_threshold=drift_threshold, decode_plan_cfg=dcfg)
     x, (kc, vc) = out[0], out[2]
+    extras = out[3:]
     cache = {"k": kc, "v": vc, "pos": jnp.int32(tokens.shape[1])}
-    return (x[:, -1], cache) + out[3:]
+    if decode_max_len is not None:
+        i = 1 if return_plans else 0
+        decode_mcs, extras = extras[i], extras[:i] + extras[i + 1:]
+        cache["sla"] = _seed_decode_state(cfg, kc, vc, decode_mcs,
+                                          decode_max_len)
+        grow = decode_max_len - kc.shape[-2]
+        if grow > 0:
+            pad = [(0, 0)] * 3 + [(0, grow), (0, 0)]
+            cache["k"] = jnp.pad(kc, pad)
+            cache["v"] = jnp.pad(vc, pad)
+    return (x[:, -1], cache) + extras
+
+
+def _dense_decode_attn(q, kc, vc, pos, kind, cfg: ArchConfig):
+    """Masked softmax over the full static cache — O(S) per token.
+
+    q: (B, H, 1, Dh); kc, vc: (B, Hkv, Smax, Dh). GQA decode without
+    materializing repeated KV: fold the head group into the query
+    ("bkgd" layout) — scores are (B, Hkv, G, S) against the cache
+    directly. Returns (B, 1, H * Dh) in q.dtype."""
+    b, h = q.shape[0], q.shape[1]
+    hkv, smax = kc.shape[1], kc.shape[2]
+    g = h // hkv
+    qg = q[:, :, 0, :].reshape(b, hkv, g, cfg.head_dim)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * (cfg.head_dim**-0.5)
+    idx = jnp.arange(smax)[None, None, None, :]
+    ok = idx <= pos
+
+    def swa_mask(s):
+        w = cfg.local_window or cfg.sliding_window
+        return jnp.where(idx > pos - w, s, NEG_INF)
+
+    s = jnp.where(ok, s, NEG_INF)
+    s = jax.lax.cond(kind == KIND_SWA, swa_mask, lambda s: s, s)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p_attn, vc.astype(jnp.float32))
+    return o.astype(q.dtype).reshape(b, 1, h * cfg.head_dim)
 
 
 def decode_step(params, cfg: ArchConfig, token, cache,
-                compute_dtype=jnp.bfloat16):
+                compute_dtype=jnp.bfloat16, backend: str = "gather",
+                drift_threshold=None):
     """One decode step. token: (B,) int32; cache k/v: (L, B, Hkv, S, Dh);
     cache['pos'] is a scalar (static-batch serving, aligned sequences).
 
-    The new KV is written at `pos` via dynamic_update_slice (O(1) write);
-    attention runs masked over the full static cache (O(S) per token —
-    exactly the decode_* cells' cost model).
+    The new KV is written at `pos` via dynamic_update_slice (O(1)
+    write). Attention: caches made with `prefill(decode_max_len=)` or
+    `make_cache(decode_sla=True)` carry decode-SLA state and run
+    incremental-plan SLA decode (`_decode_step_sla`); otherwise dense
+    masked attention over the full static cache (O(S) per token —
+    exactly the decode_* cells' old cost model).
     """
+    if "sla" in cache:
+        return _decode_step_sla(params, cfg, token, cache, compute_dtype,
+                                backend, drift_threshold)
     emb = params["embed"]
     x = jnp.take(emb, token[:, None], axis=0).astype(compute_dtype)
     b = x.shape[0]
     pos = cache["pos"]  # scalar int32
     kinds = layer_kinds(cfg)
-    smax = cache["k"].shape[-2]
 
     def body(x, layer):
         p, kind, kc, vc = layer
@@ -307,26 +461,7 @@ def decode_step(params, cfg: ArchConfig, token, cache,
             kc, k_new.astype(kc.dtype), pos, axis=2)
         vc = jax.lax.dynamic_update_slice_in_dim(
             vc, v_new.astype(vc.dtype), pos, axis=2)
-        # GQA decode without materializing repeated KV: fold the head
-        # group into the query ("bkgd" layout) — scores are
-        # (B, Hkv, G, S) against the cache directly.
-        h, hkv = q.shape[1], kc.shape[1]
-        g = h // hkv
-        qg = q[:, :, 0, :].reshape(b, hkv, g, cfg.head_dim)
-        s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
-                       kc.astype(jnp.float32)) * (cfg.head_dim**-0.5)
-        idx = jnp.arange(smax)[None, None, None, :]
-        ok = idx <= pos
-
-        def swa_mask(s):
-            w = cfg.local_window or cfg.sliding_window
-            return jnp.where(idx > pos - w, s, NEG_INF)
-
-        s = jnp.where(ok, s, NEG_INF)
-        s = jax.lax.cond(kind == KIND_SWA, swa_mask, lambda s: s, s)
-        p_attn = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bkgs,bksd->bkgd", p_attn, vc.astype(jnp.float32))
-        o = o.astype(x.dtype).reshape(b, 1, h * cfg.head_dim)
+        o = _dense_decode_attn(q, kc, vc, pos, kind, cfg)
         x = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
         f, _ = _ffn(p, rms_norm(x, p["ln2"]), cfg)
         return x + f, (kc, vc)
@@ -341,8 +476,187 @@ def decode_step(params, cfg: ArchConfig, token, cache,
     return logits, new_cache
 
 
+def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
+                     backend: str, drift_threshold=None):
+    """Decode-time SLA step (DESIGN.md "Decode-time SLA").
+
+    Per token: O(1) running-state update (phi(k) v^T into the current
+    block's h/z partials and totals), then attention over only the live
+    row's critical KV blocks plus the O(1) subtractive linear branch —
+    per-step attention cost is critical-blocks + O(1) instead of O(S).
+
+    Incremental plan maintenance happens at block boundaries
+    (pos % b_q == 0): the just-completed row is classified from its
+    full pooled q and appended with `plan_extend` ("extend"), and the
+    new live row's structure is drift-gated per layer — inherit the
+    previous row's critical set (+ forced diagonal, SLA2-style reuse,
+    "reuse") unless its drift against a fresh classification from the
+    first token's q reaches that layer's threshold ("replan").
+    Boundary quantities are computed unconditionally and selected with
+    `where` — they are O(Tn) block-level ops, noise next to the
+    attention itself — which keeps the step a single static-shape jit.
+    """
+    from repro.core import backends as backend_lib
+    from repro.core import masks as masks_lib
+    from repro.core.phi import phi
+
+    backend_lib.resolve_decode(backend)
+    emb = params["embed"]
+    x = jnp.take(emb, token[:, None], axis=0).astype(compute_dtype)
+    b = x.shape[0]
+    pos = cache["pos"]
+    st = cache["sla"]
+    sla = cfg.sla
+    bq = sla.block_q
+    smax = cache["k"].shape[-2]
+    tn = smax // sla.block_kv
+    dcfg = sla.decode_plan_cfg(tn)
+    kinds = layer_kinds(cfg)
+    used = sorted(set(layer_kinds_list(cfg)))
+    if drift_threshold is None:
+        thresholds = jnp.asarray(sla.drift_thresholds(cfg.num_layers),
+                                 jnp.float32)
+    else:
+        thresholds = jnp.broadcast_to(
+            jnp.asarray(drift_threshold, jnp.float32), (cfg.num_layers,))
+
+    row = pos // bq                      # current (partial) query row
+    boundary = (pos % bq) == 0           # a block was just completed
+    append = jnp.logical_and(boundary, st["rows"] < row)
+    blk = jnp.arange(tn)
+    # tokens per KV block AFTER this step's write (for pooled-k means)
+    blk_cnt = jnp.clip(jnp.minimum((pos + 1) - blk * sla.block_kv,
+                                   sla.block_kv), 1, sla.block_kv)
+
+    def body(x, layer):
+        (p, kind, thr, kc, vc, hb, zb, ht, zt, kp_sum, qp_sum, plan,
+         llut, lcnt, lmarg, ret_prev) = layer
+        xn = rms_norm(x, p["ln1"])
+        q, k_new, v_new = _qkv(p, xn, cfg,
+                               jnp.full((b, 1), pos, jnp.int32))
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, k_new.astype(kc.dtype), pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, v_new.astype(vc.dtype), pos, axis=2)
+        h, hkv = q.shape[1], k_new.shape[1]
+        g = h // hkv
+        qf = q[:, :, 0, :].astype(jnp.float32)       # (B, H, D)
+        kf = k_new[:, :, 0, :].astype(jnp.float32)   # (B, Hkv, D)
+        vf = v_new[:, :, 0, :].astype(jnp.float32)
+
+        # ---- 1. finalize the just-completed row (uses the PRE-update
+        # kpool: the completed row cannot see the current block) ----
+        kpool_mean = kp_sum / sla.block_kv
+        kpm = jnp.repeat(kpool_mean, g, axis=1)      # (B, H, Tn, D)
+        pc_prev = masks_lib.predict_pc_row(qp_sum / bq, kpm, row - 1,
+                                           dcfg)
+        mc_prev = masks_lib.classify_row(pc_prev, row - 1, dcfg)
+        ext = plan_lib.plan_extend(plan, mc_prev, row - 1)
+        plan = jax.tree_util.tree_map(
+            lambda a, o: jnp.where(append, a, o), ext, plan)
+
+        # ---- 2. O(1) running-state update for the new token ----
+        phik = phi(kf, sla.phi)                      # (B, Hkv, D) f32
+        hupd = jnp.einsum("bkd,bke->bkde", phik, vf)
+        hb_j = jax.lax.dynamic_slice_in_dim(hb, row, 1, axis=2)
+        hb = jax.lax.dynamic_update_slice_in_dim(
+            hb, hb_j + hupd[:, :, None], row, axis=2)
+        zb_j = jax.lax.dynamic_slice_in_dim(zb, row, 1, axis=2)
+        zb = jax.lax.dynamic_update_slice_in_dim(
+            zb, zb_j + phik[:, :, None], row, axis=2)
+        ht = ht + hupd
+        zt = zt + phik
+        kp_j = jax.lax.dynamic_slice_in_dim(kp_sum, row, 1, axis=2)
+        kp_sum = jax.lax.dynamic_update_slice_in_dim(
+            kp_sum, kp_j + kf[:, :, None], row, axis=2)
+
+        # ---- 3. live-row structure (boundary only): drift-gated
+        # inherit-vs-fresh, per-layer threshold ----
+        kpm_live = jnp.repeat(kp_sum / blk_cnt[:, None], g, axis=1)
+        pc_live = masks_lib.predict_pc_row(qf, kpm_live, row, dcfg)
+        mc_fresh = masks_lib.classify_row(pc_live, row, dcfg)
+        mc_inh = jax.lax.dynamic_slice_in_dim(
+            plan.mc, row - 1, 1, axis=2)[..., 0, :]  # (B, H, Tn)
+        mc_inh = jnp.where(blk == row, jnp.int8(1), mc_inh)
+        stale = jnp.sum(pc_live * (mc_inh == 1), axis=-1)
+        fresh = jnp.sum(pc_live * (mc_fresh == 1), axis=-1)
+        r = jnp.clip(stale / jnp.maximum(fresh, plan_lib.EPS), 0.0, 1.0)
+        retention = jnp.min(r)
+        replan = jnp.logical_and((1.0 - retention) >= thr, thr < 1.0)
+        mc_live = jnp.where(replan, mc_fresh, mc_inh)
+        llut_n, lcnt_n = plan_lib.build_lut(mc_live[..., None, :],
+                                            plan.k_sel)
+        llut = jnp.where(boundary, llut_n[..., 0, :], llut)
+        lcnt = jnp.where(boundary, lcnt_n[..., 0], lcnt)
+        lmarg = jnp.where(boundary,
+                          jnp.sum((mc_live == 0).astype(jnp.int32), -1),
+                          lmarg)
+
+        # ---- 4. attention: critical blocks + O(1) linear state ----
+        state = {"k": kc, "v": vc, "hblk": hb, "zblk": zb, "htot": ht,
+                 "ztot": zt, "lut": llut, "cnt": lcnt, "marg": lmarg}
+
+        def do_sla(_):
+            return backend_lib.decode_execute(
+                state, {"proj": p["sla_proj"]}, q, pos, dcfg,
+                backend=backend).reshape(b, 1, h * cfg.head_dim) \
+                .astype(x.dtype)
+
+        def do_dense(_):
+            return _dense_decode_attn(q, kc, vc, pos, kind, cfg)
+
+        if used == [KIND_SLA]:
+            o = do_sla(None)
+        else:
+            o = jax.lax.cond(kind == KIND_SLA, do_sla, do_dense, None)
+        x2 = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+        f, _ = _ffn(p, rms_norm(x2, p["ln2"]), cfg)
+        qp_sum = jnp.where(boundary, qf, qp_sum + qf)
+        ys = (kc, vc, hb, zb, ht, zt, kp_sum, qp_sum, plan, llut, lcnt,
+              lmarg, append.astype(jnp.int32),
+              jnp.logical_and(boundary, replan).astype(jnp.int32),
+              jnp.logical_and(boundary, ~replan).astype(jnp.int32),
+              jnp.where(boundary, retention, ret_prev))
+        return x2 + f, ys
+
+    xs = (params["layers"], kinds, thresholds, cache["k"], cache["v"],
+          st["hblk"], st["zblk"], st["htot"], st["ztot"], st["kpool"],
+          st["qpool"], st["plan"], st["live_lut"], st["live_cnt"],
+          st["live_marg"], st["retention"])
+    x, ys = jax.lax.scan(body, x, xs)
+    (kc, vc, hb, zb, ht, zt, kp_sum, qp_sum, plan, llut, lcnt, lmarg,
+     exts, reps, reuses, rets) = ys
+    x = rms_norm(x, params["ln_f"])
+    table = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(jnp.float32),
+                        table.astype(jnp.float32))
+    new_st = {
+        "hblk": hb, "zblk": zb, "htot": ht, "ztot": zt, "kpool": kp_sum,
+        "qpool": qp_sum, "plan": plan, "rows": st["rows"] + append,
+        "live_lut": llut, "live_cnt": lcnt, "live_marg": lmarg,
+        "extends": st["extends"] + exts, "replans": st["replans"] + reps,
+        "reuses": st["reuses"] + reuses, "retention": rets,
+    }
+    return logits, {"k": kc, "v": vc, "pos": pos + 1, "sla": new_st}
+
+
 def make_cache(cfg: ArchConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16) -> dict:
+               dtype=jnp.bfloat16,
+               decode_sla: Optional[bool] = None) -> dict:
+    """Empty decode cache. `decode_sla` (default: cfg.sla.decode_mode ==
+    "sla") adds the decode-time SLA state (empty incremental plan +
+    zeroed running H/Z); production callers seed a *filled* decode
+    cache via `prefill(decode_max_len=...)` instead."""
     shape = (cfg.num_layers, batch, cfg.num_kv_heads, max_len, cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
-            "pos": jnp.int32(0)}
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+             "pos": jnp.int32(0)}
+    if decode_sla is None:
+        decode_sla = cfg.sla.decode_mode == "sla"
+    if decode_sla:
+        _check_decode_grid(cfg, max_len, max_len)
+        mc = jnp.full((cfg.num_layers, batch, cfg.num_heads, 0, 0),
+                      -1, jnp.int8)
+        cache["sla"] = _seed_decode_state(
+            cfg, cache["k"][..., :0, :], cache["v"][..., :0, :],
+            mc, max_len)
+    return cache

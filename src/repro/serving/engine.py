@@ -16,6 +16,15 @@ request stream — re-planning a layer only when the measured plan drift
 structure is dominated by positional/locality patterns, so consecutive
 prefill chunks share most of it; the drift metric catches the ones that
 don't.
+
+Decode-time SLA (DESIGN.md "Decode-time SLA"): with `decode_sla=True`
+(or cfg.sla.decode_mode == "sla") prefill seeds a static-grid
+incremental block plan plus the linear branch's running H/Z state, and
+every decode step attends only to the live row's critical KV blocks +
+an O(1) linear term instead of the full O(S) cache. ServeStats tracks
+decode-plan builds (prompt rows), extends (rows appended at block
+boundaries), and replans/reuses (drift-gated live-row refreshes, with
+per-layer thresholds).
 """
 from __future__ import annotations
 
@@ -53,13 +62,26 @@ class ServeStats:
     plan_replans: int = 0
     plan_reuses: int = 0
     last_retention: float = 1.0
+    # decode-plan accounting (layer granularity; DESIGN.md "Decode-time
+    # SLA"): builds = decode plans seeded at prefill (one per layer per
+    # chunk, covering all prompt rows), extends = completed rows
+    # appended via plan_extend, replans = live rows re-classified at a
+    # block boundary (drift over that layer's threshold), reuses = live
+    # rows inheriting the previous row's structure.
+    decode_plan_builds: int = 0
+    decode_plan_extends: int = 0
+    decode_plan_replans: int = 0
+    decode_plan_reuses: int = 0
+    decode_last_retention: float = 1.0
 
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, batch_size: int = 4,
                  max_len: int = 512, greedy: bool = True,
                  backend: str = "gather", plan_reuse: str = "off",
-                 drift_threshold: Optional[float] = None):
+                 drift_threshold=None, decode_sla: bool = False):
+        import inspect
+
         from repro.core import backends as backend_registry
         backend = backend_registry.resolve(backend)  # fail loudly, early
         if plan_reuse not in ("off", "adaptive"):
@@ -70,45 +92,72 @@ class ServingEngine:
         self.params = params
         self.mdl = registry.get_model(cfg)
         self.batch_size = batch_size
-        self.max_len = max_len
         self.greedy = greedy
         self.backend = backend
         self.plan_reuse = plan_reuse
-        self.drift_threshold = (cfg.sla.plan_drift_threshold
-                                if drift_threshold is None
-                                else float(drift_threshold))
+        self.decode_sla = decode_sla or cfg.sla.decode_mode == "sla"
+        if drift_threshold is None:
+            self.drift_threshold = cfg.sla.plan_drift_threshold
+        elif isinstance(drift_threshold, (tuple, list)):
+            self.drift_threshold = tuple(float(t) for t in drift_threshold)
+        else:
+            self.drift_threshold = float(drift_threshold)
+        if self.decode_sla:
+            # decode-SLA block grids are static: the cache length must be
+            # a whole number of SLA blocks (DESIGN.md "Decode-time SLA")
+            block = max(cfg.sla.block_q, 1)
+            max_len = ((max_len + block - 1) // block) * block
+        self.max_len = max_len
         self.stats = ServeStats()
         self._plans = None
         self._bucket: Optional[int] = None  # static prefill (len) bucket
 
         mdl, backend_, thr = self.mdl, backend, self.drift_threshold
         if plan_reuse != "off":
-            import inspect
             prefill_fn = getattr(mdl, "prefill", None)
             if (prefill_fn is None or "plans" not in
                     inspect.signature(prefill_fn).parameters):
                 raise ValueError(
                     f"plan_reuse={plan_reuse!r} requires a model family "
                     f"with plan-aware prefill (got family {cfg.family!r})")
+        if self.decode_sla:
+            prefill_fn = getattr(mdl, "prefill", None)
+            if (prefill_fn is None or "decode_max_len" not in
+                    inspect.signature(prefill_fn).parameters):
+                raise ValueError(
+                    f"decode_sla requires a model family with decode-SLA "
+                    f"prefill (got family {cfg.family!r})")
+        # decode-SLA prefills seed the decode state against the final
+        # cache length; plain prefills are grown by _grow_cache instead
+        dml = self.max_len if self.decode_sla else None
+        dkw = {"decode_max_len": dml} if dml is not None else {}
 
         @jax.jit
         def _prefill(params, tokens):
-            return mdl.prefill(params, cfg, tokens, backend=backend_)
+            return mdl.prefill(params, cfg, tokens, backend=backend_,
+                               **dkw)
 
         @jax.jit
         def _prefill_plan(params, tokens):
             return mdl.prefill(params, cfg, tokens, backend=backend_,
-                               return_plans=True)
+                               return_plans=True, **dkw)
 
         @jax.jit
         def _prefill_reuse(params, tokens, plans):
             return mdl.prefill(params, cfg, tokens, backend=backend_,
                                plans=plans, drift_threshold=thr,
-                               return_plans=True)
+                               return_plans=True, **dkw)
 
-        @jax.jit
-        def _decode(params, token, cache):
-            return mdl.decode_step(params, cfg, token, cache)
+        if self.decode_sla:
+            @jax.jit
+            def _decode(params, token, cache):
+                return mdl.decode_step(params, cfg, token, cache,
+                                       backend=backend_,
+                                       drift_threshold=thr)
+        else:
+            @jax.jit
+            def _decode(params, token, cache):
+                return mdl.decode_step(params, cfg, token, cache)
 
         self._prefill = _prefill
         self._prefill_plan = _prefill_plan
@@ -137,7 +186,9 @@ class ServingEngine:
         return max(block, ((plen + block - 1) // block) * block)
 
     def run(self, requests: List[Request]) -> List[Request]:
-        if self.plan_reuse != "off":
+        if self.plan_reuse != "off" or self.decode_sla:
+            # both plan reuse and decode-SLA need block-aligned static
+            # prefill shapes (reused plans / the decode block grid)
             bucket = self._prefill_bucket(requests)
             if self._bucket is None or bucket > self._bucket:
                 # a longer prompt grows the bucket; cached plans are for
@@ -164,9 +215,12 @@ class ServingEngine:
     def _run_prefill(self, toks: jnp.ndarray):
         """Prefill one chunk, routing through the plan-reuse path when
         enabled. Returns last_hidden, cache."""
+        nl = self.cfg.num_layers
+        if self.decode_sla:
+            # each layer's decode plan is seeded (all prompt rows) here
+            self.stats.decode_plan_builds += nl
         if self.plan_reuse == "off":
             return self._prefill(self.params, toks)
-        nl = self.cfg.num_layers
         if self._plans is None:
             last_hidden, cache, plans = self._prefill_plan(self.params,
                                                            toks)
@@ -184,7 +238,7 @@ class ServingEngine:
 
     def _run_group(self, group: List[Request]) -> List[Request]:
         b = len(group)
-        if self.plan_reuse == "off":
+        if self.plan_reuse == "off" and not self.decode_sla:
             bpad, plen = b, max(len(r.prompt) for r in group)
         else:
             # one static (batch, len) bucket so every chunk shares the
@@ -201,7 +255,10 @@ class ServingEngine:
         budget = max(r.max_new_tokens for r in group)
         t0 = time.time()
         last_hidden, cache = self._run_prefill(jnp.asarray(toks))
-        cache = self._grow_cache(cache)
+        if not self.decode_sla:
+            # decode-SLA prefill already sized the cache (and its block
+            # state) for max_len; only plain caches need growing
+            cache = self._grow_cache(cache)
         jax.block_until_ready(last_hidden)
         self.stats.prefill_tokens += b * plen
         self.stats.prefill_s += time.time() - t0
@@ -225,6 +282,18 @@ class ServingEngine:
             self.stats.decode_tokens += int((step < alive).sum())
         jax.block_until_ready(token)
         self.stats.decode_s += time.time() - t0
+        if self.decode_sla:
+            # harvest this group's decode-plan counters (cumulative in
+            # the group-local cache since prefill zeroed them)
+            stc = cache["sla"]
+            self.stats.decode_plan_extends += int(
+                np.sum(np.asarray(stc["extends"])))
+            self.stats.decode_plan_replans += int(
+                np.sum(np.asarray(stc["replans"])))
+            self.stats.decode_plan_reuses += int(
+                np.sum(np.asarray(stc["reuses"])))
+            self.stats.decode_last_retention = float(
+                np.min(np.asarray(stc["retention"])))
         for j, r in enumerate(group):
             r.tokens_out = outs[j][: r.max_new_tokens]
             r.latency_s = self.stats.prefill_s + self.stats.decode_s

@@ -1,0 +1,450 @@
+"""Decode-time SLA (ISSUE 3): incremental block plans + O(1) linear-state
+decode.
+
+Four pillars:
+  * property tests — `plan_extend` appended row-by-row reproduces
+    `plan_from_mask` of the full mask, row-local classification matches
+    the full classifier, and the running H/Z state equals a recompute
+    from the KV cache after N decoded tokens;
+  * the decode parity matrix — SLA decode vs dense decode vs one-shot
+    `forward` on the same tokens, across backend x dtype x
+    fresh/extended plan (exact greedy-token equality at f32 on
+    saturating toy configs, conformance-style tolerances otherwise);
+  * engine integration — ServingEngine with decode-SLA on: identical
+    greedy tokens vs dense decode plus decode-plan build/extend/replan
+    accounting in ServeStats;
+  * the FLOPs model — per-token decode attention cost is
+    critical-blocks + O(1), independent of context length.
+
+Long parity sweeps carry @pytest.mark.slow (scripts/ci.sh --decode runs
+them in a second pass).
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_arch
+from repro.core import (SLAConfig, classify_blocks, classify_row,
+                        compute_mask, empty_plan, plan_extend,
+                        plan_from_mask, pool_blocks, predict_pc,
+                        predict_pc_row, resolve_decode)
+from repro.core.flops import dense_decode_flops, sla_decode_flops
+from repro.core.phi import phi
+from repro.models import transformer as tfm
+
+TOL_F32 = dict(atol=5e-5, rtol=5e-5)
+TOL_BF16 = dict(atol=5e-2, rtol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# property tests: plan_extend == plan_from_mask on the full mask
+# ---------------------------------------------------------------------------
+def _decode_cfg(**kw):
+    base = dict(block_q=16, block_kv=16, causal=True, kl_frac=0.0,
+                col_capacity_factor=None, fixed_budget=2)
+    base.update(kw)
+    return SLAConfig(**base)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), causal=st.booleans())
+def test_plan_extend_reproduces_plan_from_mask(seed, causal):
+    """Appending rows block-by-block == planning the full mask at once:
+    exact on mc/lut/counts/col_counts/marginal, and on live col_lut
+    slots (dead padding differs by contract; no backend reads it)."""
+    cfg = _decode_cfg(causal=causal)
+    rq, rk = jax.random.split(jax.random.PRNGKey(seed))
+    q = jax.random.normal(rq, (1, 2, 128, 16))
+    k = jax.random.normal(rk, (1, 2, 128, 16))
+    mc = compute_mask(q, k, cfg)
+    tm, tn = mc.shape[-2:]
+    full = plan_from_mask(mc, cfg)
+    plan = empty_plan(cfg, 1, 2, tm, tn)
+    for r in range(tm):
+        plan = plan_extend(plan, mc[..., r, :], r)
+    np.testing.assert_array_equal(np.asarray(plan.mc), np.asarray(mc))
+    np.testing.assert_array_equal(np.asarray(plan.lut),
+                                  np.asarray(full.lut))
+    np.testing.assert_array_equal(np.asarray(plan.counts),
+                                  np.asarray(full.counts))
+    np.testing.assert_array_equal(np.asarray(plan.col_counts),
+                                  np.asarray(full.col_counts))
+    np.testing.assert_array_equal(np.asarray(plan.marginal),
+                                  np.asarray(full.marginal))
+    live = np.arange(full.w_col) < np.asarray(full.col_counts)[..., None]
+    np.testing.assert_array_equal(
+        np.where(live, np.asarray(plan.col_lut), 0),
+        np.where(live, np.asarray(full.col_lut), 0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_plan_extend_partial_prefix(seed):
+    """A partially-extended plan equals plan_from_mask of the mask with
+    unwritten rows forced all-negligible (the mid-decode state)."""
+    cfg = _decode_cfg()
+    rq, rk = jax.random.split(jax.random.PRNGKey(seed))
+    q = jax.random.normal(rq, (1, 1, 96, 16))
+    k = jax.random.normal(rk, (1, 1, 96, 16))
+    mc = np.asarray(compute_mask(q, k, cfg))
+    tm, tn = mc.shape[-2:]
+    cut = tm // 2
+    masked = mc.copy()
+    masked[..., cut:, :] = -1
+    full = plan_from_mask(jnp.asarray(masked), cfg)
+    plan = empty_plan(cfg, 1, 1, tm, tn)
+    for r in range(cut):
+        plan = plan_extend(plan, jnp.asarray(mc[..., r, :]), r)
+    np.testing.assert_array_equal(np.asarray(plan.mc), masked)
+    np.testing.assert_array_equal(np.asarray(plan.counts),
+                                  np.asarray(full.counts))
+    np.testing.assert_array_equal(np.asarray(plan.col_counts),
+                                  np.asarray(full.col_counts))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_row_local_classification_matches_full(seed):
+    """classify_row / predict_pc_row equal the `row` slice of the full
+    classifier — the invariance that makes incremental planning exact."""
+    cfg = _decode_cfg()
+    rq, rk = jax.random.split(jax.random.PRNGKey(seed))
+    q = jax.random.normal(rq, (1, 2, 128, 16))
+    k = jax.random.normal(rk, (1, 2, 128, 16))
+    pc = predict_pc(q, k, cfg)
+    mc = classify_blocks(pc, cfg)
+    qp, kp = pool_blocks(q, cfg.block_q), pool_blocks(k, cfg.block_kv)
+    for r in range(pc.shape[-2]):
+        np.testing.assert_allclose(
+            np.asarray(predict_pc_row(qp[..., r, :], kp, r, cfg)),
+            np.asarray(pc[..., r, :]), atol=1e-6)
+        np.testing.assert_array_equal(
+            np.asarray(classify_row(pc[..., r, :], r, cfg)),
+            np.asarray(mc[..., r, :]))
+
+
+def test_classification_invariant_to_grid_width():
+    """With a fixed budget and kl_frac=0 the row classification does not
+    depend on how many (causally invalid) trailing blocks the static
+    grid carries — the static-grid embedding is exact."""
+    cfg = _decode_cfg(fixed_budget=3)
+    rq, rk = jax.random.split(jax.random.PRNGKey(0))
+    q = jax.random.normal(rq, (1, 2, 96, 16))
+    k = jax.random.normal(rk, (1, 2, 96, 16))
+    mc_small = np.asarray(compute_mask(q, k, cfg))
+    pad = jnp.zeros((1, 2, 96, 16))
+    mc_big = np.asarray(compute_mask(
+        jnp.concatenate([q, pad], axis=2),
+        jnp.concatenate([k, pad], axis=2), cfg))
+    np.testing.assert_array_equal(mc_big[..., :6, :6], mc_small)
+
+
+# ---------------------------------------------------------------------------
+# decode harness
+# ---------------------------------------------------------------------------
+def _arch(kh=1.0, kl=0.0, decode_budget=None, drift=0.1, num_layers=2):
+    cfg = get_arch("qwen3-1.7b").smoke()
+    return dataclasses.replace(
+        cfg, num_layers=num_layers,
+        sla=cfg.sla.replace(kh_frac=kh, kl_frac=kl, decode_mode="sla",
+                            decode_budget=decode_budget,
+                            plan_drift_threshold=drift))
+
+
+def _params(cfg, proj_scale=0.3):
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    # a non-zero Proj makes the linear branch (and its empty-marginal
+    # gating) observable in logits
+    params["layers"]["sla_proj"] = jax.random.normal(
+        jax.random.PRNGKey(7), params["layers"]["sla_proj"].shape) \
+        * proj_scale
+    return params
+
+
+def _greedy(cfg, params, toks, steps, max_len, dtype, sla, backend="gather"):
+    """Greedy decode; returns (tokens (T, B), logits (T, B, V), cache)."""
+    if sla:
+        last, cache = tfm.prefill(params, cfg, toks, compute_dtype=dtype,
+                                  decode_max_len=max_len)
+    else:
+        last, cache = tfm.prefill(params, cfg, toks, compute_dtype=dtype)
+        pad = max_len - toks.shape[1]
+        cache = {"pos": cache["pos"],
+                 "k": jnp.pad(cache["k"],
+                              [(0, 0)] * 3 + [(0, pad), (0, 0)]),
+                 "v": jnp.pad(cache["v"],
+                              [(0, 0)] * 3 + [(0, pad), (0, 0)])}
+    step = jax.jit(functools.partial(tfm.decode_step, compute_dtype=dtype,
+                                     backend=backend),
+                   static_argnums=(1,))
+    table = params.get("unembed", params["embed"])
+    tok = jnp.argmax(jnp.einsum("bd,vd->bv", last.astype(jnp.float32),
+                                table.astype(jnp.float32)), -1) \
+        .astype(jnp.int32)
+    out_t, out_l = [], []
+    for _ in range(steps):
+        out_t.append(np.asarray(tok))
+        logits, cache = step(params, cfg, tok, cache)
+        out_l.append(np.asarray(logits, np.float32))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    return np.stack(out_t), np.stack(out_l), cache
+
+
+def _forward_greedy_chain(cfg, params, full_toks, plen, dtype):
+    """Teacher-forced one-shot forward over prompt+decoded tokens;
+    returns the greedy chain tokens from position plen-1 on."""
+    x, _ = tfm.forward(params, cfg, jnp.asarray(full_toks),
+                       compute_dtype=dtype)
+    table = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    return np.asarray(jnp.argmax(logits[:, plen - 1:-1], -1)).T
+
+
+# fresh: decode stays inside the first post-prompt block (no plan_extend
+# call fires); extended: decode crosses block boundaries and the plan
+# grows row-by-row mid-flight.
+PARITY = [
+    pytest.param(backend, dtype, plan_state,
+                 id=f"{backend}-{dtype}-{plan_state}")
+    for backend in ("reference", "gather")
+    for dtype in ("f32", "bf16")
+    for plan_state in ("fresh", "extended")
+]
+
+
+@pytest.mark.parametrize("backend,dtype,plan_state", PARITY)
+def test_decode_parity_matrix(backend, dtype, plan_state):
+    """SLA decode vs dense decode vs one-shot forward on a saturating
+    toy config (every valid block critical, so all three compute exact
+    causal attention): greedy tokens identical at f32, conformance
+    tolerances on logits; bf16 matches within bf16 tolerances."""
+    cfg = _arch(kh=1.0, kl=0.0)
+    params = _params(cfg)
+    plen, max_len = 32, 96
+    steps = 16 if plan_state == "fresh" else 32
+    dt = jnp.float32 if dtype == "f32" else jnp.bfloat16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, plen), 0,
+                              cfg.vocab_size)
+    sla_t, sla_l, cache = _greedy(cfg, params, toks, steps, max_len, dt,
+                                  sla=True, backend=backend)
+    dense_t, dense_l, _ = _greedy(cfg, params, toks, steps, max_len, dt,
+                                  sla=False)
+    if dtype == "f32":
+        np.testing.assert_array_equal(sla_t, dense_t)
+        np.testing.assert_allclose(sla_l, dense_l, atol=2e-4, rtol=2e-4)
+        # one-shot forward over the same tokens reproduces the chain
+        full = np.concatenate([np.asarray(toks), sla_t.T], axis=1)
+        fwd_t = _forward_greedy_chain(cfg, params, full, plen, dt)
+        np.testing.assert_array_equal(sla_t, fwd_t)
+    else:
+        np.testing.assert_allclose(sla_l, dense_l, **TOL_BF16)
+    st_ = cache["sla"]
+    expect_ext = 0 if plan_state == "fresh" else cfg.num_layers
+    assert int(np.sum(np.asarray(st_["extends"]))) == expect_ext
+    assert int(st_["rows"]) == plen // cfg.sla.block_q + (
+        0 if plan_state == "fresh" else 1)
+
+
+def test_decode_backends_agree_non_saturating():
+    """reference vs gather decode execution on a genuinely sparse
+    config: same plan/state evolution, same outputs (f32)."""
+    cfg = _arch(kh=0.25, kl=0.0)
+    params = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 48), 0,
+                              cfg.vocab_size)
+    ref_t, ref_l, _ = _greedy(cfg, params, toks, 24, 96, jnp.float32,
+                              sla=True, backend="reference")
+    gat_t, gat_l, _ = _greedy(cfg, params, toks, 24, 96, jnp.float32,
+                              sla=True, backend="gather")
+    np.testing.assert_allclose(gat_l, ref_l, **TOL_F32)
+    np.testing.assert_array_equal(gat_t, ref_t)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_running_hz_state_matches_recompute(seed):
+    """After N decoded tokens the running per-block h_j/z_j partials and
+    their totals equal a recompute sum phi(k) v^T over the KV cache."""
+    cfg = _arch(kh=0.25, kl=0.0)
+    params = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (1, 32), 0,
+                              cfg.vocab_size)
+    _, _, cache = _greedy(cfg, params, toks, 21, 96, jnp.float32,
+                          sla=True)
+    pos = int(cache["pos"])
+    st_ = cache["sla"]
+    bkv = cfg.sla.block_kv
+    kc, vc = cache["k"], cache["v"]  # (L, B, Hkv, S, D)
+    written = (jnp.arange(kc.shape[-2]) < pos)[:, None]
+    kp = phi(kc, cfg.sla.phi) * written
+    vb = vc.astype(jnp.float32) * written
+    tn = kc.shape[-2] // bkv
+    kpb = kp.reshape(*kp.shape[:-2], tn, bkv, kp.shape[-1])
+    vbb = vb.reshape(*vb.shape[:-2], tn, bkv, vb.shape[-1])
+    hblk = jnp.einsum("...nkd,...nke->...nde", kpb, vbb)
+    zblk = jnp.sum(kpb, axis=-2)
+    np.testing.assert_allclose(np.asarray(st_["hblk"]), np.asarray(hblk),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_["zblk"]), np.asarray(zblk),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_["htot"]),
+                               np.asarray(jnp.sum(hblk, axis=3)),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_["ztot"]),
+                               np.asarray(jnp.sum(zblk, axis=3)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_decode_per_layer_drift_thresholds():
+    """Per-layer thresholds gate the live-row refresh layer-by-layer:
+    threshold 0.0 re-plans at every block boundary, 1.0 never does."""
+    cfg = _arch(kh=0.25, kl=0.0, drift=(0.0, 1.0))
+    params = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 32), 0,
+                              cfg.vocab_size)
+    _, _, cache = _greedy(cfg, params, toks, 40, 96, jnp.float32,
+                          sla=True)
+    st_ = cache["sla"]
+    reps = np.asarray(st_["replans"])
+    reuses = np.asarray(st_["reuses"])
+    boundaries = reps + reuses
+    assert boundaries[0] == boundaries[1] > 0
+    assert reps[0] == boundaries[0] and reuses[0] == 0
+    assert reps[1] == 0 and reuses[1] == boundaries[1]
+
+
+@pytest.mark.slow
+def test_decode_parity_long_sweep():
+    """Long parity sweep: GQA + 80 decoded tokens crossing five block
+    boundaries, exact greedy-token parity at f32."""
+    cfg = _arch(kh=1.0, kl=0.0)
+    params = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(11), (2, 48), 0,
+                              cfg.vocab_size)
+    sla_t, sla_l, cache = _greedy(cfg, params, toks, 80, 192,
+                                  jnp.float32, sla=True)
+    dense_t, dense_l, _ = _greedy(cfg, params, toks, 80, 192,
+                                  jnp.float32, sla=False)
+    np.testing.assert_array_equal(sla_t, dense_t)
+    np.testing.assert_allclose(sla_l, dense_l, atol=5e-4, rtol=5e-4)
+    assert int(np.sum(np.asarray(cache["sla"]["extends"]))) == \
+        4 * cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# engine integration (ISSUE 3 satellite)
+# ---------------------------------------------------------------------------
+def test_engine_decode_sla_matches_dense_and_counts():
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = _arch(kh=1.0, kl=0.0)
+    params = _params(cfg)
+    rs = np.random.default_rng(0)
+
+    def mk():
+        return [Request(rid=i,
+                        prompt=rs.integers(0, cfg.vocab_size, size=32)
+                        .astype(np.int32),
+                        max_new_tokens=20) for i in range(4)]
+
+    rs = np.random.default_rng(0)
+    dense_cfg = dataclasses.replace(
+        cfg, sla=cfg.sla.replace(decode_mode="dense"))
+    dense = ServingEngine(dense_cfg, params, batch_size=2,
+                          max_len=96).run(mk())
+    rs = np.random.default_rng(0)
+    engine = ServingEngine(cfg, params, batch_size=2, max_len=96,
+                           decode_sla=True)
+    done = engine.run(mk())
+    for ra, rb in zip(dense, done):
+        assert ra.tokens_out == rb.tokens_out
+    st_ = engine.stats
+    nl, groups = cfg.num_layers, 2
+    # prompt rows planned once per group prefill; one boundary appends
+    # (pos 48) and two boundaries (pos 32, 48) init the live row
+    assert st_.decode_plan_builds == groups * nl
+    assert st_.decode_plan_extends == groups * nl
+    assert st_.decode_plan_replans + st_.decode_plan_reuses == \
+        2 * groups * nl
+    assert 0.0 <= st_.decode_last_retention <= 1.0
+
+
+def test_engine_decode_sla_requires_capable_family():
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_arch("rwkv6-7b").smoke()
+    with pytest.raises(ValueError, match="decode_sla"):
+        ServingEngine(cfg, params=None, decode_sla=True)
+
+
+def test_engine_rounds_max_len_to_block_grid():
+    from repro.serving.engine import ServingEngine
+
+    cfg = _arch()
+    engine = ServingEngine(cfg, _params(cfg), batch_size=2, max_len=70,
+                           decode_sla=True)
+    assert engine.max_len % cfg.sla.block_q == 0
+    assert engine.max_len >= 70
+
+
+# ---------------------------------------------------------------------------
+# FLOPs: critical-blocks + O(1) linear term instead of O(S)
+# ---------------------------------------------------------------------------
+def test_decode_flops_independent_of_context_length():
+    cfg = SLAConfig(block_q=64, block_kv=64, causal=True, kl_frac=0.0,
+                    decode_budget=8, fixed_budget=8)
+    f1 = sla_decode_flops(8192, 64, 8, cfg)
+    f2 = sla_decode_flops(65536, 64, 8, cfg)
+    for key in ("sparse", "state", "linear", "proj"):
+        assert f1[key] == f2[key], key
+    assert f2["dense"] == 8 * f1["dense"]
+    assert f2["reduction_x"] > 4 * f1["reduction_x"]
+    # the only context-dependent term is the amortized boundary planning
+    assert f2["total"] - f1["total"] == pytest.approx(
+        f2["plan"] - f1["plan"])
+    # and dense decode is O(S)
+    assert dense_decode_flops(65536, 64, 8) == 8 * dense_decode_flops(
+        8192, 64, 8)
+
+
+# ---------------------------------------------------------------------------
+# loud failures
+# ---------------------------------------------------------------------------
+def test_resolve_decode_fails_loudly():
+    assert resolve_decode("gather") == "gather"
+    assert resolve_decode("kernel") == "gather"  # no per-token Pallas
+    assert resolve_decode("dense") == "reference"
+    with pytest.raises(ValueError, match="unknown SLA decode backend"):
+        resolve_decode("cuda")
+
+
+def test_prefill_rejects_unaligned_decode_grid():
+    cfg = _arch()
+    params = _params(cfg)
+    toks = jnp.zeros((1, 30), jnp.int32)  # not a multiple of block_q=16
+    with pytest.raises(ValueError, match="block-aligned"):
+        tfm.prefill(params, cfg, toks, decode_max_len=96)
+    with pytest.raises(ValueError, match="block-aligned"):
+        tfm.prefill(params, cfg, jnp.zeros((1, 32), jnp.int32),
+                    decode_max_len=90)
+
+
+def test_prefill_rejects_window_constrained_decode():
+    """The subtractive linear state cannot exclude out-of-window blocks;
+    window-constrained SLA must fail loudly instead of silently
+    diverging from prefill numerics."""
+    cfg = _arch()
+    cfg = dataclasses.replace(cfg, sla=cfg.sla.replace(window=32))
+    params = _params(cfg)
+    with pytest.raises(ValueError, match="window"):
+        tfm.prefill(params, cfg, jnp.zeros((1, 32), jnp.int32),
+                    decode_max_len=96)
+    with pytest.raises(ValueError, match="window"):
+        tfm.make_cache(dataclasses.replace(
+            _arch(), sliding_window=64), 1, 96, decode_sla=True)

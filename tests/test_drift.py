@@ -214,6 +214,60 @@ def test_adaptive_matches_every_step_replanning_at_threshold_zero():
                                rtol=2e-5)
 
 
+def test_drift_thresholds_helper_normalizes_per_layer():
+    """SLAConfig.plan_drift_threshold accepts a per-layer tuple (ISSUE 3
+    satellite: per-layer, not min-reduced)."""
+    assert _cfg().drift_thresholds(3) == (0.1, 0.1, 0.1)
+    cfg = _cfg(plan_drift_threshold=(0.0, 0.5))
+    assert cfg.drift_thresholds(2) == (0.0, 0.5)
+    with pytest.raises(ValueError, match="2 entries"):
+        cfg.drift_thresholds(3)
+
+
+def test_per_layer_drift_thresholds_gate_layers_independently():
+    """threshold (0.0, 1.0): layer 0 re-plans every adaptive step, layer
+    1 never — each layer's decision uses its own threshold instead of
+    one min-reduced scalar for the whole stack."""
+    from repro.models import dit
+    cfg = _dit_cfg()
+    params = _dit_params(cfg)
+    noise = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 8))
+    steps = 4
+    _, tr = dit.sample(params, cfg, noise, num_steps=steps,
+                       refresh_mode="adaptive",
+                       drift_threshold=jnp.asarray([0.0, 1.0]),
+                       return_trace=True)
+    reps = np.asarray(tr["replanned"])  # (steps-1, L)
+    assert reps[:, 0].all() and not reps[:, 1].any()
+    assert list(np.asarray(tr["replan_count"])) == [steps - 1, 0]
+    # the same per-layer thresholds flow from the config default
+    import dataclasses as dc
+    cfg2 = dc.replace(cfg, sla=cfg.sla.replace(
+        plan_drift_threshold=(0.0, 1.0), plan_refresh_mode="adaptive"))
+    _, tr2 = dit.sample(params, cfg2, noise, num_steps=steps,
+                        refresh_mode="adaptive", return_trace=True)
+    assert list(np.asarray(tr2["replan_count"])) == [steps - 1, 0]
+
+
+def test_per_layer_thresholds_in_lm_prefill_refresh():
+    """transformer.forward threads per-layer thresholds through the
+    layer scan: with (0.0, 1.0) only layer 0 refreshes on reuse."""
+    from repro.configs import get_arch
+    from repro.models import transformer as tfm
+    cfg = get_arch("qwen3-1.7b").smoke()
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 64), 0,
+                              cfg.vocab_size)
+    toks2 = jax.random.randint(jax.random.PRNGKey(2), (1, 64), 0,
+                               cfg.vocab_size)
+    *_, plans = tfm.prefill(params, cfg, toks, return_plans=True)
+    *_, info = tfm.prefill(params, cfg, toks2, plans=plans,
+                           drift_threshold=jnp.asarray([0.0, 1.0]),
+                           return_plans=True)
+    rep = np.asarray(info["replanned"])
+    assert rep[0] and not rep[1]
+
+
 def test_sample_rejects_unknown_refresh_mode():
     from repro.models import dit
     cfg = _dit_cfg()
