@@ -66,8 +66,8 @@ def trained_qkv(train_steps: int = 120, seq: int = SEQ):
     from repro.models.common import rms_norm
     p0 = jax.tree.map(lambda t: t[0], params["layers"])
     pos = jnp.arange(seq, dtype=jnp.int32)[None].repeat(x.shape[0], 0)
-    a0, _, _ = tfm._attn(p0, rms_norm(x, p0["ln1"]), jnp.int32(1), cfg,
-                         pos, "reference")
+    a0 = tfm._attn(p0, rms_norm(x, p0["ln1"]), jnp.int32(1), cfg,
+                   pos, "reference")[0]
     x = x + a0
     f0, _ = tfm._ffn(p0, rms_norm(x, p0["ln2"]), cfg)
     x = x + f0
@@ -78,6 +78,38 @@ def trained_qkv(train_steps: int = 120, seq: int = SEQ):
     np.savez(cache_file, q=np.asarray(q, np.float32),
              k=np.asarray(kk, np.float32), v=np.asarray(vv, np.float32))
     return q, kk, vv
+
+
+def toy_dit_distill_setup(routing_mode, routing_temp=0.05, seed=0,
+                          n=128, b=2):
+    """Shared toy-DiT distillation harness (benchmarks/fig_routing.py and
+    tests/test_routing.py): a 2-layer DiT whose output head and SLA
+    merge are randomized — fresh DiTs zero-init `patch_out`/`sla_proj`,
+    which would make the distillation target trivially zero and kill
+    the linear branch (and with it the routing head's straight-through
+    gradients). Returns (cfg, params, batch)."""
+    from repro.configs.base import ArchConfig
+    from repro.core.config import SLAConfig
+    from repro.models import dit
+
+    cfg = ArchConfig(
+        name=f"dit-routing-{routing_mode}", family="dit", num_layers=2,
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=128,
+        vocab_size=0, patch_dim=8, cross_attn=False,
+        attention_kind="sla",
+        sla=SLAConfig(block_q=16, block_kv=16, kh_frac=0.25,
+                      kl_frac=0.25, routing_mode=routing_mode,
+                      routing_temp=routing_temp))
+    params = dit.init(jax.random.PRNGKey(seed), cfg)
+    params["patch_out"] = jax.random.normal(
+        jax.random.PRNGKey(3), params["patch_out"].shape) * 0.2
+    params["layers"]["sla_proj"] = jax.random.normal(
+        jax.random.PRNGKey(7), params["layers"]["sla_proj"].shape) * 0.3
+    rb = jax.random.split(jax.random.PRNGKey(2), 3)
+    batch = {"latents": jax.random.normal(rb[0], (b, n, cfg.patch_dim)),
+             "noise": jax.random.normal(rb[1], (b, n, cfg.patch_dim)),
+             "t": jax.random.uniform(rb[2], (b,))}
+    return cfg, params, batch
 
 
 def attention_weights(q, k):

@@ -1,0 +1,111 @@
+"""Learned vs threshold routing at matched critical-block budgets
+(DESIGN.md "Learned routing").
+
+Three measurements, all at the SAME kh_frac/kl_frac (so both routers
+select the same number of critical blocks — the comparison is routing
+quality/cost, never FLOP budget):
+  (a) MEASURED plan-build latency: the learned router adds two per-head
+      d x d projections of the pooled block features to the planning
+      pipeline — this prices that overhead on compiled XLA;
+  (b) DERIVED attention-FLOPs overhead of the routing head from
+      `core/flops.sla_flops` (share of total SLA attention cost);
+  (c) MEASURED end-to-end distillation fine-tune on a toy DiT
+      (exact-attention teacher): per-step wall time and first->final
+      loss with the router frozen at the threshold rule vs trainable
+      learned routing (+ sla_proj in both arms). Both arms start from
+      the identical loss (identity init == threshold, bitwise); at toy
+      scale and a handful of steps the arms land close — the row exists
+      to price the step-time overhead and track the gap as configs
+      scale.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SLAConfig, plan_attention, resolve, routing_init
+from repro.core.flops import sla_flops
+
+
+def _time(fn, *args, reps=10):
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def plan_latency(n=2048, d=64, h=4):
+    """(us threshold, us learned, critical_frac) for one plan build."""
+    cfg_t = SLAConfig(block_q=64, block_kv=64, kh_frac=0.05, kl_frac=0.10)
+    cfg_l = cfg_t.replace(routing_mode="learned")
+    q, k = (jax.random.normal(r, (1, h, n, d))
+            for r in jax.random.split(jax.random.PRNGKey(0), 2))
+    routing = routing_init(h, d)
+    plan_t = jax.jit(lambda q, k: plan_attention(q, k, cfg_t))
+    plan_l = jax.jit(lambda q, k: plan_attention(q, k, cfg_l,
+                                                 routing=routing))
+    crit = float(jnp.mean(plan_t(q, k).mc == 1))
+    assert crit == float(jnp.mean(plan_l(q, k).mc == 1))  # matched budget
+    return _time(plan_t, q, k), _time(plan_l, q, k), crit
+
+
+def distill_race(steps=10):
+    """Fine-tune (routing + sla_proj) under the distillation loss with
+    each router; returns {mode: (us_per_step, first_loss, final_loss)}."""
+    from benchmarks._toy import toy_dit_distill_setup
+    from repro.models import dit
+    from repro.optim import adamw
+
+    out = {}
+    for mode in ("threshold", "learned"):
+        cfg, params, batch = toy_dit_distill_setup(mode)
+        mask = adamw.trainable_mask(params, ("routing", "sla_proj"))
+        opt_cfg = adamw.AdamWConfig(lr=3e-2, total_steps=steps,
+                                    warmup_steps=1, weight_decay=0.0)
+        opt = adamw.init(params)
+
+        @jax.jit
+        def step(p, o):
+            loss, g = jax.value_and_grad(
+                lambda p: dit.distill_loss_fn(
+                    p, cfg, batch, compute_dtype=jnp.float32))(p)
+            p, o, _ = adamw.update(p, g, o, opt_cfg, trainable=mask)
+            return p, o, loss
+
+        params, opt, first = step(params, opt)  # compile + step 0
+        jax.block_until_ready(first)
+        t0 = time.time()
+        last = first
+        for _ in range(steps - 1):
+            params, opt, last = step(params, opt)
+        jax.block_until_ready(last)
+        us = (time.time() - t0) / max(steps - 1, 1) * 1e6
+        out[mode] = (us, float(first), float(last))
+    return out
+
+
+def run(backend: str = "gather"):
+    resolve(backend)
+    rows = []
+    t_thr, t_lrn, crit = plan_latency()
+    rows.append(("fig_routing.plan_us.threshold", t_thr,
+                 f"crit_frac={crit:.3f}"))
+    rows.append(("fig_routing.plan_us.learned", t_lrn,
+                 f"x{t_lrn / t_thr:.2f} vs threshold (matched budget)"))
+    f = sla_flops(32768, 128, 12,
+                  SLAConfig(routing_mode="learned"))
+    rows.append(("fig_routing.flops.head_share", 0.0,
+                 f"routing={f['routing']:.3g} "
+                 f"({100.0 * f['routing'] / f['total']:.2f}% of total)"))
+    race = distill_race()
+    for mode, (us, first, last) in race.items():
+        rows.append((f"fig_routing.distill.{mode}", us,
+                     f"loss {first:.5f}->{last:.5f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

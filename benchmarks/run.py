@@ -16,6 +16,7 @@ MODULES = [
     "table3_image",
     "fig6_kernel_speed",
     "fig_decode",
+    "fig_routing",
 ]
 
 

@@ -6,6 +6,7 @@
 #   scripts/ci.sh --fast          # fast tier only
 #   scripts/ci.sh --conformance   # cross-backend conformance matrix only
 #   scripts/ci.sh --decode        # decode-time SLA parity + drift suites
+#   scripts/ci.sh --routing       # learned-routing parity + gradient suite
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,6 +25,18 @@ if [[ "${1:-}" == "--decode" ]]; then
     "${PYTEST[@]}" -x -m "not slow" tests/test_decode_sla.py tests/test_drift.py
     echo "=== decode-SLA (slow: long parity sweeps) ==="
     "${PYTEST[@]}" -m slow tests/test_decode_sla.py
+    exit 0
+fi
+
+if [[ "${1:-}" == "--routing" ]]; then
+    # Learned routing (DESIGN.md "Learned routing"): init-parity matrix
+    # (bitwise plan/execution equality vs the threshold rule), decode
+    # parity, straight-through gradient flow, and the distillation
+    # fine-tune smoke; then the slow serving/engine integration cells.
+    echo "=== routing (fast: init parity + gradient flow) ==="
+    "${PYTEST[@]}" -x -m "not slow" tests/test_routing.py
+    echo "=== routing (slow: serve CLI + engine parity) ==="
+    "${PYTEST[@]}" -m slow tests/test_routing.py
     exit 0
 fi
 

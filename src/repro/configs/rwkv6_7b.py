@@ -1,5 +1,5 @@
 """rwkv6-7b "Finch" [ssm]: attention-free, data-dependent decay.
-SLA inapplicable (no softmax attention) — DESIGN.md §Arch-applicability.
+SLA inapplicable (no softmax attention) — DESIGN.md §4 Arch-applicability.
 [arXiv:2404.05892; hf]"""
 from repro.configs.base import ArchConfig
 from repro.core.config import SLAConfig

@@ -18,6 +18,7 @@ from repro.core.backends import (
 )
 from repro.core.config import SLAConfig
 from repro.core.masks import (
+    check_routing_mode,
     classify_blocks,
     classify_row,
     compute_mask,
@@ -25,7 +26,13 @@ from repro.core.masks import (
     pool_blocks,
     predict_pc,
     predict_pc_row,
+    predict_routing,
+    predict_routing_row,
+    routing_gates,
+    routing_init,
     row_valid,
+    score_map,
+    score_row,
     sparsity_stats,
 )
 from repro.core.phi import PHI_KINDS, phi
@@ -49,6 +56,8 @@ __all__ = [
     "pool_blocks", "predict_pc", "classify_blocks", "compute_mask",
     "expand_mask", "sparsity_stats",
     "predict_pc_row", "classify_row", "row_valid",
+    "predict_routing", "predict_routing_row", "routing_gates",
+    "routing_init", "check_routing_mode", "score_map", "score_row",
     "SLAPlan", "plan_attention", "plan_from_mask",
     "plan_drift", "plan_retention", "refresh_plan",
     "empty_plan", "plan_extend",

@@ -75,7 +75,10 @@ def available_backends() -> Tuple[str, ...]:
 
 @register_backend("reference")
 def _reference_backend(plan, q, k, v, qp, kp, cfg, scale):
-    return ref.sla_forward_reference(q, k, v, qp, kp, plan.mc, cfg, scale)
+    # plan.marginal is value-identical to (mc == 0) but carries the
+    # learned-routing straight-through gradients when present
+    return ref.sla_forward_reference(q, k, v, qp, kp, plan.mc, cfg, scale,
+                                     marginal=plan.marginal)
 
 
 @register_backend("gather")
@@ -109,6 +112,7 @@ def execute(
     cfg: SLAConfig,
     scale: Optional[float] = None,
     backend: str = "reference",
+    routing: Optional[Params] = None,
 ) -> jax.Array:
     """Run SLA attention under `cfg.mode` with the given execution backend.
 
@@ -116,6 +120,9 @@ def execute(
     precomputed SLAPlan for (q, k); pass None to plan inline (the
     classic fused path — planning then costs on every call). Modes that
     need no block structure ("full", "linear_only") ignore the plan.
+    `routing` holds the learned-routing scorer parameters for inline
+    planning under cfg.routing_mode == "learned" (ignored when a plan
+    is given — the plan already encodes its routing decisions).
 
     Returns (B, H, N, D) in q.dtype.
     """
@@ -136,7 +143,7 @@ def execute(
         return o.astype(in_dtype)
 
     if plan is None:
-        plan = plan_attention(q, k, cfg, scale)
+        plan = plan_attention(q, k, cfg, scale, routing=routing)
     else:
         tm, tn = q.shape[2] // cfg.block_q, k.shape[2] // cfg.block_kv
         if plan.mc.shape[-2:] != (tm, tn):

@@ -67,6 +67,19 @@ class SLAConfig:
         the incremental row classification invariant to the block-grid
         width, which is what makes `plan_extend` provably equal to
         `plan_from_mask` on the full mask.
+      routing_mode: how (query-block, kv-block) pairs are scored before
+        the top-k classification (DESIGN.md "Learned routing"):
+        "threshold" ranks the paper's pooled map P_c (Eq. 2);
+        "learned" ranks a trainable SLA2-style per-head scorer
+        (`core/masks.predict_routing` — pooled Q/K projected through
+        learnable per-head maps). Identity-initialized learned routing
+        reproduces the threshold rule bitwise, so every conformance /
+        parity guarantee holds unchanged at init; fine-tuning then
+        moves the routing with the model (straight-through gradients
+        through the plan's marginal aggregation matrix).
+      routing_temp: temperature of the straight-through sigmoid
+        relaxation around the top-k cuts (learned routing only).
+        Smaller = sharper surrogate gradients near the cut.
     """
 
     block_q: int = 64
@@ -85,6 +98,8 @@ class SLAConfig:
     plan_drift_threshold: Union[float, Tuple[float, ...]] = 0.1
     decode_mode: str = "dense"
     decode_budget: Optional[int] = None
+    routing_mode: str = "threshold"
+    routing_temp: float = 1.0
     window: int = 0  # sliding-window constraint in TOKENS (0 = none);
     #                  applied at block granularity: out-of-window blocks are
     #                  forced negligible (exact-zero weight under SWA).

@@ -26,6 +26,9 @@ def sla_flops(n: int, d: int, h: int, cfg: SLAConfig,
     sparse   : 4 n^2 d * (critical fraction)
     linear   : h_j/z_j precompute + per-row phi(Q_i)H_i  (Eq. 5)
     mask     : pooled score map  pool(Q)pool(K)^T + softmax (Eq. 2)
+    routing  : learned-routing head only (cfg.routing_mode == "learned"):
+               per-head d x d projections of the pooled Q (Tm rows) and
+               pooled K (Tn rows) block features; 0 under "threshold"
     aggregate: marginal-indicator matmul A @ h (TPU pre-aggregation form)
     proj     : learnable d x d on the linear output (Eq. 6)
     """
@@ -34,13 +37,16 @@ def sla_flops(n: int, d: int, h: int, cfg: SLAConfig,
     sparse = 4.0 * n * n * d * crit_frac * h
     linear = (4.0 * n * d * d) * h
     mask = (2.0 * tm * tn * d + 5.0 * tm * tn) * h
+    routing = (2.0 * (tm + tn) * d * d * h
+               if cfg.routing_mode == "learned" else 0.0)
     agg = (2.0 * tm * tn * (d * d + d)) * h if include_overheads else 0.0
     proj = 2.0 * n * d * d * h
-    total = sparse + linear + mask + agg + proj
+    total = sparse + linear + mask + routing + agg + proj
     return {
         "sparse": sparse,
         "linear": linear,
         "mask": mask,
+        "routing": routing,
         "aggregate": agg,
         "proj": proj,
         "total": total,
@@ -67,10 +73,13 @@ def sla_decode_flops(n: int, d: int, h: int, cfg: SLAConfig,
     proj   : learned d x d merge (Eq. 6)
     plan   : amortized block-boundary row classification — one O(Tn d)
              pooled-score row + top-k every b_q tokens
+    routing: learned-routing head only: projecting the pooled q row and
+             the Tn pooled-k features at each block boundary, amortized
+             like `plan`; 0 under "threshold"
 
-    Everything except `plan` is independent of the context length n:
-    the O(S) dense term is replaced by critical-blocks + an O(1) linear
-    term, with planning amortized to O(Tn / b_q) per token.
+    Everything except `plan`/`routing` is independent of the context
+    length n: the O(S) dense term is replaced by critical-blocks + an
+    O(1) linear term, with planning amortized to O(Tn / b_q) per token.
     """
     tn = max(1, n // cfg.block_kv)
     if num_critical is not None:
@@ -85,7 +94,9 @@ def sla_decode_flops(n: int, d: int, h: int, cfg: SLAConfig,
     linear = (2.0 * k_sel * d * d + 2.0 * d * d + 2.0 * d) * h
     proj = 2.0 * d * d * h
     plan = (2.0 * tn * d + 5.0 * tn) * h / cfg.block_q
-    total = sparse + state + linear + proj + plan
+    routing = (2.0 * (tn + 1) * d * d * h / cfg.block_q
+               if cfg.routing_mode == "learned" else 0.0)
+    total = sparse + state + linear + proj + plan + routing
     dense = dense_decode_flops(n, d, h)
     return {
         "sparse": sparse,
@@ -93,6 +104,7 @@ def sla_decode_flops(n: int, d: int, h: int, cfg: SLAConfig,
         "linear": linear,
         "proj": proj,
         "plan": plan,
+        "routing": routing,
         "total": total,
         "dense": dense,
         "reduction_x": dense / total,

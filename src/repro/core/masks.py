@@ -6,6 +6,17 @@ over (T_m x T_n) blocks and classifies every block into
   negligible (-1, bottom k_l%)     -> skipped,
   marginal (0, the rest)           -> linear attention.
 
+Two routers produce the score map the classification ranks
+(`SLAConfig.routing_mode`; DESIGN.md "Learned routing"):
+  "threshold"  the paper's hand-tuned rule on the pooled P_c (Eq. 2-3);
+  "learned"    a trainable SLA2-style per-head scorer
+               (`predict_routing`): pooled Q/K pass through learnable
+               per-head projections before the score map. Identity
+               init reproduces the threshold rule bitwise; gradients
+               reach the routing parameters through a straight-through
+               relaxation of the top-k cuts (`routing_gates`), carried
+               on the plan's marginal aggregation matrix.
+
 The static-shape lookup tables (LUTs) consumed by the execution backends
 are built from M_c in `core/plan.py` (`plan_attention` / `SLAPlan`; see
 DESIGN.md "Plan/execute split") — this module is classification math only.
@@ -63,6 +74,116 @@ def predict_pc(
         valid = block_valid(cfg, s.shape[-2], s.shape[-1])
         s = jnp.where(valid, s, NEG_INF)
     return jax.nn.softmax(s, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# learned routing (SLA2-style, arXiv:2602.12675; DESIGN.md "Learned
+# routing"): a trainable per-head scorer over pooled (Q, K) block
+# features replaces the raw pooled dot product as the ranking score.
+# ---------------------------------------------------------------------------
+def check_routing_mode(cfg: SLAConfig, routing: dict | None = ...) -> None:
+    """The ONE loud-failure path for stringly-typed routing selection.
+
+    Pass `routing` to additionally require the learned head's
+    parameters under routing_mode == "learned" (every scoring entry
+    point does, via `score_map`/`score_row`)."""
+    if cfg.routing_mode not in ("threshold", "learned"):
+        raise ValueError(
+            f"unknown routing_mode {cfg.routing_mode!r}; expected "
+            "'threshold' or 'learned'")
+    if routing is None and cfg.routing_mode == "learned":
+        raise ValueError(
+            "routing_mode='learned' needs routing parameters "
+            "(core.masks.routing_init) — none were passed")
+
+
+def routing_init(num_heads: int, head_dim: int, dtype=jnp.float32) -> dict:
+    """Learnable routing-head parameters: per-head projections applied to
+    the pooled block features before scoring.
+
+    Identity init makes `predict_routing` equal `predict_pc` bitwise
+    (x @ I adds only exact zeros in f32), so a learned-routing model
+    starts from the paper's threshold rule exactly and every existing
+    conformance/parity guarantee applies unchanged at init.
+    """
+    eye = jnp.tile(jnp.eye(head_dim, dtype=dtype)[None],
+                   (num_heads, 1, 1))
+    return {"wq": eye, "wk": eye}
+
+
+def predict_routing(
+    routing: dict, q: jax.Array, k: jax.Array, cfg: SLAConfig,
+    scale: float | None = None,
+) -> jax.Array:
+    """Learned-routing score map: softmax of projected-pooled scores.
+
+    q, k: (B, H, N, D) -> (B, H, Tm, Tn). Drop-in replacement for
+    `predict_pc` when cfg.routing_mode == "learned"; `routing` is the
+    per-head parameter pytree from `routing_init` (wq/wk: (H, D, D)).
+    """
+    d = q.shape[-1]
+    scale = (d**-0.5) if scale is None else scale
+    qp = pool_blocks(q, cfg.block_q)  # (B, H, Tm, D) f32
+    kp = pool_blocks(k, cfg.block_kv)
+    qp = jnp.einsum("bhmd,hde->bhme", qp,
+                    routing["wq"].astype(jnp.float32))
+    kp = jnp.einsum("bhnd,hde->bhne", kp,
+                    routing["wk"].astype(jnp.float32))
+    s = jnp.einsum("...md,...nd->...mn", qp, kp) * scale
+    if cfg.causal or cfg.window:
+        valid = block_valid(cfg, s.shape[-2], s.shape[-1])
+        s = jnp.where(valid, s, NEG_INF)
+    return jax.nn.softmax(s, axis=-1)
+
+
+def routing_gates(pc: jax.Array, mc: jax.Array, cfg: SLAConfig) -> jax.Array:
+    """Straight-through marginal-aggregation gates for learned routing.
+
+    Forward value is EXACTLY the hard indicator (mc == 0) — the
+    soft term cancels itself bitwise (x - x == 0) — so execution
+    numerics are unchanged. The backward pass instead sees a sigmoid
+    relaxation of the two per-row top-k cuts, so routing parameters
+    receive gradients through the linear branch's `A @ h` aggregation
+    matmul (the gather/reference backends consume `plan.marginal`
+    differentiably; the fused kernel's custom_vjp treats the plan as a
+    constant — fine-tune routing with backend="gather" or
+    "reference").
+
+    pc: (..., Tm, Tn) routing probabilities; mc the hard classification
+    derived from them. The cut levels are the n-th order statistics of
+    the raw pc row (gradient-stopped, standard straight-through
+    practice); forced-diagonal / column-capacity overrides live only in
+    the hard path.
+    """
+    tn = pc.shape[-1]
+    n_crit = cfg.num_critical(tn)
+    n_neg = cfg.num_negligible(tn)
+    temp = max(float(cfg.routing_temp), 1e-6)
+    hard = (mc == 0).astype(jnp.float32)
+    srt = jax.lax.stop_gradient(jnp.sort(pc, axis=-1))  # ascending
+    tau_crit = srt[..., tn - n_crit][..., None]
+    soft = 1.0 - jax.nn.sigmoid((pc - tau_crit) / temp)
+    if n_neg > 0:
+        tau_neg = srt[..., n_neg - 1][..., None]
+        soft = soft * jax.nn.sigmoid((pc - tau_neg) / temp)
+    # parenthesization is load-bearing: (soft - soft) is exactly 0.0
+    # elementwise, so the forward value is bitwise `hard`
+    return hard + (soft - jax.lax.stop_gradient(soft))
+
+
+def score_map(
+    routing: dict | None, q: jax.Array, k: jax.Array, cfg: SLAConfig,
+    scale: float | None = None,
+) -> jax.Array:
+    """THE routing-mode dispatch for full score maps: the learned scorer
+    under routing_mode == "learned" (routing params required — missing
+    ones fail loudly here, the single shared path), the pooled P_c
+    otherwise. Every full-map consumer (compute_mask, plan_attention,
+    drift measurement) scores through this."""
+    check_routing_mode(cfg, routing)
+    if cfg.routing_mode == "learned":
+        return predict_routing(routing, q, k, cfg, scale)
+    return predict_pc(q, k, cfg, scale)
 
 
 def classify_blocks(pc: jax.Array, cfg: SLAConfig) -> jax.Array:
@@ -160,6 +281,37 @@ def predict_pc_row(
     return jax.nn.softmax(s, axis=-1)
 
 
+def predict_routing_row(
+    routing: dict, qpool_row: jax.Array, kpool: jax.Array, row,
+    cfg: SLAConfig, scale: float | None = None,
+) -> jax.Array:
+    """One row of the learned-routing map from already-pooled inputs.
+
+    qpool_row: (B, H, D); kpool: (B, H, Tn, D) — the decode cache's
+    per-head pooled features. Projects both through the routing head
+    then defers to `predict_pc_row`, so at identity init this equals
+    `predict_pc_row` bitwise and prefill/decode route identically
+    (`classify_row` of this row == `classify_blocks(...)[row]`)."""
+    qr = jnp.einsum("bhd,hde->bhe", qpool_row.astype(jnp.float32),
+                    routing["wq"].astype(jnp.float32))
+    kr = jnp.einsum("bhnd,hde->bhne", kpool.astype(jnp.float32),
+                    routing["wk"].astype(jnp.float32))
+    return predict_pc_row(qr, kr, row, cfg, scale)
+
+
+def score_row(
+    routing: dict | None, qpool_row: jax.Array, kpool: jax.Array, row,
+    cfg: SLAConfig, scale: float | None = None,
+) -> jax.Array:
+    """Row-level counterpart of `score_map` (decode-time classification):
+    the same dispatch + loud-failure contract, one row at a time."""
+    check_routing_mode(cfg, routing)
+    if cfg.routing_mode == "learned":
+        return predict_routing_row(routing, qpool_row, kpool, row, cfg,
+                                   scale)
+    return predict_pc_row(qpool_row, kpool, row, cfg, scale)
+
+
 def classify_row(pc_row: jax.Array, row, cfg: SLAConfig) -> jax.Array:
     """Classify one query-block row: `classify_blocks(pc, cfg)[..., row, :]`.
 
@@ -190,11 +342,15 @@ def classify_row(pc_row: jax.Array, row, cfg: SLAConfig) -> jax.Array:
 
 
 def compute_mask(
-    q: jax.Array, k: jax.Array, cfg: SLAConfig, scale: float | None = None
+    q: jax.Array, k: jax.Array, cfg: SLAConfig, scale: float | None = None,
+    routing: dict | None = None,
 ) -> jax.Array:
-    """P_c prediction + classification. Gradient-stopped (mask is a constant
-    w.r.t. the loss, matching the paper: TopK is not differentiated)."""
-    pc = predict_pc(jax.lax.stop_gradient(q), jax.lax.stop_gradient(k), cfg, scale)
+    """Score-map prediction + classification. Gradient-stopped (the mask
+    is a constant w.r.t. the loss, matching the paper: TopK is not
+    differentiated). With cfg.routing_mode == "learned" the learned
+    scorer ranks the blocks (`routing` required; see `routing_init`)."""
+    pc = score_map(routing, jax.lax.stop_gradient(q),
+                   jax.lax.stop_gradient(k), cfg, scale)
     return classify_blocks(pc, cfg)
 
 

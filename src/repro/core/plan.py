@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import SLAConfig
-from repro.core.masks import classify_blocks, compute_mask, predict_pc
+from repro.core.masks import classify_blocks, routing_gates, score_map
 
 EPS = 1e-12
 
@@ -138,18 +138,28 @@ def build_col_lut(mc: jax.Array, w_col: int) -> Tuple[jax.Array, jax.Array]:
 
 
 def plan_from_mask(mc: jax.Array, cfg: SLAConfig,
-                   col_width: Optional[int] = None) -> SLAPlan:
+                   col_width: Optional[int] = None,
+                   pc: Optional[jax.Array] = None) -> SLAPlan:
     """Derive every execution structure from a classification M_c.
 
     `col_width` overrides the column-LUT width (cfg.col_capacity).
     Inference-only consumers that never run the dK/dV backward pass —
     the decode cache — pass 1 so the plan does not carry a dead
-    O(Tm x Tn)-per-head structure."""
+    O(Tm x Tn)-per-head structure.
+
+    `pc` (learned routing only): the routing probability map `mc` was
+    classified from. When given, the plan's marginal aggregation
+    matrix carries the straight-through gates (`masks.routing_gates`)
+    — forward-identical to the hard indicator, but differentiable
+    w.r.t. the routing parameters."""
     tm, tn = mc.shape[-2], mc.shape[-1]
     lut, counts = build_lut(mc, cfg.num_critical(tn))
     col_lut, col_counts = build_col_lut(
         mc, cfg.col_capacity(tm, tn) if col_width is None else col_width)
-    marginal = (mc == 0).astype(jnp.float32)
+    if pc is not None and cfg.routing_mode == "learned":
+        marginal = routing_gates(pc, mc, cfg)
+    else:
+        marginal = (mc == 0).astype(jnp.float32)
     return SLAPlan(mc=mc, lut=lut, counts=counts,
                    col_lut=col_lut, col_counts=col_counts,
                    marginal=marginal)
@@ -158,20 +168,26 @@ def plan_from_mask(mc: jax.Array, cfg: SLAConfig,
 def plan_attention(
     q: jax.Array, k: jax.Array, cfg: SLAConfig,
     scale: Optional[float] = None,
+    routing: Optional[dict] = None,
 ) -> SLAPlan:
-    """Build an SLAPlan from (q, k): P_c -> M_c -> LUTs -> A.
+    """Build an SLAPlan from (q, k): score map -> M_c -> LUTs -> A.
 
     q: (B, H, N, D); k: (B, Hkv, N, D) with Hkv | H (GQA heads are
     broadcast so the plan always has one row of structure per q head).
-    Gradient-stopped end to end — the plan is a constant w.r.t. the
-    loss (TopK is not differentiated, matching the paper).
+    (q, k) are gradient-stopped — the block structure is a constant
+    w.r.t. the loss (TopK is not differentiated, matching the paper).
+    With cfg.routing_mode == "learned", `routing` (the per-head scorer
+    from `masks.routing_init`) ranks the blocks instead of the raw
+    pooled P_c, and the plan's marginal matrix carries straight-through
+    gradients to the routing parameters (DESIGN.md "Learned routing").
     """
     h = q.shape[1]
     if k.shape[1] != h:
         assert h % k.shape[1] == 0
         k = jnp.repeat(k, h // k.shape[1], axis=1)
-    mc = compute_mask(q, k, cfg, scale)
-    return plan_from_mask(mc, cfg)
+    pc = score_map(routing, jax.lax.stop_gradient(q),
+                   jax.lax.stop_gradient(k), cfg, scale)
+    return plan_from_mask(classify_blocks(pc, cfg), cfg, pc=pc)
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +256,7 @@ def plan_extend(plan: SLAPlan, mc_row: jax.Array, row) -> SLAPlan:
 def plan_retention(
     plan: SLAPlan, q: jax.Array, k: jax.Array, cfg: SLAConfig,
     scale: Optional[float] = None,
+    routing: Optional[dict] = None,
 ) -> jax.Array:
     """Critical-mass retention of a (possibly stale) plan at (q, k).
 
@@ -255,25 +272,38 @@ def plan_retention(
     (or prefill content) moves away from the state the plan was built
     on. Drift is `1 - r` (see `plan_drift`).
 
+    Under learned routing (cfg.routing_mode == "learned", `routing`
+    given) both the stale-mass numerator and the fresh classification
+    use the learned scorer's map, so drift is measured against the
+    structure the router would actually build today.
+
     Gradient-stopped like planning itself. Returns (B, H) float32.
     """
-    return _retention_and_fresh_mc(plan, q, k, cfg, scale)[0]
+    return _retention_and_fresh_mc(plan, q, k, cfg, scale, routing)[0]
 
 
 def _retention_and_fresh_mc(
     plan: SLAPlan, q: jax.Array, k: jax.Array, cfg: SLAConfig,
     scale: Optional[float] = None,
-) -> Tuple[jax.Array, jax.Array]:
+    routing: Optional[dict] = None,
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
     """Retention (B, H) plus the fresh classification M_c it was measured
     against — `refresh_plan` rebuilds from the latter so a drift-triggered
-    re-plan never recomputes the pool/P_c/top-k front half."""
+    re-plan never recomputes the pool/score-map/top-k front half. The
+    third element is the score map itself under learned routing (None
+    otherwise), so the rebuild can carry straight-through gates.
+
+    Like every scoring path, learned mode REQUIRES the routing params
+    (loud failure in `score_map`) — drift must be measured with the
+    same scorer the plan was built with, never a silent P_c fallback."""
     h = q.shape[1]
     if k.shape[1] != h:
         assert h % k.shape[1] == 0
         k = jnp.repeat(k, h // k.shape[1], axis=1)
     q = jax.lax.stop_gradient(q)
     k = jax.lax.stop_gradient(k)
-    pc = predict_pc(q, k, cfg, scale)  # (B, H, Tm, Tn) f32
+    learned = cfg.routing_mode == "learned"
+    pc = score_map(routing, q, k, cfg, scale)  # (B, H, Tm, Tn) f32
     if pc.shape[-2:] != plan.mc.shape[-2:]:
         raise ValueError(
             f"stale SLAPlan: plan is for {plan.mc.shape[-2:]} blocks but "
@@ -283,12 +313,13 @@ def _retention_and_fresh_mc(
     mc_fresh = classify_blocks(pc, cfg)
     fresh = jnp.sum(pc * (mc_fresh == 1), axis=(-2, -1))
     r = stale / jnp.maximum(fresh, EPS)
-    return jnp.clip(r, 0.0, 1.0), mc_fresh
+    return jnp.clip(r, 0.0, 1.0), mc_fresh, (pc if learned else None)
 
 
 def plan_drift(
     plan: SLAPlan, q: jax.Array, k: jax.Array, cfg: SLAConfig,
     scale: Optional[float] = None,
+    routing: Optional[dict] = None,
 ) -> jax.Array:
     """Plan drift `1 - plan_retention(...)` in [0, 1], shape (B, H).
 
@@ -296,12 +327,13 @@ def plan_drift(
     would; 1 means the stale critical set covers none of the current
     P_c mass. `SLAConfig.plan_drift_threshold` gates re-planning on
     this value (re-plan when drift >= threshold)."""
-    return 1.0 - plan_retention(plan, q, k, cfg, scale)
+    return 1.0 - plan_retention(plan, q, k, cfg, scale, routing)
 
 
 def refresh_plan(
     plan: SLAPlan, q: jax.Array, k: jax.Array, cfg: SLAConfig,
     threshold, scale: Optional[float] = None,
+    routing: Optional[dict] = None,
 ) -> Tuple[SLAPlan, jax.Array, jax.Array]:
     """Drift-gated re-plan: keep `plan` while it retains critical mass.
 
@@ -317,7 +349,8 @@ def refresh_plan(
 
     Returns (plan', retention_scalar f32, replanned bool).
     """
-    r, mc_fresh = _retention_and_fresh_mc(plan, q, k, cfg, scale)
+    r, mc_fresh, pc = _retention_and_fresh_mc(plan, q, k, cfg, scale,
+                                              routing)
     retention = jnp.min(r)
     # threshold >= 1.0 means "never", even at the clipped drift == 1.0
     # extreme — the docs' blind-reuse contract beats the >= comparison
@@ -328,7 +361,7 @@ def refresh_plan(
     # classification the decision was based on)
     new_plan = jax.lax.cond(
         replanned,
-        lambda ops: plan_from_mask(ops[0], cfg),
+        lambda ops: plan_from_mask(ops[0], cfg, pc=pc),
         lambda ops: ops[1],
         (mc_fresh, plan))
     return new_plan, retention, replanned

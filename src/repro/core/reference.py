@@ -59,11 +59,15 @@ def sparse_component(
 
 def linear_component(
     qp: jax.Array, kp: jax.Array, v: jax.Array, mc: jax.Array, cfg: SLAConfig,
+    a: jax.Array | None = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """O^l: per-row-aggregated linear attention over marginal blocks (Eq. 5).
 
     Returns (o_l (B,H,N,D) f32, H (B,H,Tm,D,D) f32, Z (B,H,Tm,D) f32).
-    Rows whose marginal set is empty produce exact zeros.
+    Rows whose marginal set is empty produce exact zeros. `a` overrides
+    the aggregation matrix (a plan's `marginal` leaf — value-identical
+    to the mc-derived indicator, but it can carry the learned-routing
+    straight-through gradients; DESIGN.md "Learned routing").
     """
     bq, bkv = cfg.block_q, cfg.block_kv
     n, d = v.shape[-2], v.shape[-1]
@@ -75,7 +79,8 @@ def linear_component(
     z = jnp.sum(kpb, axis=-2)
     # Aggregate marginal blocks per query row — the TPU-native dense-matmul
     # form of the paper's App. A.3 pre-aggregation (see DESIGN.md).
-    a = (mc == 0).astype(jnp.float32)
+    if a is None:
+        a = (mc == 0).astype(jnp.float32)
     hi = jnp.einsum("...mn,...nde->...mde", a, h)
     zi = jnp.einsum("...mn,...nd->...md", a, z)
     tm = hi.shape[-3]
@@ -117,11 +122,14 @@ def sla_forward_reference(
     q: jax.Array, k: jax.Array, v: jax.Array,
     qp: jax.Array, kp: jax.Array, mc: jax.Array, cfg: SLAConfig,
     scale: float | None = None,
+    marginal: jax.Array | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Reference forward: returns (O^s, O^l), both (B, H, N, D) f32.
 
     The caller combines them as O = O^s + Proj(O^l)  (Eq. 6).
+    `marginal` optionally supplies the plan's aggregation matrix (see
+    `linear_component`).
     """
     o_s, _ = sparse_component(q, k, v, mc, cfg, scale)
-    o_l, _, _ = linear_component(qp, kp, v, mc, cfg)
+    o_l, _, _ = linear_component(qp, kp, v, mc, cfg, a=marginal)
     return o_s, o_l

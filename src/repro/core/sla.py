@@ -58,13 +58,16 @@ def sla_attention(
     scale: Optional[float] = None,
     backend: str = "reference",
     plan: Optional[SLAPlan] = None,
+    routing: Optional[Params] = None,
 ) -> jax.Array:
     """SLA attention. q: (B, H, N, D); k, v: (B, Hkv, N, D) with Hkv | H.
 
     `plan`: a precomputed SLAPlan (from `plan_attention`) — pass it to
     amortize planning across calls; None plans inline from (q, k).
+    `routing`: learned-routing scorer parameters (`routing_init`) for
+    inline planning when cfg.routing_mode == "learned".
 
     Returns (B, H, N, D) in q.dtype.
     """
     return backends.execute(plan, params, q, k, v, cfg,
-                            scale=scale, backend=backend)
+                            scale=scale, backend=backend, routing=routing)

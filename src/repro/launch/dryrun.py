@@ -33,7 +33,7 @@ from repro.roofline.analysis import (model_flops,
 from repro.roofline.hlo_cost import (analyze as hlo_analyze,  # noqa: E402
                                      xla_cost_analysis)
 
-# Cells that are skipped by design (DESIGN.md §Arch-applicability).
+# Cells that are skipped by design (DESIGN.md §4 Arch-applicability).
 SKIPS = {
     ("whisper-small", "long_500k"):
         "enc-dec: 500K-token decoder cache exceeds the model's structural "

@@ -2,10 +2,25 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --requests 8
+
+Flag reference (each flag's argparse help is authoritative; see
+examples/serve_routing.py for a worked end-to-end example):
+
+  --arch / --smoke          model selection (+ CPU-runnable reduction)
+  --requests/--batch/--prompt-len/--max-new/--seed
+                            synthetic request stream shape
+  --backend                 SLA execution backend (core.backends registry)
+  --plan-reuse              reuse prefill block plans across request
+                            chunks (DESIGN.md "Plan lifetime & drift")
+  --drift-threshold         per-layer drift level that forces a re-plan
+  --decode-sla              decode-time SLA (DESIGN.md "Decode-time SLA")
+  --routing-mode            threshold vs learned block routing
+                            (DESIGN.md "Learned routing")
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -26,20 +41,47 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="gather",
-                    help="SLA execution backend (core.backends registry)")
+                    help="SLA execution backend from the core.backends "
+                         "registry: 'gather' (LUT-gather XLA, true sparse "
+                         "FLOPs — default), 'reference' (dense oracle), "
+                         "'kernel' (fused Pallas; interpret mode off-TPU). "
+                         "Unknown names fail loudly at startup")
     ap.add_argument("--plan-reuse", default="off",
                     choices=["off", "adaptive"],
-                    help="reuse SLA prefill plans across request chunks, "
-                         "refreshing on measured drift")
+                    help="'adaptive' pads every prefill chunk to one "
+                         "static block-aligned bucket, plans the per-layer "
+                         "SLA block structure once, and reuses it across "
+                         "chunks of the request stream — re-planning a "
+                         "layer only when its measured plan drift reaches "
+                         "--drift-threshold (DESIGN.md 'Plan lifetime & "
+                         "drift'). 'off' plans every chunk from scratch")
     ap.add_argument("--drift-threshold", default=None,
                     help="re-plan a layer when its plan drift "
-                         "(1 - retained critical mass) reaches this; a "
-                         "comma-separated list gives one threshold per "
-                         "layer (default: cfg.sla.plan_drift_threshold)")
+                         "(1 - retained critical mass, in [0, 1]) reaches "
+                         "this; 0.0 re-plans every chunk, 1.0 never "
+                         "re-plans after the first. A comma-separated "
+                         "list gives one threshold PER LAYER (applied "
+                         "layer-by-layer, never min-reduced). Also gates "
+                         "the decode-SLA live-row refresh. Default: "
+                         "cfg.sla.plan_drift_threshold")
     ap.add_argument("--decode-sla", action="store_true",
                     help="decode with incremental SLA block plans + the "
                          "O(1) linear running state instead of dense "
-                         "masked attention over the full cache")
+                         "masked attention over the full cache — per-token "
+                         "attention cost becomes critical-blocks + O(1) "
+                         "instead of O(context) (DESIGN.md 'Decode-time "
+                         "SLA'). Requires block-aligned prompt/cache "
+                         "lengths (the engine rounds max_len up)")
+    ap.add_argument("--routing-mode", default=None,
+                    choices=["threshold", "learned"],
+                    help="block-classification router: 'threshold' ranks "
+                         "blocks by the paper's pooled P_c rule (Eq. 2-3); "
+                         "'learned' ranks them with the trainable "
+                         "SLA2-style per-head scorer (DESIGN.md 'Learned "
+                         "routing'). Identity-initialized learned routing "
+                         "reproduces threshold exactly, so fresh params "
+                         "serve identically under either mode. Default: "
+                         "cfg.sla.routing_mode")
     args = ap.parse_args(argv)
     if args.drift_threshold is not None:
         parts = [float(x) for x in str(args.drift_threshold).split(",")]
@@ -51,6 +93,10 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    if args.routing_mode is not None:
+        # before init: learned mode adds the routing head to the params
+        cfg = dataclasses.replace(
+            cfg, sla=cfg.sla.replace(routing_mode=args.routing_mode))
     mdl = registry.get_model(cfg)
     params = mdl.init(jax.random.PRNGKey(args.seed), cfg)
     rs = np.random.default_rng(args.seed)

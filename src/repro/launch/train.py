@@ -44,11 +44,31 @@ def main(argv=None):
     ap.add_argument("--model-mesh", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--distill", action="store_true",
+                    help="fine-tune against the model family's end-to-end "
+                         "distillation loss (exact-attention teacher, SLA "
+                         "student; paper Sec. 5) instead of the training "
+                         "loss")
+    ap.add_argument("--routing-mode", default=None,
+                    choices=["threshold", "learned"],
+                    help="override SLAConfig.routing_mode: 'learned' adds "
+                         "the trainable SLA2-style routing head "
+                         "(identity-initialized to reproduce 'threshold' "
+                         "exactly; DESIGN.md 'Learned routing')")
+    ap.add_argument("--train-only", default=None,
+                    help="comma-separated parameter-name substrings to "
+                         "train (e.g. 'routing,sla_proj'); everything "
+                         "else is frozen — the fixed-FLOP-budget "
+                         "fine-tuning recipe")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    if args.routing_mode is not None:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, sla=cfg.sla.replace(routing_mode=args.routing_mode))
     shape = get_shape(args.shape, smoke=args.smoke)
     mdl = registry.get_model(cfg)
     opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
@@ -79,8 +99,29 @@ def main(argv=None):
                          start_step=start_step)
     ef_error = ef_init(params) if args.compress_grads else None
 
+    loss_impl = mdl.loss_fn
+    if args.distill:
+        loss_impl = getattr(mdl, "distill_loss_fn", None)
+        if loss_impl is None:
+            raise ValueError(
+                f"--distill: model family {cfg.family!r} has no "
+                "distill_loss_fn")
+    mask = None
+    if args.train_only:
+        mask = adamw.trainable_mask(
+            params, tuple(s for s in args.train_only.split(",") if s))
+        n_train = sum(p.size for p, t in zip(
+            jax.tree_util.tree_leaves(params),
+            jax.tree_util.tree_leaves(mask)) if t)
+        if n_train == 0:
+            raise ValueError(
+                f"--train-only {args.train_only!r} matches no parameters")
+        print(f"training {n_train} of "
+              f"{sum(p.size for p in jax.tree_util.tree_leaves(params))} "
+              f"params ({args.train_only})")
+
     def loss_of(p, batch):
-        return mdl.loss_fn(p, cfg, batch)
+        return loss_impl(p, cfg, batch)
 
     @jax.jit
     def grad_step(p, batch):
@@ -88,7 +129,7 @@ def main(argv=None):
 
     @jax.jit
     def apply_update(p, g, o):
-        return adamw.update(p, g, o, opt_cfg)
+        return adamw.update(p, g, o, opt_cfg, trainable=mask)
 
     if args.compress_grads:
         @jax.jit

@@ -149,6 +149,7 @@ def attention(
     causal: bool = True,
     backend: str = "gather",
     plan=None,
+    routing: Optional[dict] = None,
 ) -> jax.Array:
     """Unified attention entry. kind: "sla" | "full" | "swa".
 
@@ -156,7 +157,9 @@ def attention(
     backend from the core.backends registry ("gather" XLA / "reference"
     dense / "kernel" fused Pallas). `plan` is an optional precomputed
     SLAPlan for (q, k) — pass it to reuse block structure across calls
-    (e.g. adjacent diffusion timesteps); None plans inline.
+    (e.g. adjacent diffusion timesteps); None plans inline. `routing`
+    carries the layer's learned-routing scorer for inline planning
+    under sla_cfg.routing_mode == "learned".
     """
     if kind == "full":
         h = q.shape[1]
@@ -171,7 +174,7 @@ def attention(
     if kind == "sla":
         cfg = dataclasses.replace(sla_cfg, causal=causal)
         return sla_attention(sla_params, q, k, v, cfg,
-                             backend=backend, plan=plan)
+                             backend=backend, plan=plan, routing=routing)
     raise ValueError(f"unknown attention kind {kind!r}")
 
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import masks as masks_lib
 from repro.core import plan as plan_lib
 from repro.distributed import ctx
 from repro.models.common import attention, dense_init, mse_loss, rms_norm
@@ -36,6 +37,10 @@ def _layer_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
         "ada": (jax.random.normal(r[6], (d, 6 * d), jnp.float32)
                 * 0.01).astype(dtype),
     }
+    if cfg.sla.routing_mode == "learned":
+        # identity init reproduces the threshold router bitwise (no RNG
+        # consumed — threshold-mode params are unchanged)
+        p["routing"] = masks_lib.routing_init(h, dh, dtype)
     if cfg.cross_attn:
         p["ln_x"] = jnp.zeros((d,), dtype)
         p["xq"] = dense_init(r[7], d, h * dh, dtype)
@@ -133,14 +138,18 @@ def forward(params, cfg: ArchConfig, latents, t,
             .reshape(b, n, hkv, dh).transpose(0, 2, 1, 3)
         v = jnp.einsum("bsd,de->bse", xn, p["wv"].astype(x.dtype)) \
             .reshape(b, n, hkv, dh).transpose(0, 2, 1, 3)
+        routing = p.get("routing") if sla_cfg.routing_mode == "learned" \
+            else None
         if plan_needed and layer_plan is None:
-            layer_plan = plan_lib.plan_attention(q, k, sla_cfg)
+            layer_plan = plan_lib.plan_attention(q, k, sla_cfg,
+                                                 routing=routing)
         elif adaptive:
             layer_plan, retention, replanned = plan_lib.refresh_plan(
-                layer_plan, q, k, sla_cfg, thr)
+                layer_plan, q, k, sla_cfg, thr, routing=routing)
         o = attention({"proj": p["sla_proj"]}, q, k, v, kind, sla_cfg,
                       causal=False, backend=backend,
-                      plan=layer_plan if plan_needed else None)
+                      plan=layer_plan if plan_needed else None,
+                      routing=routing)
         o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
         x = ctx.shard_residual(
             x + g1[:, None] * jnp.einsum("bse,ed->bsd", o,
@@ -318,3 +327,26 @@ def loss_fn(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,
     pred = forward(params, cfg, xt, t, batch.get("cond"), compute_dtype,
                    backend, sla_mode)
     return mse_loss(pred, target)
+
+
+def distill_loss_fn(params, cfg: ArchConfig, batch,
+                    compute_dtype=jnp.bfloat16,
+                    backend: str = "gather"):
+    """End-to-end distillation (paper Sec. 5): MSE between the SLA
+    student's velocity prediction and a gradient-stopped exact-attention
+    teacher running the SAME params on the same noised latents.
+
+    This is the fine-tuning objective that wires the learned routing
+    head (DESIGN.md "Learned routing") to a training signal: sla_proj
+    gets ordinary gradients and the routing parameters straight-through
+    gradients via the plan's marginal gates, so a few steps at a fixed
+    critical-block budget recover exact-attention quality. Use an
+    autodiff backend ("gather"/"reference") — the fused kernel's
+    custom_vjp treats the plan as a constant."""
+    x0, noise, t = batch["latents"], batch["noise"], batch["t"]
+    xt = (1.0 - t[:, None, None]) * x0 + t[:, None, None] * noise
+    teacher = forward(params, cfg, xt, t, batch.get("cond"),
+                      compute_dtype, backend, sla_mode="full")
+    student = forward(params, cfg, xt, t, batch.get("cond"),
+                      compute_dtype, backend)
+    return mse_loss(student, jax.lax.stop_gradient(teacher))

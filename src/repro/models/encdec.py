@@ -32,6 +32,12 @@ def _block_init(rng, cfg: ArchConfig, cross: bool, dtype=jnp.float32):
         "mlp_wi": dense_init(r[4], d, 2 * cfg.d_ff, dtype),
         "mlp_wo": dense_init(r[5], cfg.d_ff, d, dtype),
     }
+    if cfg.sla.routing_mode == "learned" and not cross:
+        # encoder blocks only: decode() runs exact attention for both
+        # decoder self- and cross-attention, so a decoder routing head
+        # would be dead weight (params + optimizer moments, no grads)
+        from repro.core.masks import routing_init
+        p["routing"] = routing_init(h, dh, dtype)
     if cross:
         p["ln_x"] = jnp.zeros((d,), dtype)
         p["xq"] = dense_init(r[6], d, h * dh, dtype)
@@ -72,7 +78,7 @@ def _mha(p, pre, x, kv_x, cfg: ArchConfig, causal, kind, positions, backend):
         k = rope(k, jnp.arange(sk, dtype=jnp.int32), cfg.rope_theta)
     sla_params = {"proj": p["sla_proj"]} if kind == "sla" else None
     o = attention(sla_params, q, k, v, kind, cfg.sla, causal=causal,
-                  backend=backend)
+                  backend=backend, routing=p.get("routing"))
     o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
     return jnp.einsum("bse,ed->bsd", o, p[pre + "o"].astype(x.dtype))
 

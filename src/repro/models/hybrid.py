@@ -22,7 +22,7 @@ from repro.models.common import (attention, chunked_softmax_xent, dense_init,
 def _shared_attn_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
     d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
     r = list(jax.random.split(rng, 6))
-    return {
+    p = {
         "ln1": jnp.zeros((d,), dtype),
         "ln2": jnp.zeros((d,), dtype),
         "wq": dense_init(r[0], d, h * dh, dtype),
@@ -33,6 +33,10 @@ def _shared_attn_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
         "mlp_wi": dense_init(r[4], d, 2 * cfg.d_ff, dtype),
         "mlp_wo": dense_init(r[5], cfg.d_ff, d, dtype),
     }
+    if cfg.sla.routing_mode == "learned":
+        from repro.core.masks import routing_init
+        p["routing"] = routing_init(h, dh, dtype)
+    return p
 
 
 def init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
@@ -90,7 +94,8 @@ def _shared_block(p, x, cfg: ArchConfig, positions, backend,
                        vv.astype(jnp.float32)).astype(x.dtype)
     else:
         o = attention({"proj": p["sla_proj"]}, q, k, v, "sla", cfg.sla,
-                      causal=True, backend=backend)
+                      causal=True, backend=backend,
+                      routing=p.get("routing"))
         new_cache = (k, v)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
     x = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))

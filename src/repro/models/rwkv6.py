@@ -6,8 +6,8 @@ u, per-head group norm, and squared-ReLU channel mix. Deviations (noted in
 DESIGN.md): token-shift interpolation weights are static per channel (v6
 uses a small data-dependent LoRA for them), and the decay LoRA is rank-32.
 
-SLA is inapplicable here — no softmax attention exists (DESIGN.md
-§Arch-applicability); this arch is the linear-attention end of the paper's
+SLA is inapplicable here — no softmax attention exists (DESIGN.md §4
+Arch-applicability); this arch is the linear-attention end of the paper's
 spectrum.
 """
 from __future__ import annotations

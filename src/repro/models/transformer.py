@@ -14,11 +14,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import masks as masks_lib
 from repro.core import plan as plan_lib
 from repro.distributed import ctx
 from repro.models import moe as moe_lib
 from repro.models.common import (NEG_INF, attention, chunked_softmax_xent,
-                                 dense_init, embed_init, rms_norm, rope)
+                                 dense_init, embed_init, mse_loss,
+                                 rms_norm, rope)
 
 KIND_SLA, KIND_FULL, KIND_SWA = 0, 1, 2
 
@@ -52,6 +54,11 @@ def _layer_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> dict:
         "wo": dense_init(r[3], h * dh, d, dtype),
         "sla_proj": jnp.zeros((h, dh, dh), dtype),
     }
+    if cfg.sla.routing_mode == "learned":
+        # identity init: the learned router reproduces the threshold
+        # rule bitwise until fine-tuning moves it (no RNG consumed, so
+        # threshold-mode params are unchanged)
+        p["routing"] = masks_lib.routing_init(h, dh, dtype)
     if cfg.qk_norm:
         p["qnorm"] = jnp.zeros((dh,), dtype)
         p["knorm"] = jnp.zeros((dh,), dtype)
@@ -125,25 +132,32 @@ def _attn(p, x, kind, cfg: ArchConfig, positions, backend,
     if cfg.sliding_window:
         sla_cfg = dataclasses.replace(sla_cfg, window=cfg.sliding_window)
     sla_params = {"proj": p["sla_proj"]}
+    # the layer's learned-routing scorer (DESIGN.md "Learned routing");
+    # None under threshold routing — every planning path below threads it
+    routing = p.get("routing") if sla_cfg.routing_mode == "learned" \
+        else None
     retention = jnp.float32(1.0)
     replanned = jnp.bool_(False)
     decode_mc = None
     if decode_plan_cfg is not None:
-        from repro.core.masks import compute_mask
         kr = k if k.shape[1] == q.shape[1] else \
             jnp.repeat(k, q.shape[1] // k.shape[1], axis=1)
-        decode_mc = compute_mask(q, kr, decode_plan_cfg)
+        decode_mc = masks_lib.compute_mask(q, kr, decode_plan_cfg,
+                                           routing=routing)
     if want_plan or layer_plan is not None:
         plan_cfg = dataclasses.replace(sla_cfg, causal=True)
         if layer_plan is None:
-            layer_plan = plan_lib.plan_attention(q, k, plan_cfg)
+            layer_plan = plan_lib.plan_attention(q, k, plan_cfg,
+                                                 routing=routing)
         elif drift_threshold is not None:
             layer_plan, retention, replanned = plan_lib.refresh_plan(
-                layer_plan, q, k, plan_cfg, drift_threshold)
+                layer_plan, q, k, plan_cfg, drift_threshold,
+                routing=routing)
 
     def do_sla(q, k, v):
         return attention(sla_params, q, k, v, "sla", sla_cfg,
-                         causal=True, backend=backend, plan=layer_plan)
+                         causal=True, backend=backend, plan=layer_plan,
+                         routing=routing)
 
     def do_full(q, k, v):
         return attention(None, q, k, v, "full", sla_cfg, causal=True)
@@ -285,6 +299,31 @@ def loss_fn(params, cfg: ArchConfig, batch: dict,
     loss = chunked_softmax_xent(x, table, batch["targets"],
                                 batch.get("mask"))
     return loss + 0.01 * aux
+
+
+def distill_loss_fn(params, cfg: ArchConfig, batch: dict,
+                    compute_dtype=jnp.bfloat16,
+                    backend: str = "gather") -> jax.Array:
+    """End-to-end distillation (the paper's fine-tuning objective):
+    MSE between the SLA student's final hidden states and a
+    gradient-stopped exact-attention teacher running the SAME params.
+
+    The student runs under cfg as-is (SLA layers, learned routing if
+    cfg.sla.routing_mode == "learned"), so the sla_proj merge and —
+    via the straight-through marginal gates — the routing parameters
+    receive gradients; a few steps at a fixed critical-block budget
+    recover the exact-attention behavior (paper Sec. 5). Requires an
+    autodiff backend for routing grads ("gather"/"reference"; the
+    fused kernel treats the plan as a constant)."""
+    tcfg = dataclasses.replace(
+        cfg, sla=cfg.sla.replace(mode="full", routing_mode="threshold"))
+    x_t, _ = forward(params, tcfg, batch["tokens"],
+                     prefix_embeds=batch.get("patch_embeds"),
+                     compute_dtype=compute_dtype, backend=backend)
+    x_s, aux = forward(params, cfg, batch["tokens"],
+                       prefix_embeds=batch.get("patch_embeds"),
+                       compute_dtype=compute_dtype, backend=backend)
+    return mse_loss(x_s, jax.lax.stop_gradient(x_t)) + 0.01 * aux
 
 
 # --------------------------------------------------------------------------
@@ -495,9 +534,12 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
     Boundary quantities are computed unconditionally and selected with
     `where` — they are O(Tn) block-level ops, noise next to the
     attention itself — which keeps the step a single static-shape jit.
+    The exception is row *scoring* (and only it): the learned routing
+    head projects the whole pooled-K cache (O(Tn d^2) per head), so
+    both score_row calls sit under `lax.cond(boundary, ...)` — the
+    amortized-per-boundary cost `flops.sla_decode_flops` reports.
     """
     from repro.core import backends as backend_lib
-    from repro.core import masks as masks_lib
     from repro.core.phi import phi
 
     backend_lib.resolve_decode(backend)
@@ -544,12 +586,26 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
         kf = k_new[:, :, 0, :].astype(jnp.float32)   # (B, Hkv, D)
         vf = v_new[:, :, 0, :].astype(jnp.float32)
 
+        # same row scorer as prefill (learned routing included), so
+        # decode rows classify exactly as the one-shot classifier would.
+        # Scoring runs under lax.cond on the block boundary: it is the
+        # one boundary quantity whose cost is NOT O(Tn) block-level
+        # noise (the learned head projects the whole pooled-K cache,
+        # O(Tn d^2) per head), and flops.sla_decode_flops amortizes it
+        # by /b_q — the cond makes that accounting true.
+        routing = p.get("routing") if dcfg.routing_mode == "learned" \
+            else None
+        pc_zeros = jnp.zeros(qf.shape[:2] + (tn,), jnp.float32)
+
         # ---- 1. finalize the just-completed row (uses the PRE-update
         # kpool: the completed row cannot see the current block) ----
         kpool_mean = kp_sum / sla.block_kv
         kpm = jnp.repeat(kpool_mean, g, axis=1)      # (B, H, Tn, D)
-        pc_prev = masks_lib.predict_pc_row(qp_sum / bq, kpm, row - 1,
-                                           dcfg)
+        pc_prev = jax.lax.cond(
+            boundary,
+            lambda _: masks_lib.score_row(routing, qp_sum / bq, kpm,
+                                          row - 1, dcfg),
+            lambda _: pc_zeros, None)
         mc_prev = masks_lib.classify_row(pc_prev, row - 1, dcfg)
         ext = plan_lib.plan_extend(plan, mc_prev, row - 1)
         plan = jax.tree_util.tree_map(
@@ -573,7 +629,11 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
         # ---- 3. live-row structure (boundary only): drift-gated
         # inherit-vs-fresh, per-layer threshold ----
         kpm_live = jnp.repeat(kp_sum / blk_cnt[:, None], g, axis=1)
-        pc_live = masks_lib.predict_pc_row(qf, kpm_live, row, dcfg)
+        pc_live = jax.lax.cond(
+            boundary,
+            lambda _: masks_lib.score_row(routing, qf, kpm_live, row,
+                                          dcfg),
+            lambda _: pc_zeros, None)
         mc_fresh = masks_lib.classify_row(pc_live, row, dcfg)
         mc_inh = jax.lax.dynamic_slice_in_dim(
             plan.mc, row - 1, 1, axis=2)[..., 0, :]  # (B, H, Tn)

@@ -55,17 +55,47 @@ def global_norm(tree) -> jax.Array:
     return jnp.sqrt(sq)
 
 
-def update(params, grads, state, cfg: AdamWConfig
+def trainable_mask(params, substrings) -> dict:
+    """Params-shaped pytree of python bools: True where the leaf path
+    contains any of `substrings` (e.g. ("routing", "sla_proj") for the
+    fixed-FLOP fine-tuning recipe that trains only the SLA merge and the
+    learned routing head). Feed to `update(..., trainable=)`."""
+    subs = tuple(substrings)
+
+    def mark(path, _leaf):
+        name = jax.tree_util.keystr(path)
+        return any(s in name for s in subs)
+
+    return jax.tree_util.tree_map_with_path(mark, params)
+
+
+def update(params, grads, state, cfg: AdamWConfig, trainable=None
            ) -> Tuple[dict, dict, dict]:
-    """Returns (new_params, new_state, metrics)."""
+    """Returns (new_params, new_state, metrics).
+
+    `trainable`: optional params-shaped pytree of (python) bools — see
+    `trainable_mask`. Frozen leaves keep their params AND moments
+    untouched (the frozen subtree is dropped from the compiled update
+    entirely, it is not a runtime select), so a later full fine-tune
+    resumes from clean moment state. Gradient clipping (and the
+    reported grad_norm) covers ONLY the trainable leaves — the
+    effective step size of a selective fine-tune must not depend on
+    gradient mass flowing into parameters that are never updated."""
     step = state["step"] + 1
-    gnorm = global_norm(grads)
+    if trainable is None:
+        gnorm = global_norm(grads)
+    else:
+        gnorm = global_norm([
+            g for g, t in zip(jax.tree_util.tree_leaves(grads),
+                              jax.tree_util.tree_leaves(trainable)) if t])
     scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
     lr = schedule_lr(cfg, step)
     b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
     b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
 
-    def upd(p, g, m, v):
+    def upd(p, g, m, v, t):
+        if not t:  # frozen (static python bool): no update, no moments
+            return p, m, v
         g = g.astype(jnp.float32) * scale
         m = cfg.b1 * m + (1 - cfg.b1) * g
         v = cfg.b2 * v + (1 - cfg.b2) * g * g
@@ -79,8 +109,10 @@ def update(params, grads, state, cfg: AdamWConfig
     flat_g = jax.tree_util.tree_leaves(grads)
     flat_m = jax.tree_util.tree_leaves(state["m"])
     flat_v = jax.tree_util.tree_leaves(state["v"])
-    out = [upd(p, g, m, v) for p, g, m, v
-           in zip(flat_p, flat_g, flat_m, flat_v)]
+    flat_t = ([True] * len(flat_p) if trainable is None
+              else [bool(t) for t in jax.tree_util.tree_leaves(trainable)])
+    out = [upd(p, g, m, v, t) for p, g, m, v, t
+           in zip(flat_p, flat_g, flat_m, flat_v, flat_t)]
     new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
     new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
     new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])

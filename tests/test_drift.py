@@ -162,7 +162,7 @@ def test_adaptive_sampling_is_jit_compatible_and_data_dependent(
     calls = []
     orig = plan_lib.plan_attention
 
-    def counted(q, k, c, scale=None):
+    def counted(q, k, c, scale=None, routing=None):
         calls.append(q.shape)
         return orig(q, k, c, scale)
 

@@ -160,7 +160,7 @@ def test_dit_sampler_plans_each_layer_exactly_once(monkeypatch):
     calls = []
     orig = plan_lib.plan_attention
 
-    def counted(q, k, c, scale=None):
+    def counted(q, k, c, scale=None, routing=None):
         calls.append(q.shape)
         return orig(q, k, c, scale)
 

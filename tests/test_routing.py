@@ -1,0 +1,470 @@
+"""Learned routing (ISSUE 4): SLA2-style trainable block classification.
+
+Four pillars:
+  * init parity — identity-initialized learned routing produces
+    bitwise-identical SLAPlans (mc / lut / counts / col_lut /
+    col_counts / marginal) to the threshold classifier across the
+    conformance matrix (dtype x causal x column-capacity x block
+    size), and execution through every backend is bitwise identical;
+  * decode parity — the row scorer at identity equals `predict_pc_row`
+    bitwise, so decode-SLA greedy decode under learned routing at init
+    matches threshold decode token-for-token (prefill and decode route
+    identically);
+  * gradient flow — routing parameters receive nonzero gradients
+    through the straight-through marginal gates (gather AND reference
+    backends; the fused kernel treats the plan as a constant by
+    contract), and the end-to-end distillation fine-tune decreases the
+    loss while moving the routing head off identity;
+  * plumbing — FLOPs accounting, drift/refresh under the learned
+    scorer, the optimizer's trainable mask, and loud failures on
+    missing/unknown routing configuration.
+
+Run standalone via `scripts/ci.sh --routing`.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (SLAConfig, classify_row, plan_attention,
+                        predict_pc, predict_pc_row, predict_routing,
+                        predict_routing_row, refresh_plan, routing_init,
+                        sla_attention, sla_init)
+from repro.core.flops import sla_decode_flops, sla_flops
+from repro.models import dit
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+PLAN_LEAVES = ("mc", "lut", "counts", "col_lut", "col_counts", "marginal")
+
+
+def _cfgs(causal=False, col_cap=2.0, block=16, **kw):
+    """(threshold_cfg, learned_cfg) differing only in routing_mode."""
+    thr = SLAConfig(block_q=block, block_kv=block, kh_frac=0.25,
+                    kl_frac=0.25, causal=causal,
+                    col_capacity_factor=col_cap, **kw)
+    return thr, thr.replace(routing_mode="learned")
+
+
+def _qkv(seed, dtype=jnp.float32, b=1, h=2, n=128, d=16):
+    rs = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(r, (b, h, n, d), dtype) for r in rs)
+
+
+# ---------------------------------------------------------------------------
+# init parity: the conformance matrix, learned-at-identity vs threshold
+# ---------------------------------------------------------------------------
+INIT_MATRIX = [
+    pytest.param(dtype, causal, col_cap, block,
+                 id=f"{name}-{'causal' if causal else 'bidir'}-"
+                    f"{'colcap' if col_cap else 'nocap'}-b{block}")
+    for name, dtype in (("f32", jnp.float32), ("bf16", jnp.bfloat16))
+    for causal in (False, True)
+    for col_cap in (None, 2.0)
+    for block in (16, 32)
+]
+
+
+@pytest.mark.parametrize("dtype,causal,col_cap,block", INIT_MATRIX)
+def test_plan_init_parity_matrix(dtype, causal, col_cap, block):
+    """Identity-initialized learned routing builds a bitwise-identical
+    SLAPlan on every leaf — the guarantee that lets all existing
+    conformance/parity machinery apply unchanged at init."""
+    thr, lrn = _cfgs(causal, col_cap, block)
+    q, k, _ = _qkv(0, dtype)
+    routing = routing_init(q.shape[1], q.shape[-1])
+    p_t = plan_attention(q, k, thr)
+    p_l = plan_attention(q, k, lrn, routing=routing)
+    for leaf in PLAN_LEAVES:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(p_l, leaf)), np.asarray(getattr(p_t, leaf)),
+            err_msg=leaf)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("causal", [False, True], ids=["bidir", "causal"])
+def test_predict_routing_identity_bitwise(dtype, causal):
+    thr, lrn = _cfgs(causal)
+    q, k, _ = _qkv(1, dtype)
+    routing = routing_init(q.shape[1], q.shape[-1])
+    pc_t = predict_pc(q, k, thr)
+    pc_l = predict_routing(routing, q, k, lrn)
+    np.testing.assert_array_equal(np.asarray(pc_l), np.asarray(pc_t))
+
+
+@pytest.mark.parametrize("backend", ["reference", "gather", "kernel"])
+@pytest.mark.parametrize("causal", [False, True], ids=["bidir", "causal"])
+def test_execution_init_parity(backend, causal):
+    """Running attention on the learned-at-init plan is bitwise the
+    threshold run, for every backend (the STE soft term cancels
+    exactly in the forward value)."""
+    thr, lrn = _cfgs(causal, proj_init="identity")
+    q, k, v = _qkv(2)
+    routing = routing_init(q.shape[1], q.shape[-1])
+    params = sla_init(jax.random.PRNGKey(0), q.shape[1], q.shape[-1], thr)
+    out_t = sla_attention(params, q, k, v, thr, backend=backend,
+                          plan=plan_attention(q, k, thr))
+    out_l = sla_attention(params, q, k, v, lrn, backend=backend,
+                          plan=plan_attention(q, k, lrn, routing=routing))
+    np.testing.assert_array_equal(np.asarray(out_l), np.asarray(out_t))
+
+
+def test_refresh_plan_init_parity():
+    """Drift measurement + refresh decisions under the learned scorer at
+    identity equal the threshold path bitwise (same retention, same
+    replan flag, same refreshed plan)."""
+    thr, lrn = _cfgs(causal=False)
+    q0, k0, _ = _qkv(3)
+    q1, k1, _ = _qkv(4)
+    routing = routing_init(q0.shape[1], q0.shape[-1])
+    p_t = plan_attention(q0, k0, thr)
+    p_l = plan_attention(q0, k0, lrn, routing=routing)
+    for threshold in (0.0, 0.05, 1.0):
+        n_t, r_t, rep_t = refresh_plan(p_t, q1, k1, thr, threshold)
+        n_l, r_l, rep_l = refresh_plan(p_l, q1, k1, lrn, threshold,
+                                       routing=routing)
+        assert float(r_t) == float(r_l)
+        assert bool(rep_t) == bool(rep_l)
+        np.testing.assert_array_equal(np.asarray(n_l.mc),
+                                      np.asarray(n_t.mc))
+        np.testing.assert_array_equal(np.asarray(n_l.marginal),
+                                      np.asarray(n_t.marginal))
+
+
+# ---------------------------------------------------------------------------
+# decode parity: the row-local scorer routes like the full classifier
+# ---------------------------------------------------------------------------
+def test_routing_row_identity_bitwise():
+    """predict_routing_row at identity == predict_pc_row bitwise, and the
+    resulting row classification matches the full classifier row."""
+    cfg = SLAConfig(block_q=16, block_kv=16, causal=True, kl_frac=0.0,
+                    col_capacity_factor=None, fixed_budget=2,
+                    routing_mode="learned")
+    q, k, _ = _qkv(5)
+    routing = routing_init(q.shape[1], q.shape[-1])
+    from repro.core import pool_blocks
+    qp = pool_blocks(q, cfg.block_q)
+    kp = pool_blocks(k, cfg.block_kv)
+    for row in range(qp.shape[-2]):
+        pc_t = predict_pc_row(qp[..., row, :], kp, row, cfg)
+        pc_l = predict_routing_row(routing, qp[..., row, :], kp, row, cfg)
+        np.testing.assert_array_equal(np.asarray(pc_l), np.asarray(pc_t))
+        np.testing.assert_array_equal(
+            np.asarray(classify_row(pc_l, row, cfg)),
+            np.asarray(classify_row(pc_t, row, cfg)))
+
+
+def _lm_arch(routing_mode, num_layers=2):
+    cfg = get_arch("qwen3-1.7b").smoke()
+    return dataclasses.replace(
+        cfg, num_layers=num_layers,
+        sla=cfg.sla.replace(kh_frac=0.25, kl_frac=0.0, decode_mode="sla",
+                            routing_mode=routing_mode))
+
+
+def _lm_params(cfg, seed=0, proj_scale=0.3):
+    params = tfm.init(jax.random.PRNGKey(seed), cfg)
+    # nonzero Proj makes the linear branch observable in logits
+    params["layers"]["sla_proj"] = jax.random.normal(
+        jax.random.PRNGKey(7), params["layers"]["sla_proj"].shape) \
+        * proj_scale
+    return params
+
+
+def _greedy_tokens(cfg, params, toks, steps, max_len):
+    last, cache = tfm.prefill(params, cfg, toks,
+                              compute_dtype=jnp.float32,
+                              decode_max_len=max_len)
+    step = jax.jit(functools.partial(tfm.decode_step,
+                                     compute_dtype=jnp.float32),
+                   static_argnums=(1,))
+    table = params.get("unembed", params["embed"])
+    tok = jnp.argmax(jnp.einsum("bd,vd->bv", last.astype(jnp.float32),
+                                table.astype(jnp.float32)), -1) \
+        .astype(jnp.int32)
+    out = []
+    for _ in range(steps):
+        out.append(np.asarray(tok))
+        logits, cache = step(params, cfg, tok, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    return np.stack(out)
+
+
+def test_decode_parity_learned_vs_threshold():
+    """Decode-SLA greedy decode with learned routing at init equals the
+    threshold run token-for-token, across block boundaries (so the
+    incremental plans extend identically)."""
+    cfg_t = _lm_arch("threshold")
+    cfg_l = _lm_arch("learned")
+    p_t = _lm_params(cfg_t)
+    p_l = _lm_params(cfg_l)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg_t.vocab_size)
+    g_t = _greedy_tokens(cfg_t, p_t, toks, steps=40, max_len=96)
+    g_l = _greedy_tokens(cfg_l, p_l, toks, steps=40, max_len=96)
+    np.testing.assert_array_equal(g_l, g_t)
+
+
+def test_forward_and_prefill_plans_init_parity():
+    """One-shot forward (and the per-layer prefill plan stack) is
+    bitwise identical under learned-at-init routing."""
+    cfg_t = _lm_arch("threshold")
+    cfg_l = _lm_arch("learned")
+    p_t = _lm_params(cfg_t)
+    p_l = _lm_params(cfg_l)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 64), 0,
+                              cfg_t.vocab_size)
+    x_t, _, plans_t = tfm.forward(p_t, cfg_t, toks,
+                                  compute_dtype=jnp.float32,
+                                  return_plans=True)
+    x_l, _, plans_l = tfm.forward(p_l, cfg_l, toks,
+                                  compute_dtype=jnp.float32,
+                                  return_plans=True)
+    np.testing.assert_array_equal(np.asarray(x_l), np.asarray(x_t))
+    np.testing.assert_array_equal(np.asarray(plans_l.mc),
+                                  np.asarray(plans_t.mc))
+
+
+@pytest.mark.parametrize("arch", ["zamba2-1.2b", "whisper-small"])
+def test_other_families_init_parity(arch):
+    """Hybrid (shared-attn) and enc-dec families also carry the routing
+    head through their SLA layers; at identity init the training loss
+    is bitwise the threshold run."""
+    from repro.configs import get_shape
+    from repro.models import registry
+    cfg_t = get_arch(arch).smoke()
+    cfg_l = dataclasses.replace(
+        cfg_t, sla=cfg_t.sla.replace(routing_mode="learned"))
+    mdl = registry.get_model(cfg_t)
+    p_t = mdl.init(jax.random.PRNGKey(0), cfg_t)
+    p_l = mdl.init(jax.random.PRNGKey(0), cfg_l)
+    shape = get_shape("train_4k", smoke=True)
+    batch = registry.make_concrete_batch(jax.random.PRNGKey(1), cfg_t,
+                                         shape)
+    assert float(mdl.loss_fn(p_l, cfg_l, batch)) == \
+        float(mdl.loss_fn(p_t, cfg_t, batch))
+
+
+# ---------------------------------------------------------------------------
+# gradient flow: straight-through gates reach the routing parameters
+# ---------------------------------------------------------------------------
+def _routing_grad(backend, cfg, q, k, v):
+    routing = routing_init(q.shape[1], q.shape[-1])
+    params = sla_init(jax.random.PRNGKey(0), q.shape[1], q.shape[-1],
+                      cfg.replace(proj_init="identity"))
+
+    def loss(routing):
+        plan = plan_attention(q, k, cfg, routing=routing)
+        out = sla_attention(params, q, k, v, cfg, backend=backend,
+                            plan=plan)
+        return jnp.sum(out.astype(jnp.float32) ** 2)
+
+    return jax.grad(loss)(routing)
+
+
+@pytest.mark.parametrize("backend", ["reference", "gather"])
+def test_ste_grads_nonzero_autodiff_backends(backend):
+    _, lrn = _cfgs(causal=False, proj_init="identity")
+    q, k, v = _qkv(6)
+    g = _routing_grad(backend, lrn, q, k, v)
+    assert float(jnp.linalg.norm(g["wq"])) > 0
+    assert float(jnp.linalg.norm(g["wk"])) > 0
+
+
+def test_ste_grads_zero_through_kernel_backend():
+    """The fused kernel's custom_vjp treats the plan as a constant — the
+    documented contract is zero routing grads there (fine-tune with
+    gather/reference), not an error."""
+    _, lrn = _cfgs(causal=False, proj_init="identity")
+    q, k, v = _qkv(6)
+    g = _routing_grad("kernel", lrn, q, k, v)
+    assert float(jnp.linalg.norm(g["wq"])) == 0.0
+
+
+def test_qk_grads_unaffected_by_routing():
+    """(q, k) stay gradient-stopped through planning: the block
+    structure is a constant w.r.t. the loss exactly as in threshold
+    mode (only the routing parameters see the STE path)."""
+    thr, lrn = _cfgs(causal=False, proj_init="identity")
+    q, k, v = _qkv(7)
+    routing = routing_init(q.shape[1], q.shape[-1])
+    params = sla_init(jax.random.PRNGKey(0), q.shape[1], q.shape[-1], thr)
+
+    def loss(q, cfg, **kw):
+        plan = plan_attention(q, k, cfg, **kw)
+        out = sla_attention(params, q, k, v, cfg, backend="gather",
+                            plan=plan)
+        return jnp.sum(out.astype(jnp.float32) ** 2)
+
+    g_t = jax.grad(loss)(q, thr)
+    g_l = jax.grad(loss)(q, lrn, routing=routing)
+    np.testing.assert_array_equal(np.asarray(g_l), np.asarray(g_t))
+
+
+def _dit_setup(routing_mode):
+    """The shared toy-DiT distillation harness (same substrate as
+    benchmarks/fig_routing.py — one definition, benchmarks/_toy.py)."""
+    from benchmarks._toy import toy_dit_distill_setup
+    return toy_dit_distill_setup(routing_mode)
+
+
+def test_distill_loss_routing_grads_nonzero():
+    """The acceptance-criteria gradient check: under the end-to-end
+    distillation loss, routing parameters receive nonzero grads."""
+    cfg, params, batch = _dit_setup("learned")
+    loss, g = jax.value_and_grad(
+        lambda p: dit.distill_loss_fn(p, cfg, batch,
+                                      compute_dtype=jnp.float32))(params)
+    assert float(loss) > 0
+    assert float(jnp.linalg.norm(g["layers"]["routing"]["wq"])) > 0
+    assert float(jnp.linalg.norm(g["layers"]["routing"]["wk"])) > 0
+
+
+def test_distill_finetune_smoke():
+    """A few fine-tuning steps training only (routing, sla_proj) at the
+    fixed critical-block budget decrease the distillation loss and move
+    the routing head off identity; frozen params stay bitwise put."""
+    cfg, params, batch = _dit_setup("learned")
+    mask = adamw.trainable_mask(params, ("routing", "sla_proj"))
+    opt_cfg = adamw.AdamWConfig(lr=3e-2, total_steps=12, warmup_steps=1,
+                                weight_decay=0.0)
+    opt = adamw.init(params)
+    frozen_before = np.asarray(params["layers"]["wq"])
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(
+            lambda p: dit.distill_loss_fn(p, cfg, batch,
+                                          compute_dtype=jnp.float32))(p)
+        p, o, _ = adamw.update(p, g, o, opt_cfg, trainable=mask)
+        return p, o, loss
+
+    losses = []
+    for _ in range(12):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    eye = np.asarray(routing_init(cfg.num_heads, cfg.head_dim)["wq"])
+    moved = np.abs(np.asarray(params["layers"]["routing"]["wq"])
+                   - eye[None]).max()
+    assert moved > 0, "routing head never moved off identity"
+    np.testing.assert_array_equal(np.asarray(params["layers"]["wq"]),
+                                  frozen_before)
+    # the final gradient still reaches the routing head
+    _, g = jax.value_and_grad(
+        lambda p: dit.distill_loss_fn(p, cfg, batch,
+                                      compute_dtype=jnp.float32))(params)
+    assert float(jnp.linalg.norm(g["layers"]["routing"]["wq"])) > 0
+
+
+def test_transformer_distill_grads():
+    """LM variant of the distillation objective: exact-attention teacher
+    on the same params, nonzero routing grads once Proj is nonzero."""
+    cfg = dataclasses.replace(
+        _lm_arch("learned"),
+        sla=_lm_arch("learned").sla.replace(kl_frac=0.25,
+                                            routing_temp=0.05))
+    params = _lm_params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    loss, g = jax.value_and_grad(
+        lambda p: tfm.distill_loss_fn(p, cfg, batch,
+                                      compute_dtype=jnp.float32))(params)
+    assert float(loss) > 0
+    assert float(jnp.linalg.norm(g["layers"]["routing"]["wq"])) > 0
+
+
+# ---------------------------------------------------------------------------
+# plumbing: flops, optimizer mask, loud failures
+# ---------------------------------------------------------------------------
+def test_flops_routing_accounting():
+    thr, lrn = _cfgs()
+    n, d, h = 4096, 64, 8
+    f_t = sla_flops(n, d, h, thr)
+    f_l = sla_flops(n, d, h, lrn)
+    assert f_t["routing"] == 0.0
+    tm, tn = n // lrn.block_q, n // lrn.block_kv
+    assert f_l["routing"] == 2.0 * (tm + tn) * d * d * h
+    assert f_l["total"] == pytest.approx(f_t["total"] + f_l["routing"])
+    d_t = sla_decode_flops(n, d, h, thr.replace(causal=True))
+    d_l = sla_decode_flops(n, d, h, lrn.replace(causal=True))
+    assert d_t["routing"] == 0.0 and d_l["routing"] > 0.0
+    assert d_l["total"] == pytest.approx(d_t["total"] + d_l["routing"])
+
+
+def test_trainable_mask_marks_by_path():
+    cfg, params, _ = _dit_setup("learned")
+    mask = adamw.trainable_mask(params, ("routing", "sla_proj"))
+    assert mask["layers"]["routing"]["wq"] is True
+    assert mask["layers"]["sla_proj"] is True
+    assert mask["layers"]["wq"] is False
+    assert mask["patch_out"] is False
+
+
+def test_loud_failures():
+    """Every scoring entry point — planning, classification, AND drift
+    measurement — shares the one loud-failure path: learned mode
+    without routing params raises instead of silently falling back to
+    the threshold scorer."""
+    thr, lrn = _cfgs()
+    q, k, _ = _qkv(8)
+    with pytest.raises(ValueError, match="routing parameters"):
+        plan_attention(q, k, lrn)  # learned mode, no routing params
+    with pytest.raises(ValueError, match="unknown routing_mode"):
+        plan_attention(q, k, thr.replace(routing_mode="psychic"))
+    from repro.core.masks import compute_mask
+    with pytest.raises(ValueError, match="routing parameters"):
+        compute_mask(q, k, lrn)
+    routing = routing_init(q.shape[1], q.shape[-1])
+    plan = plan_attention(q, k, lrn, routing=routing)
+    from repro.core import plan_drift
+    with pytest.raises(ValueError, match="routing parameters"):
+        plan_drift(plan, q, k, lrn)
+    with pytest.raises(ValueError, match="routing parameters"):
+        refresh_plan(plan, q, k, lrn, 0.1)
+
+
+def test_train_cli_rejects_empty_train_only():
+    from repro.launch import train
+    with pytest.raises(ValueError, match="matches no parameters"):
+        train.main(["--arch", "qwen3-1.7b", "--smoke", "--steps", "1",
+                    "--train-only", "does-not-exist"])
+
+
+@pytest.mark.slow
+def test_serve_cli_routing_mode_learned():
+    """launch/serve.py --routing-mode learned end to end (smoke): fresh
+    params serve identically under either router, so the run must
+    complete and honor every request budget."""
+    from repro.launch import serve
+    done = serve.main(["--arch", "qwen3-1.7b", "--smoke", "--requests",
+                       "4", "--batch", "2", "--prompt-len", "32",
+                       "--max-new", "4", "--routing-mode", "learned"])
+    assert all(len(r.tokens_out) == r.max_new_tokens for r in done)
+
+
+@pytest.mark.slow
+def test_engine_decode_sla_learned_routing_parity():
+    """ServingEngine with decode-SLA + learned routing at init produces
+    the same tokens as the threshold engine."""
+    from repro.serving.engine import Request, ServingEngine
+    outs = {}
+    for mode in ("threshold", "learned"):
+        cfg = _lm_arch(mode)
+        params = _lm_params(cfg)
+        engine = ServingEngine(cfg, params, batch_size=2, max_len=128,
+                               decode_sla=True)
+        rs = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        prompt=rs.integers(0, cfg.vocab_size, size=32)
+                        .astype(np.int32), max_new_tokens=24)
+                for i in range(2)]
+        done = engine.run(reqs)
+        outs[mode] = [r.tokens_out for r in done]
+    assert outs["learned"] == outs["threshold"]
