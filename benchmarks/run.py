@@ -17,6 +17,7 @@ MODULES = [
     "fig6_kernel_speed",
     "fig_decode",
     "fig_routing",
+    "fig_serving",
 ]
 
 

@@ -48,12 +48,16 @@ def main():
     print(f"served {len(done)} requests in {wall:.1f}s "
           f"(incl. compile)")
     print(f"prefill: {st.prefill_tokens} tok in {st.prefill_s:.2f}s | "
-          f"decode: {st.decode_tokens} tok in {st.decode_s:.2f}s")
+          f"decode: {st.decode_tokens} tok in {st.decode_s:.2f}s | "
+          f"decode-slot occupancy {st.occupancy():.2f}")
     for r in done[:4]:
-        print(f"  req {r.rid}: {len(r.tokens_out)} tokens -> "
-              f"{r.tokens_out[:8]}...")
+        print(f"  req {r.rid}: {len(r.tokens_out)} tokens | ttft "
+              f"{r.metrics.ttft_s*1e3:.0f}ms | latency "
+              f"{r.latency_s*1e3:.0f}ms -> {r.tokens_out[:8]}...")
     assert all(len(r.tokens_out) == r.max_new_tokens for r in done)
-    print("all requests honored their token budgets")
+    assert all(r.latency_s == r.metrics.latency_s for r in done)
+    print("all requests honored their token budgets; see "
+          "examples/serve_stream.py for the v2 continuous scheduler")
 
 
 if __name__ == "__main__":

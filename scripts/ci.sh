@@ -7,6 +7,7 @@
 #   scripts/ci.sh --conformance   # cross-backend conformance matrix only
 #   scripts/ci.sh --decode        # decode-time SLA parity + drift suites
 #   scripts/ci.sh --routing       # learned-routing parity + gradient suite
+#   scripts/ci.sh --serve         # serving API v2: scheduler parity suite
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -37,6 +38,19 @@ if [[ "${1:-}" == "--routing" ]]; then
     "${PYTEST[@]}" -x -m "not slow" tests/test_routing.py
     echo "=== routing (slow: serve CLI + engine parity) ==="
     "${PYTEST[@]}" -m slow tests/test_routing.py
+    exit 0
+fi
+
+if [[ "${1:-}" == "--serve" ]]; then
+    # Serving API v2 (DESIGN.md "Serving API v2"): continuous-vs-static
+    # token parity on staggered arrivals, slot turnover/admission
+    # counters, decode-SLA state scatter, streaming event ordering,
+    # and the SLAConfig.validate loud-failure matrix; then the slow
+    # engine-wrapper parity cell.
+    echo "=== serving (fast: scheduler parity + events + validate) ==="
+    "${PYTEST[@]}" -x -m "not slow" tests/test_serving.py
+    echo "=== serving (slow: continuous engine wrapper) ==="
+    "${PYTEST[@]}" -m slow tests/test_serving.py
     exit 0
 fi
 

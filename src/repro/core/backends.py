@@ -127,6 +127,7 @@ def execute(
     Returns (B, H, N, D) in q.dtype.
     """
     backend = resolve(backend)  # fail loudly even in plan-free modes
+    cfg.validate()
     in_dtype = q.dtype
     h = q.shape[1]
     k = _repeat_kv(k, h)
@@ -252,7 +253,10 @@ def _decode_gather_backend(state, qg, qpg, pos, cfg, scale):
                    kg.astype(jnp.float32)) * scale
     cols = lutg[..., None] * bkv + jnp.arange(bkv)  # (B, Hkv, G, K, bkv)
     live = jnp.arange(k_sel) < cntg[..., None]      # (B, Hkv, G, K)
-    s = jnp.where(jnp.logical_and(cols <= pos, live[..., None]), s, -1e30)
+    # pos: scalar (static-batch decode) or (B,) per-slot positions
+    # (continuous-batching scheduler; DESIGN.md "Serving API v2")
+    posc = pos if jnp.ndim(pos) == 0 else pos[:, None, None, None, None]
+    s = jnp.where(jnp.logical_and(cols <= posc, live[..., None]), s, -1e30)
     sf = s.reshape(b, hkv, -1, k_sel * bkv)
     m = jnp.max(sf, axis=-1, keepdims=True)
     p = jnp.exp(sf - m)
@@ -293,13 +297,15 @@ def _decode_reference_backend(state, qg, qpg, pos, cfg, scale):
         axis=3)                                     # (B, Hkv, G, Tn)
     crit_tok = jnp.repeat(crit_blk, bkv, axis=-1)   # (B, Hkv, G, Smax)
     s = jnp.einsum("bngd,bnsd->bngs", qg, kc.astype(jnp.float32)) * scale
-    keep = jnp.logical_and(crit_tok, jnp.arange(smax) <= pos)
+    # pos: scalar or (B,) per-slot positions (continuous batching)
+    post = pos if jnp.ndim(pos) == 0 else pos[:, None, None, None]
+    keep = jnp.logical_and(crit_tok, jnp.arange(smax) <= post)
     s = jnp.where(keep, s, -1e30)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     o_s = jnp.einsum("bngs,bnsd->bngd", p / jnp.sum(p, -1, keepdims=True),
                      vc.astype(jnp.float32))
-    valid = jnp.arange(tn) <= pos // bkv
+    valid = jnp.arange(tn) <= post // bkv
     marg = jnp.logical_and(valid, ~crit_blk).astype(jnp.float32)
     h_m = jnp.einsum("bngt,bntde->bngde", marg, state["hblk"])
     z_m = jnp.einsum("bngt,bntd->bngd", marg, state["zblk"])
@@ -317,11 +323,14 @@ def decode_execute(
 ) -> jax.Array:
     """One-token SLA attention against the decode cache state.
 
-    q: (B, H, 1, D) the new token's query; `pos` its (traced) position.
-    Returns (B, H, D) in q.dtype — O^s + Proj(O^l) under cfg.mode "sla",
-    O^s alone under "sparse_only".
+    q: (B, H, 1, D) the new token's query; `pos` its (traced) position —
+    a scalar (static-batch decode: every row shares it) or a (B,) vector
+    of per-slot positions (continuous-batching scheduler; DESIGN.md
+    "Serving API v2"). Returns (B, H, D) in q.dtype — O^s + Proj(O^l)
+    under cfg.mode "sla", O^s alone under "sparse_only".
     """
     backend = resolve_decode(backend)
+    cfg.validate()
     in_dtype = q.dtype
     b, h, _, d = q.shape
     hkv = state["k"].shape[1]

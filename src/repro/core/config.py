@@ -104,6 +104,69 @@ class SLAConfig:
     #                  applied at block granularity: out-of-window blocks are
     #                  forced negligible (exact-zero weight under SWA).
 
+    # knob-string vocabularies (validate() is the ONE place that rejects
+    # typos; keep these in sync with the dispatch sites they gate —
+    # except phi, whose vocabulary lives with its dispatch in core/phi.py)
+    MODES = ("sla", "sparse_only", "linear_only", "l_plus_s", "full")
+    ROUTING_MODES = ("threshold", "learned")
+    PLAN_REFRESH_MODES = ("fixed", "adaptive")
+    DECODE_MODES = ("dense", "sla")
+
+    @property
+    def PHIS(self) -> Tuple[str, ...]:
+        from repro.core.phi import PHI_KINDS
+        return PHI_KINDS
+
+    def validate(self) -> "SLAConfig":
+        """Loudly reject invalid knob combinations, in one place.
+
+        Every serving/planning entry point (`plan_attention`,
+        `backends.execute`/`decode_execute`, `ServingEngine`,
+        `Scheduler`) calls this so a typo'd mode string or an impossible
+        combination fails at the API boundary with a named field, not
+        deep inside a jit trace. Returns self so call sites can chain.
+        """
+        def _enum(field: str, value: str, allowed: Tuple[str, ...]):
+            if value not in allowed:
+                raise ValueError(
+                    f"SLAConfig.{field}={value!r} is not one of {allowed}")
+
+        _enum("mode", self.mode, self.MODES)
+        _enum("phi", self.phi, self.PHIS)
+        _enum("routing_mode", self.routing_mode, self.ROUTING_MODES)
+        _enum("plan_refresh_mode", self.plan_refresh_mode,
+              self.PLAN_REFRESH_MODES)
+        _enum("decode_mode", self.decode_mode, self.DECODE_MODES)
+        if self.block_q <= 0 or self.block_kv <= 0:
+            raise ValueError(
+                f"SLAConfig block sizes must be positive (block_q="
+                f"{self.block_q}, block_kv={self.block_kv})")
+        if not (0.0 <= self.kh_frac <= 1.0 and 0.0 <= self.kl_frac <= 1.0):
+            raise ValueError(
+                f"SLAConfig.kh_frac/kl_frac must lie in [0, 1] (got "
+                f"{self.kh_frac}, {self.kl_frac})")
+        if self.plan_refresh_interval < 1:
+            raise ValueError(
+                f"SLAConfig.plan_refresh_interval must be >= 1 (got "
+                f"{self.plan_refresh_interval})")
+        if self.window < 0:
+            raise ValueError(
+                f"SLAConfig.window must be >= 0 (got {self.window})")
+        if self.window > 0 and self.decode_mode == "sla":
+            # the decode-time subtractive linear state cannot exclude
+            # out-of-window past blocks (DESIGN.md "Decode-time SLA")
+            raise ValueError(
+                "SLAConfig.window > 0 is incompatible with decode_mode="
+                "'sla': the subtractive running state covers ALL past "
+                "blocks and cannot honor a sliding-window constraint; "
+                "use decode_mode='dense' for window-constrained configs")
+        if self.decode_mode == "sla" and self.block_q != self.block_kv:
+            raise ValueError(
+                f"decode_mode='sla' requires block_q == block_kv (got "
+                f"{self.block_q} vs {self.block_kv}); the decode grid "
+                f"appends one query row per completed KV block")
+        return self
+
     def num_critical(self, num_kv_blocks: int) -> int:
         """Number of critical blocks per query row (static)."""
         if self.fixed_budget is not None:

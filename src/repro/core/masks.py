@@ -249,15 +249,21 @@ def classify_blocks(pc: jax.Array, cfg: SLAConfig) -> jax.Array:
 # same code serves one-shot tests and the jitted decode step.
 # ---------------------------------------------------------------------------
 def row_valid(row, tn: int, cfg: SLAConfig) -> jax.Array:
-    """(tn,) bool validity of one query-block row — the row `row` slice of
-    `block_valid` (causal + window constraints)."""
+    """Validity of one query-block row — the row `row` slice of
+    `block_valid` (causal + window constraints).
+
+    `row` may be a scalar (returns (tn,)) or an array of per-slot rows
+    (continuous-batching decode); an array broadcasts against the block
+    axis, returning row.shape + (tn,) — pass it shaped (B, 1) when the
+    result must align with per-head (B, H, Tn) score rows."""
     j = jnp.arange(tn)
-    valid = jnp.ones((tn,), bool)
+    r = jnp.asarray(row)[..., None]
+    valid = jnp.ones(jnp.broadcast_shapes(r.shape, j.shape), bool)
     if cfg.causal:
         valid = jnp.logical_and(
-            valid, (row + 1) * cfg.block_q - 1 >= j * cfg.block_kv)
+            valid, (r + 1) * cfg.block_q - 1 >= j * cfg.block_kv)
     if cfg.window:
-        dist = jnp.abs(row * cfg.block_q - j * cfg.block_kv)
+        dist = jnp.abs(r * cfg.block_q - j * cfg.block_kv)
         valid = jnp.logical_and(valid, dist < cfg.window + cfg.block_kv)
     return valid
 
@@ -315,7 +321,9 @@ def score_row(
 def classify_row(pc_row: jax.Array, row, cfg: SLAConfig) -> jax.Array:
     """Classify one query-block row: `classify_blocks(pc, cfg)[..., row, :]`.
 
-    pc_row: (..., Tn) f32 -> (..., Tn) int8. Row classification is
+    pc_row: (..., Tn) f32 -> (..., Tn) int8. `row` is a scalar, or an
+    array of per-slot rows broadcastable against pc_row's batch axes
+    (shape it (B, 1) for (B, H, Tn) rows). Row classification is
     row-local only without the column-capacity pass, so this requires
     cfg.col_capacity_factor is None (use `SLAConfig.decode_plan_cfg`).
     """
@@ -330,8 +338,9 @@ def classify_row(pc_row: jax.Array, row, cfg: SLAConfig) -> jax.Array:
     if cfg.causal:
         assert cfg.block_q == cfg.block_kv, "causal SLA requires b_q == b_kv"
     if cfg.force_diagonal or cfg.causal:
-        diag_col = row * cfg.block_q // cfg.block_kv
-        score = jnp.where(jnp.arange(tn) == diag_col, 2.0, score)
+        diag_col = jnp.asarray(row * cfg.block_q // cfg.block_kv)
+        score = jnp.where(jnp.arange(tn) == diag_col[..., None], 2.0,
+                          score)
     order = jnp.argsort(-score, axis=-1, stable=True)
     rank = jnp.argsort(order, axis=-1, stable=True)
     mc = jnp.zeros(pc_row.shape, jnp.int8)

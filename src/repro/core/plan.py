@@ -181,6 +181,7 @@ def plan_attention(
     pooled P_c, and the plan's marginal matrix carries straight-through
     gradients to the routing parameters (DESIGN.md "Learned routing").
     """
+    cfg.validate()  # typo'd knob strings die here, not deep in a trace
     h = q.shape[1]
     if k.shape[1] != h:
         assert h % k.shape[1] == 0

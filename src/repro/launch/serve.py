@@ -2,14 +2,21 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --scheduler continuous --stream
 
 Flag reference (each flag's argparse help is authoritative; see
-examples/serve_routing.py for a worked end-to-end example):
+examples/serve_routing.py and examples/serve_stream.py for worked
+end-to-end examples):
 
   --arch / --smoke          model selection (+ CPU-runnable reduction)
   --requests/--batch/--prompt-len/--max-new/--seed
                             synthetic request stream shape
   --backend                 SLA execution backend (core.backends registry)
+  --scheduler               static lockstep groups vs the v2
+                            continuous-batching slot pool
+                            (DESIGN.md "Serving API v2")
+  --stream                  print per-token StreamEvents (continuous only)
   --plan-reuse              reuse prefill block plans across request
                             chunks (DESIGN.md "Plan lifetime & drift")
   --drift-threshold         per-layer drift level that forces a re-plan
@@ -36,7 +43,9 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static scheduler: decode group size; "
+                         "continuous scheduler: number of decode slots")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
@@ -46,6 +55,19 @@ def main(argv=None):
                          "FLOPs — default), 'reference' (dense oracle), "
                          "'kernel' (fused Pallas; interpret mode off-TPU). "
                          "Unknown names fail loudly at startup")
+    ap.add_argument("--scheduler", default="static",
+                    choices=["static", "continuous"],
+                    help="'static' decodes fixed groups in lockstep (v1 "
+                         "engine); 'continuous' runs the v2 continuous-"
+                         "batching scheduler — a fixed pool of decode "
+                         "slots that turn over the moment a request "
+                         "finishes, with real per-request TTFT/latency "
+                         "and slot-occupancy stats (DESIGN.md 'Serving "
+                         "API v2'). Greedy tokens are identical across "
+                         "both")
+    ap.add_argument("--stream", action="store_true",
+                    help="print per-token StreamEvents as they are "
+                         "produced (continuous scheduler only)")
     ap.add_argument("--plan-reuse", default="off",
                     choices=["off", "adaptive"],
                     help="'adaptive' pads every prefill chunk to one "
@@ -86,6 +108,8 @@ def main(argv=None):
     if args.drift_threshold is not None:
         parts = [float(x) for x in str(args.drift_threshold).split(",")]
         args.drift_threshold = parts[0] if len(parts) == 1 else tuple(parts)
+    if args.stream and args.scheduler != "continuous":
+        ap.error("--stream requires --scheduler continuous")
 
     from repro.core import backends as backend_registry
     backend_registry.resolve(args.backend)  # unknown names fail here, loudly
@@ -97,9 +121,39 @@ def main(argv=None):
         # before init: learned mode adds the routing head to the params
         cfg = dataclasses.replace(
             cfg, sla=cfg.sla.replace(routing_mode=args.routing_mode))
+    cfg.sla.validate()
     mdl = registry.get_model(cfg)
     params = mdl.init(jax.random.PRNGKey(args.seed), cfg)
     rs = np.random.default_rng(args.seed)
+    max_len = args.prompt_len + args.max_new + 8
+
+    if args.scheduler == "continuous" and args.stream:
+        # drive the v2 API directly so events stream as they happen
+        from repro.serving.api import SamplingParams, Scheduler
+
+        sched = Scheduler(cfg, params, num_slots=args.batch,
+                          max_len=max_len, backend=args.backend,
+                          decode_sla=args.decode_sla or None,
+                          plan_reuse=args.plan_reuse,
+                          drift_threshold=args.drift_threshold)
+        t0 = time.time()
+        for i in range(args.requests):
+            sched.submit(
+                rs.integers(0, cfg.vocab_size,
+                            size=args.prompt_len).astype(np.int32),
+                SamplingParams(max_new_tokens=args.max_new))
+        for ev in sched.stream():
+            if ev.kind == "token":
+                print(f"  [{ev.t - t0:7.3f}s] req {ev.rid} "
+                      f"token[{ev.index}] = {ev.token}")
+            else:
+                print(f"  [{ev.t - t0:7.3f}s] req {ev.rid} {ev.kind}")
+        done = sched.drain()
+        st = sched.stats
+        _print_stats(args, st, len(done), time.time() - t0,
+                     [r.metrics for r in done], sched.drift_threshold)
+        return done
+
     reqs = [Request(rid=i,
                     prompt=rs.integers(0, cfg.vocab_size,
                                        size=args.prompt_len)
@@ -107,29 +161,47 @@ def main(argv=None):
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
     engine = ServingEngine(cfg, params, batch_size=args.batch,
-                           max_len=args.prompt_len + args.max_new + 8,
+                           max_len=max_len,
                            backend=args.backend,
                            plan_reuse=args.plan_reuse,
                            drift_threshold=args.drift_threshold,
-                           decode_sla=args.decode_sla)
+                           decode_sla=args.decode_sla,
+                           scheduler=args.scheduler)
     t0 = time.time()
     done = engine.run(reqs)
-    st = engine.stats
-    print(f"{len(done)} requests in {time.time()-t0:.1f}s | "
+    _print_stats(args, engine.stats, len(done), time.time() - t0,
+                 [r.metrics for r in done if r.metrics is not None],
+                 engine.drift_threshold)
+    return done
+
+
+def _print_stats(args, st, n_done, wall, metrics, drift_threshold):
+    print(f"{n_done} requests in {wall:.1f}s | "
           f"prefill {st.prefill_tokens} tok / {st.prefill_s:.2f}s | "
           f"decode {st.decode_tokens} tok / {st.decode_s:.2f}s")
+    if metrics:
+        from repro.serving.api import percentile as pct
+
+        ttfts = [m.ttft_s for m in metrics]
+        lats = [m.latency_s for m in metrics]
+        print(f"per-request: TTFT p50 {pct(ttfts, 0.5)*1e3:.0f}ms / "
+              f"p95 {pct(ttfts, 0.95)*1e3:.0f}ms | latency p50 "
+              f"{pct(lats, 0.5)*1e3:.0f}ms / p95 {pct(lats, 0.95)*1e3:.0f}ms")
+    if st.slot_steps_total:
+        print(f"scheduler: {st.admissions} admissions | decode-slot "
+              f"occupancy {st.occupancy():.2f} "
+              f"({st.slot_steps_active}/{st.slot_steps_total} slot-steps)")
     if args.plan_reuse != "off":
         print(f"plan reuse: {st.plan_builds} built, {st.plan_reuses} "
               f"reused, {st.plan_replans} drift re-plans | retention "
               f"{st.last_retention:.3f} (threshold: drift >= "
-              f"{engine.drift_threshold})")
+              f"{drift_threshold})")
     if args.decode_sla:
         print(f"decode plans: {st.decode_plan_builds} layer plans built "
               f"at prefill, {st.decode_plan_extends} rows extended, "
               f"{st.decode_plan_reuses} live rows reused, "
               f"{st.decode_plan_replans} drift re-plans | retention "
               f"{st.decode_last_retention:.3f}")
-    return done
 
 
 if __name__ == "__main__":

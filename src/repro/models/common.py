@@ -179,6 +179,22 @@ def attention(
 
 
 # --------------------------------------------------------------------------
+# output head
+# --------------------------------------------------------------------------
+def logits_from_hidden(params: dict, hidden: jax.Array) -> jax.Array:
+    """Unembed final hidden states: (..., D) -> (..., V) f32 logits.
+
+    The ONE place serving paths (engine first token, scheduler
+    admission, decode_step) turn hidden states into logits — tied
+    embeddings fall back to `params['embed']` when no `unembed` table
+    exists, and the matmul runs in f32 so greedy argmax is deterministic
+    across callers."""
+    table = params.get("unembed", params["embed"])
+    return jnp.einsum("...d,vd->...v", hidden.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
 # losses
 # --------------------------------------------------------------------------
 def chunked_softmax_xent(

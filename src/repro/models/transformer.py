@@ -19,8 +19,8 @@ from repro.core import plan as plan_lib
 from repro.distributed import ctx
 from repro.models import moe as moe_lib
 from repro.models.common import (NEG_INF, attention, chunked_softmax_xent,
-                                 dense_init, embed_init, mse_loss,
-                                 rms_norm, rope)
+                                 dense_init, embed_init, logits_from_hidden,
+                                 mse_loss, rms_norm, rope)
 
 KIND_SLA, KIND_FULL, KIND_SWA = 0, 1, 2
 
@@ -445,10 +445,12 @@ def prefill(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
 def _dense_decode_attn(q, kc, vc, pos, kind, cfg: ArchConfig):
     """Masked softmax over the full static cache — O(S) per token.
 
-    q: (B, H, 1, Dh); kc, vc: (B, Hkv, Smax, Dh). GQA decode without
-    materializing repeated KV: fold the head group into the query
-    ("bkgd" layout) — scores are (B, Hkv, G, S) against the cache
-    directly. Returns (B, 1, H * Dh) in q.dtype."""
+    q: (B, H, 1, Dh); kc, vc: (B, Hkv, Smax, Dh); pos: scalar (aligned
+    static-batch decode) or (B,) per-slot positions (continuous
+    batching). GQA decode without materializing repeated KV: fold the
+    head group into the query ("bkgd" layout) — scores are
+    (B, Hkv, G, S) against the cache directly. Returns (B, 1, H * Dh)
+    in q.dtype."""
     b, h = q.shape[0], q.shape[1]
     hkv, smax = kc.shape[1], kc.shape[2]
     g = h // hkv
@@ -456,11 +458,12 @@ def _dense_decode_attn(q, kc, vc, pos, kind, cfg: ArchConfig):
     s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
                    kc.astype(jnp.float32)) * (cfg.head_dim**-0.5)
     idx = jnp.arange(smax)[None, None, None, :]
-    ok = idx <= pos
+    posb = pos if jnp.ndim(pos) == 0 else pos[:, None, None, None]
+    ok = idx <= posb
 
     def swa_mask(s):
         w = cfg.local_window or cfg.sliding_window
-        return jnp.where(idx > pos - w, s, NEG_INF)
+        return jnp.where(idx > posb - w, s, NEG_INF)
 
     s = jnp.where(ok, s, NEG_INF)
     s = jax.lax.cond(kind == KIND_SWA, swa_mask, lambda s: s, s)
@@ -469,18 +472,51 @@ def _dense_decode_attn(q, kc, vc, pos, kind, cfg: ArchConfig):
     return o.astype(q.dtype).reshape(b, 1, h * cfg.head_dim)
 
 
+def _cache_write(c, new, pos):
+    """Write one new-token KV at `pos`: c (B, Hn, S, D), new (B, Hn, 1, D).
+
+    Scalar `pos` is the aligned static-batch O(1) write; a (B,) vector
+    writes each slot at its own position (vmapped per-example update —
+    the continuous-batching layout, DESIGN.md "Serving API v2")."""
+    new = new.astype(c.dtype)
+    if jnp.ndim(pos) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(c, new, pos, axis=2)
+    return jax.vmap(lambda cb, nb, pb: jax.lax.dynamic_update_slice_in_dim(
+        cb, nb, pb, axis=1))(c, new, pos)
+
+
+def _blk_update(buf, upd, row):
+    """Add `upd` into block `row` of a per-block running buffer.
+
+    buf: (B, Hn, Tn, ...); upd: (B, Hn, ...); row: scalar or (B,)."""
+    if jnp.ndim(row) == 0:
+        j = jax.lax.dynamic_slice_in_dim(buf, row, 1, axis=2)
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, j + upd[:, :, None], row, axis=2)
+
+    def one(bb, ub, rb):
+        j = jax.lax.dynamic_slice_in_dim(bb, rb, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(
+            bb, j + ub[:, None], rb, axis=1)
+
+    return jax.vmap(one)(buf, upd, row)
+
+
 def decode_step(params, cfg: ArchConfig, token, cache,
                 compute_dtype=jnp.bfloat16, backend: str = "gather",
                 drift_threshold=None):
     """One decode step. token: (B,) int32; cache k/v: (L, B, Hkv, S, Dh);
-    cache['pos'] is a scalar (static-batch serving, aligned sequences).
+    cache['pos'] is a scalar (static-batch serving, aligned sequences)
+    or a (B,) vector of per-slot positions (continuous batching —
+    every slot advances through its own sequence independently).
 
     The new KV is written at `pos` via dynamic_update_slice (O(1)
-    write). Attention: caches made with `prefill(decode_max_len=)` or
-    `make_cache(decode_sla=True)` carry decode-SLA state and run
-    incremental-plan SLA decode (`_decode_step_sla`); otherwise dense
-    masked attention over the full static cache (O(S) per token —
-    exactly the decode_* cells' old cost model).
+    write; vmapped per slot under vector positions). Attention: caches
+    made with `prefill(decode_max_len=)` or `make_cache(decode_sla=True)`
+    carry decode-SLA state and run incremental-plan SLA decode
+    (`_decode_step_sla`); otherwise dense masked attention over the
+    full static cache (O(S) per token — exactly the decode_* cells'
+    old cost model).
     """
     if "sla" in cache:
         return _decode_step_sla(params, cfg, token, cache, compute_dtype,
@@ -488,18 +524,16 @@ def decode_step(params, cfg: ArchConfig, token, cache,
     emb = params["embed"]
     x = jnp.take(emb, token[:, None], axis=0).astype(compute_dtype)
     b = x.shape[0]
-    pos = cache["pos"]  # scalar int32
+    pos = cache["pos"]  # scalar or (B,) int32
+    positions = jnp.broadcast_to(pos, (b,))[:, None]
     kinds = layer_kinds(cfg)
 
     def body(x, layer):
         p, kind, kc, vc = layer
         xn = rms_norm(x, p["ln1"])
-        q, k_new, v_new = _qkv(p, xn, cfg,
-                               jnp.full((b, 1), pos, jnp.int32))
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            kc, k_new.astype(kc.dtype), pos, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            vc, v_new.astype(vc.dtype), pos, axis=2)
+        q, k_new, v_new = _qkv(p, xn, cfg, positions)
+        kc = _cache_write(kc, k_new, pos)
+        vc = _cache_write(vc, v_new, pos)
         o = _dense_decode_attn(q, kc, vc, pos, kind, cfg)
         x = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
         f, _ = _ffn(p, rms_norm(x, p["ln2"]), cfg)
@@ -508,9 +542,7 @@ def decode_step(params, cfg: ArchConfig, token, cache,
     x, (kc, vc) = jax.lax.scan(
         body, x, (params["layers"], kinds, cache["k"], cache["v"]))
     x = rms_norm(x, params["ln_f"])
-    table = params.get("unembed", params["embed"])
-    logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(jnp.float32),
-                        table.astype(jnp.float32))
+    logits = logits_from_hidden(params, x[:, 0])
     new_cache = {"k": kc, "v": vc, "pos": pos + 1}
     return logits, new_cache
 
@@ -538,6 +570,16 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
     head projects the whole pooled-K cache (O(Tn d^2) per head), so
     both score_row calls sit under `lax.cond(boundary, ...)` — the
     amortized-per-boundary cost `flops.sla_decode_flops` reports.
+
+    Per-slot positions (DESIGN.md "Serving API v2"): a (B,) `pos`
+    vector runs every piece of the above per slot — each slot crosses
+    its own block boundaries, appends its own plan rows, and makes its
+    own drift decision (min over ITS heads only, where the aligned
+    scalar-pos batch keeps the historical min-over-batch decision).
+    Boundary scoring then runs whenever ANY slot is at a boundary
+    (`lax.cond(jnp.any(boundary))`), so the amortized-cost claim
+    holds per slot on average but individual steps may pay it for a
+    single slot. Plan/state counters become per-slot (L, B) arrays.
     """
     from repro.core import backends as backend_lib
     from repro.core.phi import phi
@@ -547,6 +589,7 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
     x = jnp.take(emb, token[:, None], axis=0).astype(compute_dtype)
     b = x.shape[0]
     pos = cache["pos"]
+    vec = jnp.ndim(pos) > 0  # per-slot positions (continuous batching)
     st = cache["sla"]
     sla = cfg.sla
     bq = sla.block_q
@@ -562,24 +605,32 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
         thresholds = jnp.broadcast_to(
             jnp.asarray(drift_threshold, jnp.float32), (cfg.num_layers,))
 
-    row = pos // bq                      # current (partial) query row
-    boundary = (pos % bq) == 0           # a block was just completed
+    row = pos // bq                      # current (partial) query row(s)
+    boundary = (pos % bq) == 0           # block(s) just completed
+    any_boundary = jnp.any(boundary)
     append = jnp.logical_and(boundary, st["rows"] < row)
+    rowm = row[:, None] if vec else row  # row arg for masks_lib helpers
+    positions = jnp.broadcast_to(pos, (b,))[:, None]
     blk = jnp.arange(tn)
     # tokens per KV block AFTER this step's write (for pooled-k means)
-    blk_cnt = jnp.clip(jnp.minimum((pos + 1) - blk * sla.block_kv,
+    posx = pos[:, None] if vec else pos
+    blk_cnt = jnp.clip(jnp.minimum((posx + 1) - blk * sla.block_kv,
                                    sla.block_kv), 1, sla.block_kv)
+    # shaped to divide kp_sum (B, Hkv, Tn, D)
+    cnt_div = blk_cnt[:, None, :, None] if vec else blk_cnt[:, None]
+
+    def bsel(m, a, o):
+        """where(m, a, o) with m a scalar bool or a per-slot (B,) bool."""
+        mm = m if jnp.ndim(m) == 0 else m.reshape((b,) + (1,) * (a.ndim - 1))
+        return jnp.where(mm, a, o)
 
     def body(x, layer):
         (p, kind, thr, kc, vc, hb, zb, ht, zt, kp_sum, qp_sum, plan,
          llut, lcnt, lmarg, ret_prev) = layer
         xn = rms_norm(x, p["ln1"])
-        q, k_new, v_new = _qkv(p, xn, cfg,
-                               jnp.full((b, 1), pos, jnp.int32))
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            kc, k_new.astype(kc.dtype), pos, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            vc, v_new.astype(vc.dtype), pos, axis=2)
+        q, k_new, v_new = _qkv(p, xn, cfg, positions)
+        kc = _cache_write(kc, k_new, pos)
+        vc = _cache_write(vc, v_new, pos)
         h, hkv = q.shape[1], k_new.shape[1]
         g = h // hkv
         qf = q[:, :, 0, :].astype(jnp.float32)       # (B, H, D)
@@ -602,55 +653,68 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
         kpool_mean = kp_sum / sla.block_kv
         kpm = jnp.repeat(kpool_mean, g, axis=1)      # (B, H, Tn, D)
         pc_prev = jax.lax.cond(
-            boundary,
+            any_boundary,
             lambda _: masks_lib.score_row(routing, qp_sum / bq, kpm,
-                                          row - 1, dcfg),
+                                          rowm - 1, dcfg),
             lambda _: pc_zeros, None)
-        mc_prev = masks_lib.classify_row(pc_prev, row - 1, dcfg)
-        ext = plan_lib.plan_extend(plan, mc_prev, row - 1)
+        mc_prev = masks_lib.classify_row(pc_prev, rowm - 1, dcfg)
+        if vec:
+            ext = jax.vmap(plan_lib.plan_extend)(plan, mc_prev, row - 1)
+        else:
+            ext = plan_lib.plan_extend(plan, mc_prev, row - 1)
         plan = jax.tree_util.tree_map(
-            lambda a, o: jnp.where(append, a, o), ext, plan)
+            lambda a, o: bsel(append, a, o), ext, plan)
 
         # ---- 2. O(1) running-state update for the new token ----
         phik = phi(kf, sla.phi)                      # (B, Hkv, D) f32
         hupd = jnp.einsum("bkd,bke->bkde", phik, vf)
-        hb_j = jax.lax.dynamic_slice_in_dim(hb, row, 1, axis=2)
-        hb = jax.lax.dynamic_update_slice_in_dim(
-            hb, hb_j + hupd[:, :, None], row, axis=2)
-        zb_j = jax.lax.dynamic_slice_in_dim(zb, row, 1, axis=2)
-        zb = jax.lax.dynamic_update_slice_in_dim(
-            zb, zb_j + phik[:, :, None], row, axis=2)
+        hb = _blk_update(hb, hupd, row)
+        zb = _blk_update(zb, phik, row)
         ht = ht + hupd
         zt = zt + phik
-        kp_j = jax.lax.dynamic_slice_in_dim(kp_sum, row, 1, axis=2)
-        kp_sum = jax.lax.dynamic_update_slice_in_dim(
-            kp_sum, kp_j + kf[:, :, None], row, axis=2)
+        kp_sum = _blk_update(kp_sum, kf, row)
 
         # ---- 3. live-row structure (boundary only): drift-gated
         # inherit-vs-fresh, per-layer threshold ----
-        kpm_live = jnp.repeat(kp_sum / blk_cnt[:, None], g, axis=1)
+        kpm_live = jnp.repeat(kp_sum / cnt_div, g, axis=1)
         pc_live = jax.lax.cond(
-            boundary,
-            lambda _: masks_lib.score_row(routing, qf, kpm_live, row,
+            any_boundary,
+            lambda _: masks_lib.score_row(routing, qf, kpm_live, rowm,
                                           dcfg),
             lambda _: pc_zeros, None)
-        mc_fresh = masks_lib.classify_row(pc_live, row, dcfg)
-        mc_inh = jax.lax.dynamic_slice_in_dim(
-            plan.mc, row - 1, 1, axis=2)[..., 0, :]  # (B, H, Tn)
-        mc_inh = jnp.where(blk == row, jnp.int8(1), mc_inh)
+        mc_fresh = masks_lib.classify_row(pc_live, rowm, dcfg)
+        if vec:
+            mc_inh = jax.vmap(lambda m, r: jax.lax.dynamic_slice_in_dim(
+                m, r, 1, axis=1)[:, 0, :])(plan.mc, row - 1)
+            diag = (blk[None, :] == row[:, None])[:, None, :]
+        else:
+            mc_inh = jax.lax.dynamic_slice_in_dim(
+                plan.mc, row - 1, 1, axis=2)[..., 0, :]  # (B, H, Tn)
+            diag = blk == row
+        mc_inh = jnp.where(diag, jnp.int8(1), mc_inh)
         stale = jnp.sum(pc_live * (mc_inh == 1), axis=-1)
         fresh = jnp.sum(pc_live * (mc_fresh == 1), axis=-1)
         r = jnp.clip(stale / jnp.maximum(fresh, plan_lib.EPS), 0.0, 1.0)
-        retention = jnp.min(r)
-        replan = jnp.logical_and((1.0 - retention) >= thr, thr < 1.0)
-        mc_live = jnp.where(replan, mc_fresh, mc_inh)
+        if vec:
+            # per-slot decision: each slot's own heads gate its row
+            retention = jnp.min(r, axis=1)                      # (B,)
+            replan = jnp.logical_and((1.0 - retention) >= thr,
+                                     thr < 1.0)
+            rep_m = replan[:, None, None]
+        else:
+            # aligned static batch: one decision for every row
+            retention = jnp.min(r)
+            replan = jnp.logical_and((1.0 - retention) >= thr,
+                                     thr < 1.0)
+            rep_m = replan
+        mc_live = jnp.where(rep_m, mc_fresh, mc_inh)
         llut_n, lcnt_n = plan_lib.build_lut(mc_live[..., None, :],
                                             plan.k_sel)
-        llut = jnp.where(boundary, llut_n[..., 0, :], llut)
-        lcnt = jnp.where(boundary, lcnt_n[..., 0], lcnt)
-        lmarg = jnp.where(boundary,
-                          jnp.sum((mc_live == 0).astype(jnp.int32), -1),
-                          lmarg)
+        llut = bsel(boundary, llut_n[..., 0, :], llut)
+        lcnt = bsel(boundary, lcnt_n[..., 0], lcnt)
+        lmarg = bsel(boundary,
+                     jnp.sum((mc_live == 0).astype(jnp.int32), -1),
+                     lmarg)
 
         # ---- 4. attention: critical blocks + O(1) linear state ----
         state = {"k": kc, "v": vc, "hblk": hb, "zblk": zb, "htot": ht,
@@ -671,7 +735,7 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
             o = jax.lax.cond(kind == KIND_SLA, do_sla, do_dense, None)
         x2 = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
         f, _ = _ffn(p, rms_norm(x2, p["ln2"]), cfg)
-        qp_sum = jnp.where(boundary, qf, qp_sum + qf)
+        qp_sum = bsel(boundary, qf, qp_sum + qf)
         ys = (kc, vc, hb, zb, ht, zt, kp_sum, qp_sum, plan, llut, lcnt,
               lmarg, append.astype(jnp.int32),
               jnp.logical_and(boundary, replan).astype(jnp.int32),
@@ -687,9 +751,7 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
     (kc, vc, hb, zb, ht, zt, kp_sum, qp_sum, plan, llut, lcnt, lmarg,
      exts, reps, reuses, rets) = ys
     x = rms_norm(x, params["ln_f"])
-    table = params.get("unembed", params["embed"])
-    logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(jnp.float32),
-                        table.astype(jnp.float32))
+    logits = logits_from_hidden(params, x[:, 0])
     new_st = {
         "hblk": hb, "zblk": zb, "htot": ht, "ztot": zt, "kpool": kp_sum,
         "qpool": qp_sum, "plan": plan, "rows": st["rows"] + append,
@@ -702,21 +764,84 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
 
 def make_cache(cfg: ArchConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16,
-               decode_sla: Optional[bool] = None) -> dict:
+               decode_sla: Optional[bool] = None,
+               per_slot: bool = False) -> dict:
     """Empty decode cache. `decode_sla` (default: cfg.sla.decode_mode ==
     "sla") adds the decode-time SLA state (empty incremental plan +
     zeroed running H/Z); production callers seed a *filled* decode
-    cache via `prefill(decode_max_len=...)` instead."""
+    cache via `prefill(decode_max_len=...)` instead.
+
+    `per_slot=True` lays the cache out for continuous batching
+    (DESIGN.md "Serving API v2"): `pos` (and the decode-SLA `rows` /
+    counter state) become per-slot vectors, so each batch row advances
+    through its own sequence and `insert_slot` can scatter a fresh
+    prefill into any slot independently."""
     shape = (cfg.num_layers, batch, cfg.num_kv_heads, max_len, cfg.head_dim)
     cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
-             "pos": jnp.int32(0)}
+             "pos": (jnp.zeros((batch,), jnp.int32) if per_slot
+                     else jnp.int32(0))}
     if decode_sla is None:
         decode_sla = cfg.sla.decode_mode == "sla"
     if decode_sla:
         _check_decode_grid(cfg, max_len, max_len)
         mc = jnp.full((cfg.num_layers, batch, cfg.num_heads, 0, 0),
                       -1, jnp.int8)
-        cache["sla"] = _seed_decode_state(
+        st = _seed_decode_state(
             cfg, cache["k"][..., :0, :], cache["v"][..., :0, :],
             mc, max_len)
+        if per_slot:
+            st["rows"] = jnp.full((batch,), st["rows"], jnp.int32)
+            for key in ("extends", "replans", "reuses", "retention"):
+                st[key] = jnp.repeat(st[key][:, None], batch, axis=1)
+        cache["sla"] = st
     return cache
+
+
+def insert_slot(cache: dict, single: dict, slot) -> dict:
+    """Scatter a batch-1 prefill cache into decode slot `slot` of a
+    per-slot cache (`make_cache(..., per_slot=True)`).
+
+    `single` comes from `prefill(params, cfg, prompt[None, :], ...)`
+    over the SAME max_len — decode-SLA prefills size their caches via
+    `decode_max_len`; dense callers pad k/v before inserting. Every
+    piece of request state rides along: KV rows, the incremental
+    decode plan's rows, the running H/Z linear state, and the pooled
+    q/k features, so the admitted request decodes exactly as it would
+    have in a fresh aligned batch (DESIGN.md "Serving API v2"). The
+    write is jit-traceable with a traced `slot` — admission compiles
+    to one scatter.
+    """
+    if single["k"].shape[1] != 1:
+        raise ValueError(
+            f"insert_slot takes a batch-1 prefill cache (got batch "
+            f"{single['k'].shape[1]})")
+    if ("sla" in cache) != ("sla" in single):
+        raise ValueError(
+            "decode-SLA 'sla' state mismatch: the slot cache and the "
+            "prefill cache must both (or neither) carry it")
+    if single["k"].shape[-2] != cache["k"].shape[-2]:
+        raise ValueError(
+            f"cache length mismatch: the slot cache holds "
+            f"{cache['k'].shape[-2]} positions but the prefill cache "
+            f"has {single['k'].shape[-2]}; prefill with decode_max_len "
+            f"(or pad k/v) to the scheduler's max_len first")
+
+    def upd(live, one):
+        return jax.lax.dynamic_update_slice_in_dim(
+            live, one.astype(live.dtype), slot, axis=1)
+
+    out = {"k": upd(cache["k"], single["k"]),
+           "v": upd(cache["v"], single["v"]),
+           "pos": cache["pos"].at[slot].set(single["pos"])}
+    if "sla" in cache:
+        s, t = cache["sla"], single["sla"]
+        ns = {key: upd(s[key], t[key])
+              for key in ("hblk", "zblk", "htot", "ztot", "kpool",
+                          "qpool", "live_lut", "live_cnt", "live_marg")}
+        ns["plan"] = jax.tree_util.tree_map(upd, s["plan"], t["plan"])
+        ns["rows"] = s["rows"].at[slot].set(t["rows"])
+        for key in ("extends", "replans", "reuses", "retention"):
+            # (L,) single-request counters -> column `slot` of (L, B)
+            ns[key] = s[key].at[:, slot].set(t[key])
+        out["sla"] = ns
+    return out

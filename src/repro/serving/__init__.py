@@ -1,0 +1,11 @@
+"""Serving layer: v2 continuous-batching API + the v1 static engine."""
+from repro.serving.api import (RequestMetrics, RequestState, SamplingParams,
+                               Scheduler, ServedRequest, ServeStats,
+                               StreamEvent)
+from repro.serving.engine import Request, ServingEngine
+
+__all__ = [
+    "Request", "RequestMetrics", "RequestState", "SamplingParams",
+    "Scheduler", "ServedRequest", "ServeStats", "ServingEngine",
+    "StreamEvent",
+]

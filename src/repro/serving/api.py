@@ -1,0 +1,559 @@
+"""Serving API v2: continuous-batching scheduler with streaming requests.
+
+The v1 surface (`ServingEngine.run(List[Request])`) decodes fixed groups
+in lockstep: finished slots keep computing frozen logits, queued
+requests wait for the whole group, and per-request latency collapses to
+cumulative engine time. This module is the request-level redesign
+(DESIGN.md "Serving API v2"):
+
+  * `SamplingParams` / `RequestState` / `StreamEvent` / `RequestMetrics`
+    — the typed request surface (greedy or temperature sampling, stop
+    tokens, QUEUED -> PREFILLING -> DECODING -> FINISHED lifecycle, and
+    real per-request TTFT / queue-time / latency).
+  * `Scheduler` — a fixed pool of decode slots over ONE live per-slot
+    cache (`make_cache(per_slot=True)`). `submit()` enqueues;  `step()`
+    admits queued requests into free slots (each prefilled in its own
+    block-aligned `(1, bucket)` call, then scattered into the slot via
+    `insert_slot`: KV rows, decode-SLA incremental plan rows, H/Z
+    linear state, pooled q/k features) and runs one batched decode step
+    with per-slot positions; `drain()` runs to completion; `stream()`
+    yields `StreamEvent`s as they happen.
+
+Admission happens at SLA block boundaries by construction: the prefill
+bucket is a whole number of `block_q` blocks, so an admitted slot's
+position starts block-aligned and the static-grid invariants of
+`plan_extend` (rows appended monotonically, each exactly once) hold per
+slot. Cross-request plan reuse (`plan_reuse="adaptive"`) and decode-time
+SLA (`decode_sla=True`) both ride along — this is where they pay off
+hardest, because slots turn over continuously instead of waiting for
+the slowest group member.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+import time
+from typing import Deque, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from repro.models.common import logits_from_hidden
+
+
+# ---------------------------------------------------------------------------
+# typed request surface
+# ---------------------------------------------------------------------------
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    """Per-request sampling policy.
+
+    temperature == 0.0 is greedy argmax (bit-reproducible against the
+    static-batch engine); > 0 samples from softmax(logits / T) with a
+    per-request deterministic host RNG (`seed`). Generation stops at
+    `max_new_tokens` or on the first token in `stop_tokens` (the stop
+    token itself is kept, matching the budget-truncation semantics of
+    the v1 engine)."""
+
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    stop_tokens: Tuple[int, ...] = ()
+    seed: int = 0
+
+    def validate(self) -> "SamplingParams":
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1 (got {self.max_new_tokens})")
+        if self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be >= 0 (got {self.temperature})")
+        return self
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Wall-clock request accounting (absolute times from time.time()).
+
+    queue_s / ttft_s / latency_s are derived and measured per request —
+    the v1 engine assigned every request the engine's cumulative
+    prefill+decode seconds instead."""
+
+    submit_t: float = 0.0
+    admit_t: float = 0.0
+    first_token_t: float = 0.0
+    finish_t: float = 0.0
+    decode_tokens: int = 0  # total generated tokens (incl. the prefill one)
+
+    @property
+    def queue_s(self) -> float:
+        return max(0.0, self.admit_t - self.submit_t)
+
+    @property
+    def ttft_s(self) -> float:
+        return max(0.0, self.first_token_t - self.submit_t)
+
+    @property
+    def latency_s(self) -> float:
+        return max(0.0, self.finish_t - self.submit_t)
+
+
+@dataclasses.dataclass
+class StreamEvent:
+    """One streaming output event.
+
+    kind: "start" (request admitted to a slot), "token" (one generated
+    token; `token`/`index` set), "finish" (request complete)."""
+
+    rid: int
+    kind: str
+    t: float
+    token: Optional[int] = None
+    index: Optional[int] = None
+
+
+@dataclasses.dataclass
+class ServedRequest:
+    """A request inside the scheduler (the v2 analogue of engine.Request)."""
+
+    rid: int
+    prompt: np.ndarray
+    sampling: SamplingParams
+    state: RequestState = RequestState.QUEUED
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+    metrics: RequestMetrics = dataclasses.field(
+        default_factory=RequestMetrics)
+    slot: Optional[int] = None
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    # plan-reuse accounting (layer granularity; DESIGN.md "Plan
+    # lifetime & drift"): builds = first-chunk plans, replans =
+    # drift-triggered rebuilds, reuses = layers served by a stale plan.
+    plan_builds: int = 0
+    plan_replans: int = 0
+    plan_reuses: int = 0
+    last_retention: float = 1.0
+    # decode-plan accounting (layer granularity; DESIGN.md "Decode-time
+    # SLA"): builds = decode plans seeded at prefill (one per layer per
+    # chunk, covering all prompt rows), extends = completed rows
+    # appended via plan_extend, replans = live rows re-classified at a
+    # block boundary (drift over that layer's threshold), reuses = live
+    # rows inheriting the previous row's structure.
+    decode_plan_builds: int = 0
+    decode_plan_extends: int = 0
+    decode_plan_replans: int = 0
+    decode_plan_reuses: int = 0
+    decode_last_retention: float = 1.0
+    # continuous-batching accounting (DESIGN.md "Serving API v2"):
+    # admissions = requests scattered into a slot, slot_steps_active /
+    # slot_steps_total = decode-slot occupancy (active slots vs pool
+    # size, summed over decode steps; the static engine counts its
+    # lockstep groups the same way, so the two paths are comparable).
+    admissions: int = 0
+    slot_steps_active: int = 0
+    slot_steps_total: int = 0
+
+    def occupancy(self) -> float:
+        """Decode-slot utilization in [0, 1]."""
+        return self.slot_steps_active / max(1, self.slot_steps_total)
+
+
+# ---------------------------------------------------------------------------
+# shared serving helpers (engine + scheduler)
+# ---------------------------------------------------------------------------
+def block_bucket(length: int, block: int) -> int:
+    """`length` rounded up to a whole number of SLA query blocks."""
+    block = max(block, 1)
+    return max(block, ((length + block - 1) // block) * block)
+
+
+def normalize_drift_threshold(cfg: ArchConfig, drift_threshold):
+    """CLI/user drift threshold -> scalar or per-layer tuple."""
+    if drift_threshold is None:
+        return cfg.sla.plan_drift_threshold
+    if isinstance(drift_threshold, (tuple, list)):
+        return tuple(float(t) for t in drift_threshold)
+    return float(drift_threshold)
+
+
+def percentile(xs, p: float) -> float:
+    """Nearest-rank percentile (the serving-metrics convention used by
+    both `launch/serve.py` and `benchmarks/fig_serving.py`)."""
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(p * len(xs)))]
+
+
+def prefill_with_plan_reuse(prefill_plan, prefill_reuse, params, toks,
+                            plans, stats: "ServeStats", num_layers: int):
+    """Shared plan-reuse prefill step (DESIGN.md "Plan lifetime &
+    drift"): build the per-layer plan stack on the first chunk, reuse
+    it with drift-gated refresh afterwards, and account builds /
+    replans / reuses / retention on `stats`. Returns
+    (last_hidden, cache, plans)."""
+    if plans is None:
+        last_hidden, cache, plans = prefill_plan(params, toks)
+        stats.plan_builds += num_layers
+    else:
+        last_hidden, cache, plans, info = prefill_reuse(params, toks,
+                                                        plans)
+        replans = int(np.sum(np.asarray(info["replanned"])))
+        stats.plan_replans += replans
+        stats.plan_reuses += num_layers - replans
+        stats.last_retention = float(
+            np.min(np.asarray(info["retention"])))
+    return last_hidden, cache, plans
+
+
+def check_serving_family(cfg: ArchConfig, mdl, plan_reuse: str,
+                         decode_sla: bool, continuous: bool = False):
+    """Loudly reject model families without the capabilities a serving
+    mode needs (plan-aware prefill, decode-SLA prefill, slot caches)."""
+    import inspect
+
+    prefill_fn = getattr(mdl, "prefill", None)
+    if plan_reuse != "off":
+        if (prefill_fn is None
+                or "plans" not in inspect.signature(prefill_fn).parameters):
+            raise ValueError(
+                f"plan_reuse={plan_reuse!r} requires a model family with "
+                f"plan-aware prefill (got family {cfg.family!r})")
+    if decode_sla:
+        if (prefill_fn is None or "decode_max_len" not in
+                inspect.signature(prefill_fn).parameters):
+            raise ValueError(
+                f"decode_sla requires a model family with decode-SLA "
+                f"prefill (got family {cfg.family!r})")
+    if continuous and getattr(mdl, "insert_slot", None) is None:
+        raise ValueError(
+            f"the continuous-batching scheduler requires a model family "
+            f"with per-slot caches (make_cache(per_slot=True) + "
+            f"insert_slot); family {cfg.family!r} has neither")
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+# ---------------------------------------------------------------------------
+class Scheduler:
+    """Continuous-batching scheduler over a fixed pool of decode slots.
+
+    One live per-slot cache holds `num_slots` independent sequences
+    (per-slot positions, per-slot decode-SLA plan/state). Slots turn
+    over continuously: the moment a request finishes, the next queued
+    request is prefilled in its own `(1, bucket)` call and scattered
+    into the freed slot — no request ever waits for a group.
+
+    Greedy tokens are bit-identical to the static-batch engine's when
+    the prefill bucket and slot count match (per-request numerics
+    depend only on (prompt, bucket, batch width); verified by
+    tests/test_serving.py).
+    """
+
+    def __init__(self, cfg: ArchConfig, params, num_slots: int = 4,
+                 max_len: int = 512, backend: str = "gather",
+                 decode_sla: Optional[bool] = None,
+                 plan_reuse: str = "off", drift_threshold=None,
+                 prefill_bucket: Optional[int] = None,
+                 compute_dtype=jnp.bfloat16):
+        from repro.core import backends as backend_registry
+
+        backend = backend_registry.resolve(backend)
+        cfg.sla.validate()
+        if plan_reuse not in ("off", "adaptive"):
+            raise ValueError(
+                f"unknown plan_reuse mode {plan_reuse!r}; expected "
+                "'off' or 'adaptive'")
+        if decode_sla is None:
+            decode_sla = cfg.sla.decode_mode == "sla"
+        self.cfg = cfg
+        self.params = params
+        self.mdl = registry.get_model(cfg)
+        check_serving_family(cfg, self.mdl, plan_reuse, decode_sla,
+                             continuous=True)
+        self.num_slots = num_slots
+        self.backend = backend
+        self.decode_sla = decode_sla
+        self.plan_reuse = plan_reuse
+        self.drift_threshold = normalize_drift_threshold(cfg,
+                                                         drift_threshold)
+        self.block = max(cfg.sla.block_q, 1)
+        # admission at block boundaries: cache length and prefill
+        # buckets are whole numbers of blocks, so every slot's position
+        # starts block-aligned and plan_extend's static-grid invariants
+        # hold per slot
+        self.max_len = block_bucket(max_len, self.block) if decode_sla \
+            else max_len
+        self.compute_dtype = compute_dtype
+        self.stats = ServeStats()
+
+        self._queue: Deque[ServedRequest] = collections.deque()
+        self._slots: List[Optional[ServedRequest]] = [None] * num_slots
+        self._tokens = np.zeros((num_slots,), np.int32)
+        self._next_rid = 0
+        self._requests: List[ServedRequest] = []  # submission order
+        self._bucket = (block_bucket(prefill_bucket, self.block)
+                        if prefill_bucket else None)
+        self._plans = None  # (1, bucket) plan stack for plan_reuse
+        self._stat_base = [None] * num_slots  # decode-SLA counter bases
+
+        mdl, backend_, thr = self.mdl, backend, self.drift_threshold
+        dkw = {"decode_max_len": self.max_len} if decode_sla else {}
+
+        @jax.jit
+        def _prefill(params, tokens):
+            return mdl.prefill(params, cfg, tokens, backend=backend_,
+                               compute_dtype=compute_dtype, **dkw)
+
+        @jax.jit
+        def _prefill_plan(params, tokens):
+            return mdl.prefill(params, cfg, tokens, backend=backend_,
+                               compute_dtype=compute_dtype,
+                               return_plans=True, **dkw)
+
+        @jax.jit
+        def _prefill_reuse(params, tokens, plans):
+            return mdl.prefill(params, cfg, tokens, backend=backend_,
+                               compute_dtype=compute_dtype, plans=plans,
+                               drift_threshold=thr, return_plans=True,
+                               **dkw)
+
+        if decode_sla:
+            @jax.jit
+            def _decode(params, token, cache):
+                return mdl.decode_step(params, cfg, token, cache,
+                                       compute_dtype=compute_dtype,
+                                       backend=backend_,
+                                       drift_threshold=thr)
+        else:
+            @jax.jit
+            def _decode(params, token, cache):
+                return mdl.decode_step(params, cfg, token, cache,
+                                       compute_dtype=compute_dtype)
+
+        max_len_ = self.max_len
+
+        @jax.jit
+        def _admit(live, single, slot):
+            grow = max_len_ - single["k"].shape[-2]
+            if grow > 0:  # dense prefill caches stop at the bucket
+                pad = [(0, 0)] * 3 + [(0, grow), (0, 0)]
+                single = dict(single, k=jnp.pad(single["k"], pad),
+                              v=jnp.pad(single["v"], pad))
+            return mdl.insert_slot(live, single, slot)
+
+        self._prefill = _prefill
+        self._prefill_plan = _prefill_plan
+        self._prefill_reuse = _prefill_reuse
+        self._decode = _decode
+        self._admit_jit = _admit
+        self._live = mdl.make_cache(cfg, num_slots, self.max_len,
+                                    dtype=compute_dtype,
+                                    decode_sla=decode_sla, per_slot=True)
+
+    # -- public API --------------------------------------------------------
+    def submit(self, prompt, sampling: Optional[SamplingParams] = None
+               ) -> int:
+        """Enqueue one request; returns its rid. O(1), never blocks."""
+        sampling = (sampling or SamplingParams()).validate()
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        # capacity check against the SHARED prefill bucket (every
+        # admission pads to it, so a long earlier prompt raises the
+        # floor for everyone); _admit_next re-checks after any growth
+        # that happens while this request is queued
+        bucket = max(block_bucket(len(prompt), self.block),
+                     self._bucket or 0)
+        need = bucket + sampling.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"max_len={self.max_len} cannot hold a {len(prompt)}-token "
+                f"prompt (shared prefill bucket {bucket}) plus "
+                f"{sampling.max_new_tokens} new tokens; raise max_len "
+                f"to >= {need}")
+        r = ServedRequest(rid=self._next_rid, prompt=prompt,
+                          sampling=sampling)
+        r.metrics.submit_t = time.time()
+        self._next_rid += 1
+        self._queue.append(r)
+        self._requests.append(r)
+        return r.rid
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(r is not None for r in self._slots)
+
+    def step(self) -> List[StreamEvent]:
+        """Admit queued requests into free slots, then run ONE batched
+        decode step over the live cache. Returns the events produced."""
+        events: List[StreamEvent] = []
+        for slot in range(self.num_slots):
+            if self._slots[slot] is None and self._queue:
+                self._admit_next(slot, events)
+        active = [j for j in range(self.num_slots)
+                  if self._slots[j] is not None]
+        if not active:
+            return events
+        t0 = time.time()
+        logits, self._live = self._decode(
+            self.params, jnp.asarray(self._tokens), self._live)
+        # greedy slots argmax on device (a (B,) transfer); the full
+        # (B, vocab) logits matrix only crosses to the host when some
+        # active request actually samples
+        greedy_toks = np.asarray(jnp.argmax(logits, -1))  # host sync
+        larr = None
+        if any(self._slots[j].sampling.temperature > 0.0 for j in active):
+            larr = np.asarray(logits)
+        now = time.time()
+        self.stats.decode_s += now - t0
+        self.stats.decode_tokens += len(active)
+        self.stats.slot_steps_active += len(active)
+        self.stats.slot_steps_total += self.num_slots
+        for j in active:
+            r = self._slots[j]
+            tok = int(greedy_toks[j]) if r.sampling.temperature <= 0.0 \
+                else self._sample(r, larr[j])
+            self._tokens[j] = tok
+            r.tokens_out.append(tok)
+            r.metrics.decode_tokens += 1
+            events.append(StreamEvent(rid=r.rid, kind="token", t=now,
+                                      token=tok,
+                                      index=len(r.tokens_out) - 1))
+            if self._is_done(r):
+                self._finish(r, j, now, events)
+        return events
+
+    def drain(self) -> List[ServedRequest]:
+        """Run `step()` until every submitted request has finished;
+        returns all requests in submission order."""
+        while self.has_work:
+            self.step()
+        return list(self._requests)
+
+    def stream(self) -> Iterator[StreamEvent]:
+        """Yield StreamEvents as they are produced, until drained."""
+        while self.has_work:
+            yield from self.step()
+
+    # -- internals ---------------------------------------------------------
+    def _round_bucket(self, plen: int) -> int:
+        return block_bucket(plen, self.block)
+
+    def _admit_next(self, slot: int, events: List[StreamEvent]):
+        r = self._queue.popleft()
+        r.state = RequestState.PREFILLING
+        r.slot = slot
+        t0 = time.time()
+        r.metrics.admit_t = t0
+        plen = len(r.prompt)
+        if self._bucket is None or plen > self._bucket:
+            # a longer prompt grows the bucket; cached (1, bucket) plans
+            # are for the old block grid, so they die with it
+            self._bucket = self._round_bucket(plen)
+            self._plans = None
+        if self._bucket + r.sampling.max_new_tokens > self.max_len:
+            # the shared bucket grew past this request's submit-time
+            # check; past this point decode would write beyond the cache
+            # and dynamic_update_slice would clamp onto the last slot —
+            # silent token corruption, so fail loudly instead. The
+            # request goes back to the queue head first, so a caller
+            # that catches the error still sees it (and can cancel it)
+            # rather than losing it in a half-admitted limbo state
+            self._queue.appendleft(r)
+            r.state = RequestState.QUEUED
+            r.slot = None
+            raise ValueError(
+                f"max_len={self.max_len} cannot hold request {r.rid}: "
+                f"the shared prefill bucket grew to {self._bucket} "
+                f"(longest admitted prompt, block-aligned) and "
+                f"{r.sampling.max_new_tokens} new tokens no longer fit; "
+                f"raise max_len to >= "
+                f"{self._bucket + r.sampling.max_new_tokens}")
+        toks = np.zeros((1, self._bucket), np.int32)
+        toks[0, self._bucket - plen:] = r.prompt  # left-pad
+        last_hidden, cache = self._run_prefill(jnp.asarray(toks))
+        logits = np.asarray(logits_from_hidden(self.params, last_hidden))
+        self._live = self._admit_jit(self._live, cache, slot)
+        if self.decode_sla:
+            self.stats.decode_plan_builds += self.cfg.num_layers
+            self._stat_base[slot] = self._slot_counters(slot)
+        tok = self._sample(r, logits[0])
+        self._tokens[slot] = tok
+        now = time.time()
+        self.stats.admissions += 1
+        self.stats.prefill_tokens += self._bucket
+        self.stats.prefill_s += now - t0
+        r.metrics.first_token_t = now
+        r.state = RequestState.DECODING
+        r.tokens_out.append(tok)
+        r.metrics.decode_tokens += 1
+        events.append(StreamEvent(rid=r.rid, kind="start", t=t0))
+        events.append(StreamEvent(rid=r.rid, kind="token", t=now,
+                                  token=tok, index=0))
+        if self._is_done(r):
+            self._finish(r, slot, now, events)
+        else:
+            self._slots[slot] = r
+
+    def _run_prefill(self, toks: jnp.ndarray):
+        """(1, bucket) prefill, through the plan-reuse path if enabled."""
+        if self.plan_reuse == "off":
+            return self._prefill(self.params, toks)
+        last_hidden, cache, self._plans = prefill_with_plan_reuse(
+            self._prefill_plan, self._prefill_reuse, self.params, toks,
+            self._plans, self.stats, self.cfg.num_layers)
+        return last_hidden, cache
+
+    def _slot_counters(self, slot: int) -> dict:
+        st = self._live["sla"]
+        return {key: np.asarray(st[key][:, slot])
+                for key in ("extends", "replans", "reuses")}
+
+    def _sample(self, r: ServedRequest, logits_row: np.ndarray) -> int:
+        if r.sampling.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        rng = np.random.default_rng(
+            (r.sampling.seed, r.rid, len(r.tokens_out)))
+        z = logits_row.astype(np.float64) / r.sampling.temperature
+        z -= z.max()
+        p = np.exp(z)
+        return int(rng.choice(len(p), p=p / p.sum()))
+
+    def _is_done(self, r: ServedRequest) -> bool:
+        if len(r.tokens_out) >= r.sampling.max_new_tokens:
+            return True
+        return bool(r.tokens_out) and \
+            r.tokens_out[-1] in r.sampling.stop_tokens
+
+    def _finish(self, r: ServedRequest, slot: int, now: float,
+                events: List[StreamEvent]):
+        r.state = RequestState.FINISHED
+        r.metrics.finish_t = now
+        self._slots[slot] = None
+        if self.decode_sla and self._stat_base[slot] is not None:
+            base, cur = self._stat_base[slot], self._slot_counters(slot)
+            self.stats.decode_plan_extends += int(
+                (cur["extends"] - base["extends"]).sum())
+            self.stats.decode_plan_replans += int(
+                (cur["replans"] - base["replans"]).sum())
+            self.stats.decode_plan_reuses += int(
+                (cur["reuses"] - base["reuses"]).sum())
+            self.stats.decode_last_retention = float(
+                np.min(np.asarray(self._live["sla"]["retention"][:, slot])))
+            self._stat_base[slot] = None
+        events.append(StreamEvent(rid=r.rid, kind="finish", t=now))

@@ -1,11 +1,19 @@
 """Batched serving engine: request queue -> SLA prefill -> batched decode.
 
-Static-batch continuous serving: requests are grouped into fixed-size
-decode batches; prefill runs per group (SLA attention — the paper's
-kernel accelerates exactly this long-context prefill), then tokens are
-decoded until each request's budget. Slot-level finish masking lets short
-requests exit early (their logits keep computing but sampling freezes —
-the static-shape analogue of continuous batching).
+Two scheduling policies behind one `run()` surface (DESIGN.md "Serving
+API v2"):
+
+  * "static" — the v1 path: requests are grouped into fixed-size decode
+    batches; prefill runs per group, then tokens are decoded in
+    lockstep until each request's budget. Slot-level finish masking
+    lets short requests exit early (their logits keep computing but
+    sampling freezes). Kept as the bit-reproducible baseline the
+    continuous scheduler is verified against.
+  * "continuous" — a thin compatibility wrapper over
+    `repro.serving.api.Scheduler`: every request is submitted to the
+    continuous-batching slot pool and `run()` drains it. Per-request
+    TTFT/latency (`Request.metrics`) and slot-occupancy counters come
+    back on the same `ServeStats`.
 
 Prefill plan reuse (DESIGN.md "Plan lifetime & drift"): with
 `plan_reuse="adaptive"` the engine pads every prefill chunk to one
@@ -30,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +46,14 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import registry
+from repro.models.common import logits_from_hidden
+from repro.serving.api import (RequestMetrics, SamplingParams, Scheduler,
+                               ServeStats, block_bucket,
+                               check_serving_family,
+                               normalize_drift_threshold,
+                               prefill_with_plan_reuse)
+
+__all__ = ["Request", "ServeStats", "ServingEngine"]
 
 
 @dataclasses.dataclass
@@ -46,48 +62,27 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 16
     tokens_out: Optional[List[int]] = None
-    latency_s: float = 0.0
-
-
-@dataclasses.dataclass
-class ServeStats:
-    prefill_tokens: int = 0
-    decode_tokens: int = 0
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    # plan-reuse accounting (layer granularity; DESIGN.md "Plan
-    # lifetime & drift"): builds = first-chunk plans, replans =
-    # drift-triggered rebuilds, reuses = layers served by a stale plan.
-    plan_builds: int = 0
-    plan_replans: int = 0
-    plan_reuses: int = 0
-    last_retention: float = 1.0
-    # decode-plan accounting (layer granularity; DESIGN.md "Decode-time
-    # SLA"): builds = decode plans seeded at prefill (one per layer per
-    # chunk, covering all prompt rows), extends = completed rows
-    # appended via plan_extend, replans = live rows re-classified at a
-    # block boundary (drift over that layer's threshold), reuses = live
-    # rows inheriting the previous row's structure.
-    decode_plan_builds: int = 0
-    decode_plan_extends: int = 0
-    decode_plan_replans: int = 0
-    decode_plan_reuses: int = 0
-    decode_last_retention: float = 1.0
+    latency_s: float = 0.0  # = metrics.latency_s (kept for v1 callers)
+    metrics: Optional[RequestMetrics] = None
 
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, batch_size: int = 4,
                  max_len: int = 512, greedy: bool = True,
                  backend: str = "gather", plan_reuse: str = "off",
-                 drift_threshold=None, decode_sla: bool = False):
-        import inspect
-
+                 drift_threshold=None, decode_sla: bool = False,
+                 scheduler: str = "static"):
         from repro.core import backends as backend_registry
         backend = backend_registry.resolve(backend)  # fail loudly, early
+        cfg.sla.validate()
         if plan_reuse not in ("off", "adaptive"):
             raise ValueError(
                 f"unknown plan_reuse mode {plan_reuse!r}; expected "
                 "'off' or 'adaptive'")
+        if scheduler not in ("static", "continuous"):
+            raise ValueError(
+                f"unknown scheduler {scheduler!r}; expected 'static' or "
+                "'continuous'")
         self.cfg = cfg
         self.params = params
         self.mdl = registry.get_model(cfg)
@@ -95,38 +90,33 @@ class ServingEngine:
         self.greedy = greedy
         self.backend = backend
         self.plan_reuse = plan_reuse
+        self.scheduler = scheduler
         self.decode_sla = decode_sla or cfg.sla.decode_mode == "sla"
-        if drift_threshold is None:
-            self.drift_threshold = cfg.sla.plan_drift_threshold
-        elif isinstance(drift_threshold, (tuple, list)):
-            self.drift_threshold = tuple(float(t) for t in drift_threshold)
-        else:
-            self.drift_threshold = float(drift_threshold)
+        self.drift_threshold = normalize_drift_threshold(cfg,
+                                                         drift_threshold)
         if self.decode_sla:
             # decode-SLA block grids are static: the cache length must be
             # a whole number of SLA blocks (DESIGN.md "Decode-time SLA")
-            block = max(cfg.sla.block_q, 1)
-            max_len = ((max_len + block - 1) // block) * block
+            max_len = block_bucket(max_len, cfg.sla.block_q)
         self.max_len = max_len
         self.stats = ServeStats()
         self._plans = None
         self._bucket: Optional[int] = None  # static prefill (len) bucket
+        check_serving_family(cfg, self.mdl, plan_reuse, self.decode_sla,
+                             continuous=scheduler == "continuous")
+
+        if scheduler == "continuous":
+            # run() becomes a thin wrapper: one slot per static-batch
+            # lane, same bucket policy, SAME ServeStats object so v1
+            # callers read the counters they always did
+            self._sched = Scheduler(
+                cfg, params, num_slots=batch_size, max_len=max_len,
+                backend=backend, decode_sla=self.decode_sla,
+                plan_reuse=plan_reuse, drift_threshold=drift_threshold)
+            self._sched.stats = self.stats
+            return
 
         mdl, backend_, thr = self.mdl, backend, self.drift_threshold
-        if plan_reuse != "off":
-            prefill_fn = getattr(mdl, "prefill", None)
-            if (prefill_fn is None or "plans" not in
-                    inspect.signature(prefill_fn).parameters):
-                raise ValueError(
-                    f"plan_reuse={plan_reuse!r} requires a model family "
-                    f"with plan-aware prefill (got family {cfg.family!r})")
-        if self.decode_sla:
-            prefill_fn = getattr(mdl, "prefill", None)
-            if (prefill_fn is None or "decode_max_len" not in
-                    inspect.signature(prefill_fn).parameters):
-                raise ValueError(
-                    f"decode_sla requires a model family with decode-SLA "
-                    f"prefill (got family {cfg.family!r})")
         # decode-SLA prefills seed the decode state against the final
         # cache length; plain prefills are grown by _grow_cache instead
         dml = self.max_len if self.decode_sla else None
@@ -181,11 +171,20 @@ class ServingEngine:
         """Static prefill length shared by every chunk (plan-reuse mode):
         the longest prompt rounded up to a whole number of SLA query
         blocks, so reused plans always see the same block grid."""
-        block = max(self.cfg.sla.block_q, 1)
         plen = max(len(r.prompt) for r in requests)
-        return max(block, ((plen + block - 1) // block) * block)
+        return block_bucket(plen, self.cfg.sla.block_q)
 
     def run(self, requests: List[Request]) -> List[Request]:
+        # submission time is run() entry (unless the caller pre-stamped
+        # real arrival times) — groups after the first then report their
+        # wait behind earlier groups as queue time, symmetric with the
+        # continuous scheduler's submit()-time stamp
+        t_submit = time.time()
+        for r in requests:
+            if r.metrics is None:
+                r.metrics = RequestMetrics(submit_t=t_submit)
+        if self.scheduler == "continuous":
+            return self._run_continuous(requests)
         if self.plan_reuse != "off" or self.decode_sla:
             # both plan reuse and decode-SLA need block-aligned static
             # prefill shapes (reused plans / the decode block grid)
@@ -212,28 +211,36 @@ class ServingEngine:
             done.extend(self._run_group(group))
         return done
 
+    def _run_continuous(self, requests: List[Request]) -> List[Request]:
+        """v1 compatibility wrapper over the continuous scheduler."""
+        rid_map = {}
+        for r in requests:
+            sid = self._sched.submit(
+                r.prompt, SamplingParams(max_new_tokens=r.max_new_tokens))
+            rid_map[sid] = r
+        for sr in self._sched.drain():
+            if sr.rid not in rid_map:
+                continue  # finished in an earlier run() call
+            r = rid_map[sr.rid]
+            # keep the caller's (or run()'s) submission stamp — it
+            # predates the scheduler's own submit() stamp
+            sr.metrics.submit_t = r.metrics.submit_t
+            r.tokens_out = list(sr.tokens_out)
+            r.metrics = sr.metrics
+            r.latency_s = sr.metrics.latency_s
+        return requests
+
     def _run_prefill(self, toks: jnp.ndarray):
         """Prefill one chunk, routing through the plan-reuse path when
         enabled. Returns last_hidden, cache."""
-        nl = self.cfg.num_layers
         if self.decode_sla:
             # each layer's decode plan is seeded (all prompt rows) here
-            self.stats.decode_plan_builds += nl
+            self.stats.decode_plan_builds += self.cfg.num_layers
         if self.plan_reuse == "off":
             return self._prefill(self.params, toks)
-        if self._plans is None:
-            last_hidden, cache, plans = self._prefill_plan(self.params,
-                                                           toks)
-            self.stats.plan_builds += nl
-        else:
-            last_hidden, cache, plans, info = self._prefill_reuse(
-                self.params, toks, self._plans)
-            replans = int(np.sum(np.asarray(info["replanned"])))
-            self.stats.plan_replans += replans
-            self.stats.plan_reuses += nl - replans
-            self.stats.last_retention = float(
-                np.min(np.asarray(info["retention"])))
-        self._plans = plans
+        last_hidden, cache, self._plans = prefill_with_plan_reuse(
+            self._prefill_plan, self._prefill_reuse, self.params, toks,
+            self._plans, self.stats, self.cfg.num_layers)
         return last_hidden, cache
 
     def _run_group(self, group: List[Request]) -> List[Request]:
@@ -254,6 +261,9 @@ class ServingEngine:
             toks[j] = toks[j % b]
         budget = max(r.max_new_tokens for r in group)
         t0 = time.time()
+        for r in group:
+            r.metrics.admit_t = t0  # submit_t was stamped in run()
+        self.stats.admissions += b
         last_hidden, cache = self._run_prefill(jnp.asarray(toks))
         if not self.decode_sla:
             # decode-SLA prefill already sized the cache (and its block
@@ -264,9 +274,7 @@ class ServingEngine:
         self.stats.prefill_s += time.time() - t0
 
         # first token from the last hidden state
-        table = self.params.get("unembed", self.params["embed"])
-        logits = jnp.einsum("bd,vd->bv", last_hidden.astype(jnp.float32),
-                            table.astype(jnp.float32))
+        logits = logits_from_hidden(self.params, last_hidden)
         token = jnp.argmax(logits, -1).astype(jnp.int32)
         outs = [[] for _ in group]
         alive = np.array([r.max_new_tokens for r in group])
@@ -275,11 +283,28 @@ class ServingEngine:
             for j in range(b):
                 if step < alive[j]:
                     outs[j].append(int(token[j]))
+            now = time.time()  # int(token[j]) synced this step's tokens
+            for j, r in enumerate(group):
+                if step == 0:
+                    r.metrics.first_token_t = now
+                if step == alive[j] - 1:
+                    r.metrics.finish_t = now
             if (step + 1 >= alive).all():
                 break
             logits, cache = self._decode(self.params, token, cache)
             token = jnp.argmax(logits, -1).astype(jnp.int32)
-            self.stats.decode_tokens += int((step < alive).sum())
+            # this decode produces the step+1 token: useful for exactly
+            # the requests that will consume it — the same accounting
+            # as the scheduler, where a slot decodes budget-1 useful
+            # steps per request
+            active = int((step + 1 < alive).sum())
+            self.stats.decode_tokens += active
+            # lockstep occupancy over the CONFIGURED pool (batch_size
+            # lanes, like the scheduler's num_slots): finished requests,
+            # surplus pad rows, and lanes a partial group never filled
+            # all burn slot-steps until the group drains
+            self.stats.slot_steps_active += active
+            self.stats.slot_steps_total += self.batch_size
         jax.block_until_ready(token)
         self.stats.decode_s += time.time() - t0
         if self.decode_sla:
@@ -296,5 +321,6 @@ class ServingEngine:
                 np.min(np.asarray(stc["retention"])))
         for j, r in enumerate(group):
             r.tokens_out = outs[j][: r.max_new_tokens]
-            r.latency_s = self.stats.prefill_s + self.stats.decode_s
+            r.metrics.decode_tokens = len(r.tokens_out)
+            r.latency_s = r.metrics.latency_s
         return group

@@ -416,7 +416,8 @@ def test_loud_failures():
     q, k, _ = _qkv(8)
     with pytest.raises(ValueError, match="routing parameters"):
         plan_attention(q, k, lrn)  # learned mode, no routing params
-    with pytest.raises(ValueError, match="unknown routing_mode"):
+    with pytest.raises(ValueError, match="routing_mode"):
+        # SLAConfig.validate() rejects the typo at the plan entry point
         plan_attention(q, k, thr.replace(routing_mode="psychic"))
     from repro.core.masks import compute_mask
     with pytest.raises(ValueError, match="routing parameters"):
