@@ -1,30 +1,59 @@
 """Decode-time SLA: per-token attention FLOPs + measured decode latency.
 
-Two measurements (DESIGN.md "Decode-time SLA"):
+Three measurements (DESIGN.md "Decode-time SLA" / "Fused decode
+kernel"):
   (a) DERIVED per-token decode attention FLOPs across context lengths:
       dense masked decode is O(S); decode-SLA pays critical-blocks +
       an O(1) linear term (+ an amortized O(Tn / b_q) planning term),
       so the reduction factor grows linearly with context.
-  (b) MEASURED wall time of one compiled decode_step on a toy
-      transformer, dense cache vs decode-SLA cache, on this host (the
-      CPU analogue of the paper's kernel race, decode edition).
+  (b) MEASURED one-token decode attention across the context sweep
+      {8k, 32k, 131k}: dense masked attention over the cache vs
+      decode-SLA through the gather/einsum chain vs the fused Pallas
+      kernel (interpret mode off-TPU), compile time reported separately
+      from steady-state per-token wall-clock.
+  (c) MEASURED chunked decode (`decode_execute_chunk`, C tokens per
+      launch): the fused kernel's launch overhead amortized C-fold —
+      the verify-style speculative-decode path.
+  (d) MEASURED model-level decode through the full transformer at
+      {8k, 32k}: per-token `decode_step` (the gather backend, one jit
+      launch + plan bookkeeping per token) vs `decode_chunk` (the fused
+      single-launch path: one attention launch per layer scores a whole
+      block of tokens, H/Z + plan_extend boundary work folded into one
+      scanned update). This is where the fused path's win lives — the
+      per-token O(Tn) plan bookkeeping amortizes C-fold.
+
+Emits BENCH_decode.json at the repo root (consumed by benchmarks/run.py,
+which prints the headline speedups).
 """
+import functools
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import SLAConfig
 from repro.core.flops import dense_decode_flops, sla_decode_flops
 
-CTXS = (4096, 16384, 65536, 262144)
+FLOPS_CTXS = (4096, 16384, 65536, 262144)
+CTXS = (8192, 32768, 131072)
+MODEL_CTXS = (8192, 32768)  # full-transformer cells (131k's decode-grid
+                            # plan buffer alone is >0.5 GB on a CPU host)
+BUDGET = 16        # critical KV blocks per decode row
+CHUNK = 8          # tokens per chunked launch (attention-level cells)
+MCHUNK = 16        # model-level chunk = one KV block: both paths cross
+                   # exactly one plan_extend boundary per measured run
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_decode.json"
 
 
 def flops_rows(d=128, h=12):
     cfg = SLAConfig(block_q=64, block_kv=64, kh_frac=0.05, kl_frac=0.0,
                     causal=True, decode_budget=26)  # 5% of 32k/64 blocks
     rows = []
-    for n in CTXS:
+    for n in FLOPS_CTXS:
         f = sla_decode_flops(n, d, h, cfg)
         rows.append((f"fig_decode.flops.n{n}", 0.0,
                      f"dense={f['dense']:.3g} sla={f['total']:.3g} "
@@ -32,47 +61,274 @@ def flops_rows(d=128, h=12):
     return rows
 
 
-def measured_decode(prompt_len=64, max_len=256, reps=16):
-    """Compiled decode_step wall time: dense vs decode-SLA cache."""
+def _decode_state(smax, b=1, hkv=2, g=2, d=32, seed=0):
+    """Synthetic mid-sequence decode state at context `smax`: random
+    cache + H/Z tensors of the right SHAPE (contents don't move the
+    clock), and a self-consistent LUT — BUDGET evenly spaced critical
+    blocks per head, diagonal included, everything inside the valid
+    prefix. Building state this way sidesteps a 131k-token prefill."""
+    cfg = SLAConfig(block_q=16, block_kv=16, kh_frac=0.25, kl_frac=0.0,
+                    causal=True, decode_mode="sla", fixed_budget=BUDGET)
+    h, bkv = hkv * g, cfg.block_kv
+    tn = smax // bkv
+    pos = smax - bkv // 2              # mid-block, near-full cache
+    tnv = pos // bkv + 1
+    rs = jax.random.split(jax.random.PRNGKey(seed), 6)
+    k = jax.random.normal(rs[0], (b, hkv, smax, d))
+    v = jax.random.normal(rs[1], (b, hkv, smax, d))
+    hblk = 0.1 * jax.random.normal(rs[2], (b, hkv, tn, d, d))
+    zblk = jnp.abs(jax.random.normal(rs[3], (b, hkv, tn, d))) + 0.1
+    lut_row = np.unique(np.concatenate(
+        [np.linspace(0, tnv - 2, BUDGET - 1, dtype=np.int64),
+         [pos // bkv]])).astype(np.int32)[:BUDGET]
+    k_sel = len(lut_row)
+    lut = np.broadcast_to(lut_row, (b, h, k_sel)).copy()
+    cnt = np.full((b, h), k_sel, np.int32)
+    marg = np.full((b, h), tnv - k_sel, np.int32)
+    state = {"k": k, "v": v, "hblk": hblk, "zblk": zblk,
+             "htot": jnp.sum(hblk, 2), "ztot": jnp.sum(zblk, 2),
+             "lut": jnp.asarray(lut), "cnt": jnp.asarray(cnt),
+             "marg": jnp.asarray(marg)}
+    q = jax.random.normal(rs[4], (b, h, CHUNK, d))
+    proj = {"proj": 0.1 * jax.random.normal(rs[5], (h, d, d))}
+    return state, q, proj, pos, cfg
+
+
+def _chunk_state(state, pos, cdim, bkv):
+    """Per-token chunk layout for decode_execute_chunk's gather path
+    (the fused kernel's XLA twin): broadcast the live plan row and
+    running totals to every chunk token and slice the at-time diagonal
+    partials (transformer.decode_chunk builds the real thing)."""
+    b, h, k_sel = state["lut"].shape
+    hkv = state["k"].shape[1]
+    d = state["k"].shape[-1]
+    rows = (pos + np.arange(cdim)) // bkv
+    return dict(
+        state,
+        lut=jnp.broadcast_to(state["lut"][:, :, None],
+                             (b, h, cdim, k_sel)),
+        cnt=jnp.broadcast_to(state["cnt"][..., None], (b, h, cdim)),
+        marg=jnp.broadcast_to(state["marg"][..., None], (b, h, cdim)),
+        htot=jnp.broadcast_to(state["htot"][:, :, None],
+                              (b, hkv, cdim, d, d)),
+        ztot=jnp.broadcast_to(state["ztot"][:, :, None], (b, hkv, cdim, d)),
+        hdiag=state["hblk"][:, :, rows],
+        zdiag=state["zblk"][:, :, rows])
+
+
+def _dense_one_token(q1, k, v, pos):
+    b, hkv, smax, d = k.shape
+    qg = q1.reshape(b, hkv, -1, d)
+    s = jnp.einsum("bngd,bnsd->bngs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    s = jnp.where(jnp.arange(smax) <= pos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bngs,bnsd->bngd", p, v.astype(jnp.float32))
+
+
+def _bench(fn, reps, trials=3):
+    t0 = time.time()
+    jax.block_until_ready(fn())
+    compile_s = time.time() - t0
+    best = float("inf")
+    for _ in range(trials):       # best-of-trials: shields the numbers
+        t0 = time.time()          # from scheduler noise on shared hosts
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        best = min(best, (time.time() - t0) / reps)
+    return compile_s, best
+
+
+def measure_context_sweep(reps=24):
+    """Per-context cells: compile_s (first call: trace + compile + run)
+    and steady-state per_token_us for dense / sla-gather / sla-kernel
+    one-token decode plus the chunked fused kernel (per-token =
+    launch / CHUNK).
+
+    On TPU the kernel cells run the real fused Pallas kernel. Off-TPU,
+    Pallas only runs in interpret mode — a correctness tool, ~1000x off
+    compiled speed — so the kernel cells time the kernel's compiled XLA
+    twin instead (`sla_decode._decode_math`, the custom_vjp backward's
+    reference: bit-for-bit the same math, chunk layout included)."""
+    from repro.core import backends as backend_lib
+
+    on_tpu = jax.default_backend() == "tpu"
+    cells = {}
+    for smax in CTXS:
+        state, q, proj, pos, cfg = _decode_state(smax)
+        q1 = q[:, :, :1, :]
+        posj = jnp.int32(pos)
+
+        def cell(fn, reps_=reps, scale=1.0):
+            compile_s, t = _bench(fn, reps_)
+            return {"compile_s": round(compile_s, 4),
+                    "per_token_us": round(t / scale * 1e6, 2)}
+
+        dense = jax.jit(lambda: _dense_one_token(q1, state["k"],
+                                                 state["v"], posj))
+        gather = jax.jit(functools.partial(
+            backend_lib.decode_execute, state, proj, q1, posj, cfg,
+            backend="gather"))
+        if on_tpu:
+            kernel = jax.jit(functools.partial(
+                backend_lib.decode_execute, state, proj, q1, posj, cfg,
+                backend="kernel"))
+            kchunk = jax.jit(functools.partial(
+                backend_lib.decode_execute_chunk, state, proj, q, posj,
+                cfg, backend="kernel"))
+        else:
+            bkv = cfg.block_kv
+            kernel = jax.jit(functools.partial(
+                backend_lib.decode_execute_chunk,
+                _chunk_state(state, pos, 1, bkv), proj, q1, posj, cfg,
+                backend="gather"))
+            kchunk = jax.jit(functools.partial(
+                backend_lib.decode_execute_chunk,
+                _chunk_state(state, pos, CHUNK, bkv), proj, q, posj, cfg,
+                backend="gather"))
+        cells[str(smax)] = {
+            "dense": cell(dense),
+            "sla_gather": cell(gather),
+            "sla_kernel": cell(kernel),
+            "sla_kernel_chunk": cell(kchunk, scale=CHUNK),
+        }
+    return cells
+
+
+def _model_cache(cfg, ctx):
+    """Mid-sequence decode cache at context `ctx` without a ctx-token
+    prefill: make_cache's empty decode-SLA state, position advanced and
+    the live plan row backfilled the same way `_decode_state` does at
+    the attention level (tensor CONTENTS don't move the clock; shapes
+    and the plan bookkeeping do)."""
+    from repro.models import transformer as tfm
+
+    bkv = cfg.sla.block_kv
+    cache = tfm.make_cache(cfg, 1, ctx, decode_sla=True)
+    pos = ctx - 16 * bkv                 # block-aligned, room to decode
+    tnv = pos // bkv
+    st = cache["sla"]
+    nl, b, h, k_sel = st["live_lut"].shape
+    lut_row = np.unique(np.concatenate(
+        [np.linspace(0, tnv - 2, k_sel - 1, dtype=np.int64),
+         [tnv - 1]])).astype(np.int32)[:k_sel]
+    st["live_lut"] = jnp.broadcast_to(jnp.asarray(lut_row),
+                                      (nl, b, h, k_sel))
+    st["live_cnt"] = jnp.full((nl, b, h), len(lut_row), jnp.int32)
+    st["live_marg"] = jnp.full((nl, b, h), tnv - len(lut_row), jnp.int32)
+    st["rows"] = jnp.int32(pos // cfg.sla.block_q)
+    cache["pos"] = jnp.int32(pos)
+    return cache
+
+
+def measure_model_decode(reps=2):
+    """Full-transformer per-token decode: MCHUNK teacher-forced tokens
+    through per-token `decode_step` (gather backend) vs one
+    `decode_chunk` launch (the fused kernel's single-launch entry
+    point; its compiled XLA twin off-TPU). Same cache, same tokens,
+    same block-boundary crossings — only the launch granularity
+    differs."""
     import dataclasses
 
     from repro.configs import get_arch
     from repro.models import transformer as tfm
 
     cfg = get_arch("qwen3-1.7b").smoke()
-    cfg = dataclasses.replace(cfg, sla=cfg.sla.replace(kh_frac=0.25,
-                                                       kl_frac=0.0))
+    cfg = dataclasses.replace(
+        cfg, sla=cfg.sla.replace(kh_frac=0.25, kl_frac=0.0,
+                                 decode_mode="sla",
+                                 decode_budget=BUDGET))
     params = tfm.init(jax.random.PRNGKey(0), cfg)
-    toks = jax.random.randint(jax.random.PRNGKey(1), (2, prompt_len), 0,
-                              cfg.vocab_size)
-    token = jnp.array([1, 2], jnp.int32)
-    step = jax.jit(lambda p, t, c: tfm.decode_step(p, cfg, t, c))
+    toks = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (1, MCHUNK), 0,
+                           cfg.vocab_size), np.int32)
+    jstep = jax.jit(functools.partial(tfm.decode_step, params, cfg))
+    jchunk = jax.jit(functools.partial(tfm.decode_chunk, params, cfg))
 
-    def bench(cache):
-        logits, _ = step(params, token, cache)
-        jax.block_until_ready(logits)
-        t0 = time.time()
-        for _ in range(reps):
-            logits, _ = step(params, token, cache)
-        jax.block_until_ready(logits)
-        return (time.time() - t0) / reps * 1e6  # us
+    cells = {}
+    for ctx in MODEL_CTXS:
+        cache0 = _model_cache(cfg, ctx)
 
-    _, dense_cache = tfm.prefill(params, cfg, toks)
-    pad = max_len - prompt_len
-    dense_cache = {
-        "k": jnp.pad(dense_cache["k"], [(0, 0)] * 3 + [(0, pad), (0, 0)]),
-        "v": jnp.pad(dense_cache["v"], [(0, 0)] * 3 + [(0, pad), (0, 0)]),
-        "pos": dense_cache["pos"]}
-    _, sla_cache = tfm.prefill(params, cfg, toks, decode_max_len=max_len)
-    return bench(dense_cache), bench(sla_cache)
+        def run_steps():
+            cache = cache0
+            out = None
+            for c in range(MCHUNK):
+                out, cache = jstep(jnp.asarray(toks[:, c]), cache)
+            return out
+
+        def run_chunk():
+            out, _ = jchunk(jnp.asarray(toks), cache0)
+            return out
+
+        def cell(fn):
+            compile_s, t = _bench(fn, reps, trials=2)
+            return {"compile_s": round(compile_s, 4),
+                    "per_token_us": round(t / MCHUNK * 1e6, 2)}
+
+        cells[str(ctx)] = {"step_gather": cell(run_steps),
+                           "chunk_kernel": cell(run_chunk)}
+    return cells
 
 
 def run(backend: str = "gather"):
     rows = flops_rows()
-    t_dense, t_sla = measured_decode()
-    rows.append(("fig_decode.step_us.dense", t_dense, "S=256"))
-    rows.append(("fig_decode.step_us.sla", t_sla,
-                 f"x{t_dense / t_sla:.2f} vs dense"))
+    cells = measure_context_sweep()
+    model_cells = measure_model_decode()
+    payload = {
+        "config": {"contexts": list(CTXS), "budget_blocks": BUDGET,
+                   "chunk": CHUNK, "block_kv": 16, "heads": 4,
+                   "kv_heads": 2, "head_dim": 32,
+                   "kernel_is_pallas": jax.default_backend() == "tpu",
+                   "backend_note": "off-TPU the sla_kernel cells time "
+                                   "the kernel's compiled XLA twin "
+                                   "(identical math); interpret-mode "
+                                   "Pallas is correctness-only",
+                   "model_contexts": list(MODEL_CTXS),
+                   "model_chunk": MCHUNK},
+        "cells": cells,
+        "model_cells": model_cells,
+    }
+    mk = model_cells[str(max(MODEL_CTXS))]
+    payload["acceptance"] = {
+        # attention-level: SLA decode vs dense masked decode at >= 32k
+        "sla_beats_dense_32k": all(
+            cells[str(n)]["dense"]["per_token_us"]
+            > cells[str(n)]["sla_gather"]["per_token_us"]
+            for n in CTXS if n >= 32768),
+        # kernel decode path (single-launch chunked decode) vs the
+        # per-token gather backend at >= 32k, measured through the full
+        # transformer — where launch + plan-bookkeeping granularity is
+        # the real difference between the two backends
+        "kernel_beats_gather_32k": (
+            mk["chunk_kernel"]["per_token_us"]
+            < mk["step_gather"]["per_token_us"]),
+    }
+    BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    for smax, c in cells.items():
+        dense, gat = c["dense"], c["sla_gather"]
+        kbest = min(c["sla_kernel"]["per_token_us"],
+                    c["sla_kernel_chunk"]["per_token_us"])
+        rows.append((f"fig_decode.step_us.dense.n{smax}",
+                     dense["per_token_us"],
+                     f"compile_s={dense['compile_s']}"))
+        rows.append((f"fig_decode.step_us.sla_gather.n{smax}",
+                     gat["per_token_us"],
+                     f"x{dense['per_token_us'] / gat['per_token_us']:.2f}"
+                     f" vs dense"))
+        rows.append((f"fig_decode.step_us.sla_kernel.n{smax}", kbest,
+                     f"x{gat['per_token_us'] / kbest:.2f} vs gather "
+                     f"(best of 1-token/chunked)"))
+    for ctx, c in model_cells.items():
+        st, ch = c["step_gather"], c["chunk_kernel"]
+        rows.append((f"fig_decode.decode_us.step_gather.n{ctx}",
+                     st["per_token_us"],
+                     f"per-token decode_step, compile_s={st['compile_s']}"))
+        rows.append((f"fig_decode.decode_us.chunk_kernel.n{ctx}",
+                     ch["per_token_us"],
+                     f"x{st['per_token_us'] / ch['per_token_us']:.2f} "
+                     f"vs per-token step (single-launch decode_chunk)"))
+    rows.append(("fig_decode.json", 0.0, BENCH_PATH.name))
     return rows
 
 

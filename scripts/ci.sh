@@ -6,6 +6,7 @@
 #   scripts/ci.sh --fast          # fast tier only
 #   scripts/ci.sh --conformance   # cross-backend conformance matrix only
 #   scripts/ci.sh --decode        # decode-time SLA parity + drift suites
+#   scripts/ci.sh --decode-kernel # fused decode kernel + chunked decode
 #   scripts/ci.sh --routing       # learned-routing parity + gradient suite
 #   scripts/ci.sh --serve         # serving API v2: scheduler parity suite
 set -euo pipefail
@@ -26,6 +27,21 @@ if [[ "${1:-}" == "--decode" ]]; then
     "${PYTEST[@]}" -x -m "not slow" tests/test_decode_sla.py tests/test_drift.py
     echo "=== decode-SLA (slow: long parity sweeps) ==="
     "${PYTEST[@]}" -m slow tests/test_decode_sla.py
+    exit 0
+fi
+
+if [[ "${1:-}" == "--decode-kernel" ]]; then
+    # Fused Pallas decode kernel (DESIGN.md "Fused decode kernel"):
+    # decode-backend conformance cells (gather/kernel x f32/bf16 x
+    # scalar/vector pos), the kernel parity + custom_vjp gradient +
+    # chunked-decode bitwise-parity tests, and the compile-count
+    # regression guards for every rolled decode loop.
+    echo "=== decode kernel (conformance cells) ==="
+    "${PYTEST[@]}" -x tests/test_conformance.py -k decode_backend
+    echo "=== decode kernel (parity + grads + chunked decode) ==="
+    "${PYTEST[@]}" -x tests/test_decode_sla.py -k "kernel or chunk"
+    echo "=== decode kernel (compile-count guards) ==="
+    "${PYTEST[@]}" -x tests/test_compile_count.py
     exit 0
 fi
 

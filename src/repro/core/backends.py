@@ -19,6 +19,7 @@ backends register with `@register_backend("name")`.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -195,11 +196,13 @@ def execute(
 # non-critical block is marginal; SLAConfig.decode_plan_cfg).
 _DECODE_BACKENDS: Dict[str, BackendFn] = {}
 
-# The fused Pallas kernel is a prefill/training kernel; single-token
-# decode is gather-shaped, so "kernel" serves decode through the gather
-# path (same numerics, no Pallas launch per token).
-_DECODE_ALIASES = {"kernel": "gather", "pallas": "gather", "xla": "gather",
-                   "dense": "reference"}
+# "kernel" is the real fused Pallas decode kernel (kernels/sla_decode);
+# "xla" names the un-fused gather/einsum chain explicitly.
+_DECODE_ALIASES = {"pallas": "kernel", "xla": "gather", "dense": "reference"}
+
+# one-line warning (once per process) when the Pallas decode kernel has
+# no TPU and falls back to interpret mode
+_warned_interpret_decode = False
 
 
 def register_decode_backend(name: str) -> Callable[[BackendFn], BackendFn]:
@@ -280,6 +283,27 @@ def _decode_gather_backend(state, qg, qpg, pos, cfg, scale):
     return o_s, o_l
 
 
+@register_decode_backend("kernel")
+def _decode_kernel_backend(state, qg, qpg, pos, cfg, scale):
+    """Fused Pallas decode kernel (kernels/sla_decode): one launch for
+    sparse softmax over the LUT pages + the subtractive marginal linear
+    branch. Interpret-mode fallback keeps CPU CI honest (identical
+    numerics, no Mosaic lowering)."""
+    from repro.kernels import sla_decode
+
+    interpret = jax.default_backend() != "tpu"
+    if interpret:
+        global _warned_interpret_decode
+        if not _warned_interpret_decode:
+            _warned_interpret_decode = True
+            warnings.warn("SLA decode kernel: no TPU backend — running "
+                          "Pallas in interpret mode", stacklevel=2)
+    o_s, o_l = sla_decode.decode_attention(
+        state, qg[..., None, :], qpg[..., None, :], pos, cfg, scale,
+        interpret=interpret)
+    return o_s[..., 0, :], o_l[..., 0, :]
+
+
 @register_decode_backend("reference")
 def _decode_reference_backend(state, qg, qpg, pos, cfg, scale):
     """Dense O(S) oracle: expands the live row's block structure to a
@@ -348,3 +372,69 @@ def decode_execute(
     proj = params["proj"].astype(jnp.float32)
     o = o_s + jnp.einsum("bhd,hde->bhe", o_l.reshape(b, h, d), proj)
     return o.astype(in_dtype)
+
+
+def decode_execute_chunk(
+    state: Dict[str, jax.Array],
+    params: Optional[Params],
+    q: jax.Array, pos, cfg: SLAConfig,
+    scale: Optional[float] = None,
+    backend: str = "gather",
+) -> jax.Array:
+    """C-token chunked SLA attention against the decode cache state.
+
+    q: (B, H, C, D) chunk queries; `pos` the (traced) base position —
+    token c sits at pos + c. Unlike the single-token path, `state`
+    carries *per-token* plan rows and linear-state snapshots: lut
+    (B, H, C, K), cnt/marg (B, H, C), htot (B, Hkv, C, D, D), ztot
+    (B, Hkv, C, D) — the at-time-c values each token attends with
+    (transformer.decode_chunk builds them in one scan). One kernel
+    launch (backend "kernel") or one gather chain (backend "gather" /
+    "reference" — both run the same chunk-aware math, fully
+    differentiable) covers the whole chunk. Returns (B, H, C, D) in
+    q.dtype.
+    """
+    backend = resolve_decode(backend)
+    cfg.validate()
+    in_dtype = q.dtype
+    b, h, cdim, d = q.shape
+    hkv = state["k"].shape[1]
+    scale = (d**-0.5) if scale is None else scale
+    qg = _group_heads(q.astype(jnp.float32), hkv)
+    qpg = _group_heads(phi(q, cfg.phi), hkv)
+    if backend == "kernel":
+        o_s, o_l = _decode_kernel_backend_chunk(state, qg, qpg, pos, cfg,
+                                                scale)
+    else:
+        from repro.kernels import sla_decode
+
+        o_s, o_l = sla_decode._decode_math(
+            qg, qpg, state["k"], state["v"], state["hblk"], state["zblk"],
+            state["hdiag"], state["zdiag"], state["htot"], state["ztot"],
+            _group_heads(state["lut"], hkv),
+            _group_heads(state["cnt"], hkv), _group_heads(state["marg"], hkv),
+            jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,)), cfg, scale)
+    o_s = o_s.reshape(b, h, cdim, d)
+    if cfg.mode == "sparse_only":
+        return o_s.astype(in_dtype)
+    if cfg.mode != "sla":
+        raise ValueError(
+            f"decode_execute_chunk supports modes 'sla'/'sparse_only', got "
+            f"{cfg.mode!r}")
+    proj = params["proj"].astype(jnp.float32)
+    o = o_s + jnp.einsum("bhcd,hde->bhce", o_l.reshape(b, h, cdim, d), proj)
+    return o.astype(in_dtype)
+
+
+def _decode_kernel_backend_chunk(state, qg, qpg, pos, cfg, scale):
+    from repro.kernels import sla_decode
+
+    interpret = jax.default_backend() != "tpu"
+    if interpret:
+        global _warned_interpret_decode
+        if not _warned_interpret_decode:
+            _warned_interpret_decode = True
+            warnings.warn("SLA decode kernel: no TPU backend — running "
+                          "Pallas in interpret mode", stacklevel=2)
+    return sla_decode.decode_attention(state, qg, qpg, pos, cfg, scale,
+                                       interpret=interpret)

@@ -264,16 +264,34 @@ def sample(params, cfg: ArchConfig, noise, *, num_steps: int = 8,
         k_refresh = (cfg.sla.plan_refresh_interval
                      if refresh_interval is None else refresh_interval)
         k_refresh = max(1, int(k_refresh))
-        plans = None
-        for step in range(num_steps):
-            if step % k_refresh == 0:
-                vel, plans = forward(params, cfg, x, tvec(step), cond,
-                                     compute_dtype, backend,
-                                     return_plans=True)
-            else:
-                vel = forward(params, cfg, x, tvec(step), cond,
-                              compute_dtype, backend, plans=plans)
-            x = euler(x, vel)
+        # rolled (ISSUE 6): step 0 plans outside the loop, then one
+        # scanned body whose lax.cond either re-plans or reuses the
+        # carried plans — the compiled graph is horizon-independent and
+        # the planning pipeline traces exactly twice (once per branch)
+        # no matter how many steps or refreshes run.
+        vel, plans = forward(params, cfg, x, tvec(0), cond, compute_dtype,
+                             backend, return_plans=True)
+        x = euler(x, vel)
+        if num_steps > 1:
+            def fixed_body(carry, step):
+                x, plans = carry
+
+                def replan(_):
+                    return forward(params, cfg, x, tvec(step), cond,
+                                   compute_dtype, backend,
+                                   return_plans=True)
+
+                def reuse(_):
+                    return (forward(params, cfg, x, tvec(step), cond,
+                                    compute_dtype, backend, plans=plans),
+                            plans)
+
+                vel, new_plans = jax.lax.cond(step % k_refresh == 0,
+                                              replan, reuse, None)
+                return (euler(x, vel), new_plans), None
+
+            (x, plans), _ = jax.lax.scan(fixed_body, (x, plans),
+                                         jnp.arange(1, num_steps))
         if return_trace:
             return x, static_trace([s % k_refresh == 0
                                     for s in range(1, num_steps)])
@@ -285,10 +303,13 @@ def sample(params, cfg: ArchConfig, noise, *, num_steps: int = 8,
     plan_needed = (cfg.attention_kind == "sla"
                    and cfg.sla.mode not in ("full", "linear_only"))
     if not plan_needed:
-        # plan-free attention: nothing to refresh — plain Euler steps
-        for step in range(num_steps):
-            x = euler(x, forward(params, cfg, x, tvec(step), cond,
-                                 compute_dtype, backend))
+        # plan-free attention: nothing to refresh — one scanned Euler
+        # body (rolled, ISSUE 6: horizon-independent compiled graph)
+        def pf_body(x, step):
+            return euler(x, forward(params, cfg, x, tvec(step), cond,
+                                    compute_dtype, backend)), None
+
+        x, _ = jax.lax.scan(pf_body, x, jnp.arange(num_steps))
         if return_trace:
             return x, static_trace([False] * (num_steps - 1))
         return x

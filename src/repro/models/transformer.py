@@ -762,6 +762,305 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
     return logits, {"k": kc, "v": vc, "pos": pos + 1, "sla": new_st}
 
 
+def _dense_decode_chunk_attn(q, kc, vc, pos_c, kind, cfg: ArchConfig):
+    """Chunked `_dense_decode_attn`: q (B, H, C, Dh) against the full
+    static cache, token c masked to columns <= pos_c[c]. Returns
+    (B, C, H * Dh) in q.dtype."""
+    b, h, cdim = q.shape[0], q.shape[1], q.shape[2]
+    hkv, smax = kc.shape[1], kc.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, cdim, cfg.head_dim)
+    s = jnp.einsum("bkgcd,bksd->bkgcs", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * (cfg.head_dim**-0.5)
+    idx = jnp.arange(smax)
+    ok = idx[None, :] <= pos_c[:, None]                  # (C, S)
+
+    def swa_mask(s):
+        w = cfg.local_window or cfg.sliding_window
+        return jnp.where(idx[None, :] > pos_c[:, None] - w, s, NEG_INF)
+
+    s = jnp.where(ok, s, NEG_INF)
+    s = jax.lax.cond(kind == KIND_SWA, swa_mask, lambda s: s, s)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgcs,bksd->bkgcd", p_attn, vc.astype(jnp.float32))
+    return (o.astype(q.dtype).transpose(0, 3, 1, 2, 4)
+            .reshape(b, cdim, h * cfg.head_dim))
+
+
+def decode_chunk(params, cfg: ArchConfig, tokens, cache,
+                 compute_dtype=jnp.bfloat16, backend: str = "gather",
+                 drift_threshold=None, chunk: Optional[int] = None):
+    """Score a chunk of C given tokens against the cache in one pass
+    (verify-style multi-token decode, for speculative drafts).
+
+    tokens: (B, C) int32. Returns (logits (B, C, V) f32, new_cache):
+    logits[:, c] are the next-token logits after consuming
+    tokens[:, :c + 1] — the values C successive `decode_step` calls
+    produce — and new_cache is the state after all C tokens. One
+    attention launch per layer covers the whole chunk (per-token plan
+    rows ride the kernel's scalar-prefetch LUT; see
+    `backends.decode_execute_chunk`), and the O(1) H/Z running-state
+    updates plus `plan_extend` boundary work fold into a single scanned
+    update per layer instead of C jit steps — launch and
+    boundary-scoring overhead amortize C-fold.
+
+    `chunk=` splits a longer token run into sub-chunks of that size
+    (a python loop over at most two compiled shapes). Requires a scalar
+    `cache['pos']` (aligned static batch); the continuous-batching
+    scheduler decodes per token.
+    """
+    if jnp.ndim(cache["pos"]) > 0:
+        raise ValueError(
+            "decode_chunk requires a scalar cache['pos'] (aligned "
+            "static-batch decode); per-slot continuous batching decodes "
+            "one token at a time via decode_step")
+    cdim = tokens.shape[1]
+    if chunk is not None and cdim > chunk:
+        outs = []
+        for lo in range(0, cdim, chunk):
+            logits, cache = decode_chunk(
+                params, cfg, tokens[:, lo:lo + chunk], cache,
+                compute_dtype, backend, drift_threshold)
+            outs.append(logits)
+        return jnp.concatenate(outs, axis=1), cache
+    if "sla" in cache:
+        return _decode_chunk_sla(params, cfg, tokens, cache, compute_dtype,
+                                 backend, drift_threshold)
+    emb = params["embed"]
+    x = jnp.take(emb, tokens, axis=0).astype(compute_dtype)
+    b = x.shape[0]
+    pos = cache["pos"]
+    pos_c = pos + jnp.arange(cdim, dtype=jnp.int32)
+    positions = jnp.broadcast_to(pos_c, (b, cdim))
+    kinds = layer_kinds(cfg)
+
+    def body(x, layer):
+        p, kind, kc, vc = layer
+        xn = rms_norm(x, p["ln1"])
+        q, k_new, v_new = _qkv(p, xn, cfg, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, k_new.astype(kc.dtype), pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, v_new.astype(vc.dtype), pos, axis=2)
+        o = _dense_decode_chunk_attn(q, kc, vc, pos_c, kind, cfg)
+        x = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+        f, _ = _ffn(p, rms_norm(x, p["ln2"]), cfg)
+        return x + f, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(
+        body, x, (params["layers"], kinds, cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"])
+    logits = logits_from_hidden(params, x)
+    return logits, {"k": kc, "v": vc, "pos": pos + cdim}
+
+
+def _decode_chunk_sla(params, cfg: ArchConfig, tokens, cache, compute_dtype,
+                      backend: str, drift_threshold=None):
+    """Chunked decode-time SLA (ISSUE 6 tentpole, multi-token decode).
+
+    Per layer: one inner `lax.scan` over the C tokens replays
+    `_decode_step_sla`'s boundary/state phases 1-3 op-for-op (so the
+    final cache state is bitwise the per-token state), emitting each
+    token's live plan row (lut/cnt/marg) and its at-time-c H/Z totals;
+    then ONE chunked attention call covers all C tokens.
+
+    Snapshot protocol (why one end-of-chunk hblk suffices): token c's
+    marginal set contains only completed blocks j < row_c, and no later
+    chunk token writes those (tokens only write their own row, which is
+    >= row_c) — so end-of-chunk hblk/zblk are already the at-time-c
+    values for every marginal block. The one exception is the forced
+    critical diagonal block row_c, still accumulating inside the chunk;
+    the scan emits its at-time partial per token (state["hdiag"] /
+    ["zdiag"]) and the kernel substitutes it for the streamed block at
+    the LUT's diagonal entry — every term in H_marg = htot_c -
+    sum_lut h_c[j] is then the per-token value in the per-token order,
+    so chunked logits match the per-token ones bitwise. The sparse
+    branch needs no protocol at all: the chunk's KV is written before
+    attention and token c masks columns > pos + c.
+    """
+    from repro.core import backends as backend_lib
+    from repro.core.phi import phi
+
+    backend_lib.resolve_decode(backend)
+    emb = params["embed"]
+    x = jnp.take(emb, tokens, axis=0).astype(compute_dtype)
+    b, cdim = tokens.shape
+    pos = cache["pos"]
+    st = cache["sla"]
+    sla = cfg.sla
+    bq = sla.block_q
+    smax = cache["k"].shape[-2]
+    tn = smax // sla.block_kv
+    dcfg = sla.decode_plan_cfg(tn)
+    kinds = layer_kinds(cfg)
+    used = sorted(set(layer_kinds_list(cfg)))
+    if drift_threshold is None:
+        thresholds = jnp.asarray(sla.drift_thresholds(cfg.num_layers),
+                                 jnp.float32)
+    else:
+        thresholds = jnp.broadcast_to(
+            jnp.asarray(drift_threshold, jnp.float32), (cfg.num_layers,))
+
+    offs = jnp.arange(cdim, dtype=jnp.int32)
+    pos_c = pos + offs                       # (C,) per-token positions
+    row_c = pos_c // bq
+    boundary_c = (pos_c % bq) == 0
+    positions = jnp.broadcast_to(pos_c, (b, cdim))
+    blk = jnp.arange(tn)
+    blk_cnt_c = jnp.clip(jnp.minimum(
+        (pos_c[:, None] + 1) - blk * sla.block_kv, sla.block_kv),
+        1, sla.block_kv)                     # (C, Tn)
+
+    # rows bookkeeping is layer-independent: replay the append decisions
+    def rows_scan(rows, cc):
+        app = jnp.logical_and(boundary_c[cc], rows < row_c[cc])
+        return rows + app.astype(jnp.int32), app
+
+    rows_after, append_c = jax.lax.scan(rows_scan, st["rows"], offs)
+
+    def body(x, layer):
+        (p, kind, thr, kc, vc, hb, zb, ht, zt, kp_sum, qp_sum, plan,
+         llut, lcnt, lmarg, ret_prev) = layer
+        xn = rms_norm(x, p["ln1"])
+        q, k_new, v_new = _qkv(p, xn, cfg, positions)   # q (B, H, C, D)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, k_new.astype(kc.dtype), pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, v_new.astype(vc.dtype), pos, axis=2)
+        h, hkv = q.shape[1], k_new.shape[1]
+        g = h // hkv
+        qf = q.astype(jnp.float32)                      # (B, H, C, D)
+        kf = k_new.astype(jnp.float32)                  # (B, Hkv, C, D)
+        vf = v_new.astype(jnp.float32)
+        phik = phi(kf, sla.phi)
+        routing = p.get("routing") if dcfg.routing_mode == "learned" \
+            else None
+        pc_zeros = jnp.zeros((b, h, tn), jnp.float32)
+
+        def tok(carry, cc):
+            (hb, zb, ht, zt, kp_sum, qp_sum, plan, llut, lcnt, lmarg,
+             ret) = carry
+            rowc, bnd = row_c[cc], boundary_c[cc]
+            app = append_c[cc]
+            qf_c, kf_c, vf_c = qf[:, :, cc], kf[:, :, cc], vf[:, :, cc]
+            phik_c = phik[:, :, cc]
+            # ---- 1. finalize the just-completed row (PRE-update kpool)
+            kpm = jnp.repeat(kp_sum / sla.block_kv, g, axis=1)
+            pc_prev = jax.lax.cond(
+                bnd,
+                lambda _: masks_lib.score_row(routing, qp_sum / bq, kpm,
+                                              rowc - 1, dcfg),
+                lambda _: pc_zeros, None)
+            mc_prev = masks_lib.classify_row(pc_prev, rowc - 1, dcfg)
+            ext = plan_lib.plan_extend(plan, mc_prev, rowc - 1)
+            plan = jax.tree_util.tree_map(
+                lambda a, o: jnp.where(app, a, o), ext, plan)
+            # ---- 2. O(1) running-state update ----
+            hupd = jnp.einsum("bkd,bke->bkde", phik_c, vf_c)
+            hb = _blk_update(hb, hupd, rowc)
+            zb = _blk_update(zb, phik_c, rowc)
+            ht = ht + hupd
+            zt = zt + phik_c
+            kp_sum = _blk_update(kp_sum, kf_c, rowc)
+            hdiag = jax.lax.dynamic_slice_in_dim(hb, rowc, 1,
+                                                 axis=2)[:, :, 0]
+            zdiag = jax.lax.dynamic_slice_in_dim(zb, rowc, 1,
+                                                 axis=2)[:, :, 0]
+            # ---- 3. live-row structure (boundary only) ----
+            cnt_div = blk_cnt_c[cc][:, None]
+            kpm_live = jnp.repeat(kp_sum / cnt_div, g, axis=1)
+            pc_live = jax.lax.cond(
+                bnd,
+                lambda _: masks_lib.score_row(routing, qf_c, kpm_live,
+                                              rowc, dcfg),
+                lambda _: pc_zeros, None)
+            mc_fresh = masks_lib.classify_row(pc_live, rowc, dcfg)
+            mc_inh = jax.lax.dynamic_slice_in_dim(
+                plan.mc, rowc - 1, 1, axis=2)[..., 0, :]
+            mc_inh = jnp.where(blk == rowc, jnp.int8(1), mc_inh)
+            stale = jnp.sum(pc_live * (mc_inh == 1), axis=-1)
+            fresh = jnp.sum(pc_live * (mc_fresh == 1), axis=-1)
+            r = jnp.clip(stale / jnp.maximum(fresh, plan_lib.EPS),
+                         0.0, 1.0)
+            retention = jnp.min(r)
+            replan = jnp.logical_and((1.0 - retention) >= thr, thr < 1.0)
+            mc_live = jnp.where(replan, mc_fresh, mc_inh)
+            llut_n, lcnt_n = plan_lib.build_lut(mc_live[..., None, :],
+                                                plan.k_sel)
+            llut = jnp.where(bnd, llut_n[..., 0, :], llut)
+            lcnt = jnp.where(bnd, lcnt_n[..., 0], lcnt)
+            lmarg = jnp.where(bnd,
+                              jnp.sum((mc_live == 0).astype(jnp.int32), -1),
+                              lmarg)
+            qp_sum = jnp.where(bnd, qf_c, qp_sum + qf_c)
+            ret = jnp.where(bnd, retention, ret)
+            carry = (hb, zb, ht, zt, kp_sum, qp_sum, plan, llut, lcnt,
+                     lmarg, ret)
+            ys = (llut, lcnt, lmarg, ht, zt, hdiag, zdiag,
+                  jnp.logical_and(bnd, replan).astype(jnp.int32),
+                  jnp.logical_and(bnd, ~replan).astype(jnp.int32))
+            return carry, ys
+
+        carry0 = (hb, zb, ht, zt, kp_sum, qp_sum, plan, llut, lcnt, lmarg,
+                  ret_prev)
+        carryn, tys = jax.lax.scan(tok, carry0, offs)
+        (hb, zb, ht, zt, kp_sum, qp_sum, plan, llut, lcnt, lmarg,
+         ret) = carryn
+        (llut_t, lcnt_t, lmarg_t, ht_t, zt_t, hdiag_t, zdiag_t, reps_t,
+         reuse_t) = tys
+        # per-token plan rows / totals: scan axis (C) -> chunk axis
+        lut_ct = jnp.moveaxis(llut_t, 0, 2)             # (B, H, C, K)
+        cnt_ct = jnp.moveaxis(lcnt_t, 0, 2)             # (B, H, C)
+        marg_ct = jnp.moveaxis(lmarg_t, 0, 2)
+        ht_ct = jnp.moveaxis(ht_t, 0, 2)                # (B, Hkv, C, D, D)
+        zt_ct = jnp.moveaxis(zt_t, 0, 2)
+
+        # ---- 4. attention: one chunked launch over C tokens ----
+        state = {"k": kc, "v": vc, "hblk": hb, "zblk": zb,
+                 "hdiag": jnp.moveaxis(hdiag_t, 0, 2),
+                 "zdiag": jnp.moveaxis(zdiag_t, 0, 2),
+                 "htot": ht_ct, "ztot": zt_ct,
+                 "lut": lut_ct, "cnt": cnt_ct, "marg": marg_ct}
+
+        def do_sla(_):
+            return backend_lib.decode_execute_chunk(
+                state, {"proj": p["sla_proj"]}, q, pos, dcfg,
+                backend=backend).transpose(0, 2, 1, 3) \
+                .reshape(b, cdim, h * cfg.head_dim).astype(x.dtype)
+
+        def do_dense(_):
+            return _dense_decode_chunk_attn(q, kc, vc, pos_c, kind, cfg)
+
+        if used == [KIND_SLA]:
+            o = do_sla(None)
+        else:
+            o = jax.lax.cond(kind == KIND_SLA, do_sla, do_dense, None)
+        x2 = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+        f, _ = _ffn(p, rms_norm(x2, p["ln2"]), cfg)
+        ys = (kc, vc, hb, zb, ht, zt, kp_sum, qp_sum, plan, llut, lcnt,
+              lmarg, jnp.sum(append_c.astype(jnp.int32)),
+              jnp.sum(reps_t), jnp.sum(reuse_t), ret)
+        return x2 + f, ys
+
+    xs = (params["layers"], kinds, thresholds, cache["k"], cache["v"],
+          st["hblk"], st["zblk"], st["htot"], st["ztot"], st["kpool"],
+          st["qpool"], st["plan"], st["live_lut"], st["live_cnt"],
+          st["live_marg"], st["retention"])
+    x, ys = jax.lax.scan(body, x, xs)
+    (kc, vc, hb, zb, ht, zt, kp_sum, qp_sum, plan, llut, lcnt, lmarg,
+     exts, reps, reuses, rets) = ys
+    x = rms_norm(x, params["ln_f"])
+    logits = logits_from_hidden(params, x)
+    new_st = {
+        "hblk": hb, "zblk": zb, "htot": ht, "ztot": zt, "kpool": kp_sum,
+        "qpool": qp_sum, "plan": plan, "rows": rows_after,
+        "live_lut": llut, "live_cnt": lcnt, "live_marg": lmarg,
+        "extends": st["extends"] + exts, "replans": st["replans"] + reps,
+        "reuses": st["reuses"] + reuses, "retention": rets,
+    }
+    return logits, {"k": kc, "v": vc, "pos": pos + cdim, "sla": new_st}
+
+
 def make_cache(cfg: ArchConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16,
                decode_sla: Optional[bool] = None,

@@ -333,19 +333,35 @@ class Scheduler:
                                **dkw)
 
         if decode_sla:
-            @jax.jit
-            def _decode(params, token, cache):
+            def _one(params, token, cache):
                 return mdl.decode_step(params, cfg, token, cache,
                                        compute_dtype=compute_dtype,
                                        backend=backend_,
                                        drift_threshold=thr)
         else:
-            @jax.jit
-            def _decode(params, token, cache):
+            def _one(params, token, cache):
                 return mdl.decode_step(params, cfg, token, cache,
                                        compute_dtype=compute_dtype)
 
+        _decode = jax.jit(_one)
         max_len_ = self.max_len
+
+        # rolled multi-step greedy decode (ISSUE 6): nsteps is a traced
+        # scalar, so fori_loop lowers to while_loop and ONE trace covers
+        # every segment length drain() ever requests
+        @jax.jit
+        def _decode_multi(params, token, cache, nsteps):
+            buf = jnp.zeros((max_len_, token.shape[0]), jnp.int32)
+
+            def body(i, carry):
+                token, cache, buf = carry
+                logits, cache = _one(params, token, cache)
+                token = jnp.argmax(logits, -1).astype(jnp.int32)
+                buf = jax.lax.dynamic_update_slice_in_dim(
+                    buf, token[None], i, axis=0)
+                return token, cache, buf
+
+            return jax.lax.fori_loop(0, nsteps, body, (token, cache, buf))
 
         @jax.jit
         def _admit(live, single, slot):
@@ -360,6 +376,7 @@ class Scheduler:
         self._prefill_plan = _prefill_plan
         self._prefill_reuse = _prefill_reuse
         self._decode = _decode
+        self._decode_multi = _decode_multi
         self._admit_jit = _admit
         self._live = mdl.make_cache(cfg, num_slots, self.max_len,
                                     dtype=compute_dtype,
@@ -439,11 +456,61 @@ class Scheduler:
         return events
 
     def drain(self) -> List[ServedRequest]:
-        """Run `step()` until every submitted request has finished;
-        returns all requests in submission order."""
+        """Run the scheduler until every submitted request has finished;
+        returns all requests in submission order.
+
+        Greedy slots decode in ROLLED segments: one `_decode_multi`
+        dispatch covers min-remaining-budget steps across the active
+        slots, so host round-trips scale with the number of admission /
+        finish boundaries, not the token horizon. Any active request
+        that samples (temperature > 0) or watches stop tokens needs
+        per-token host control, so those ticks fall back to `step()`."""
         while self.has_work:
-            self.step()
+            self._drain_tick()
         return list(self._requests)
+
+    def _drain_tick(self) -> List[StreamEvent]:
+        """One drain iteration: admit, then decode one rolled segment
+        (or one `step()` when per-token host control is required)."""
+        events: List[StreamEvent] = []
+        for slot in range(self.num_slots):
+            if self._slots[slot] is None and self._queue:
+                self._admit_next(slot, events)
+        active = [j for j in range(self.num_slots)
+                  if self._slots[j] is not None]
+        if not active:
+            return events
+        if any(self._slots[j].sampling.temperature > 0.0
+               or self._slots[j].sampling.stop_tokens for j in active):
+            return events + self.step()
+        # every active request is greedy with a pure token budget:
+        # nothing can finish before the smallest remaining budget, so
+        # run exactly that many steps in one traced-length dispatch
+        nsteps = min(self._slots[j].sampling.max_new_tokens
+                     - len(self._slots[j].tokens_out) for j in active)
+        t0 = time.time()
+        token, self._live, buf = self._decode_multi(
+            self.params, jnp.asarray(self._tokens), self._live,
+            jnp.int32(nsteps))
+        toks = np.asarray(buf)[:nsteps]  # host sync
+        now = time.time()
+        self.stats.decode_s += now - t0
+        self.stats.decode_tokens += nsteps * len(active)
+        self.stats.slot_steps_active += nsteps * len(active)
+        self.stats.slot_steps_total += nsteps * self.num_slots
+        for j in active:
+            r = self._slots[j]
+            for i in range(nsteps):
+                tok = int(toks[i][j])
+                self._tokens[j] = tok
+                r.tokens_out.append(tok)
+                r.metrics.decode_tokens += 1
+                events.append(StreamEvent(rid=r.rid, kind="token", t=now,
+                                          token=tok,
+                                          index=len(r.tokens_out) - 1))
+            if self._is_done(r):
+                self._finish(r, j, now, events)
+        return events
 
     def stream(self) -> Iterator[StreamEvent]:
         """Yield StreamEvents as they are produced, until drained."""

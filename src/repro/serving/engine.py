@@ -139,20 +139,40 @@ class ServingEngine:
                                return_plans=True, **dkw)
 
         if self.decode_sla:
-            @jax.jit
-            def _decode(params, token, cache):
+            def _one(params, token, cache):
                 return mdl.decode_step(params, cfg, token, cache,
                                        backend=backend_,
                                        drift_threshold=thr)
         else:
-            @jax.jit
-            def _decode(params, token, cache):
+            def _one(params, token, cache):
                 return mdl.decode_step(params, cfg, token, cache)
+
+        _decode = jax.jit(_one)
+        max_len_cap = self.max_len
+
+        # rolled decode (ISSUE 6): a traced-length fori_loop (lowered
+        # to while_loop) greedy-decodes n steps in one dispatch — the
+        # compiled graph is horizon-independent, so every segment
+        # length reuses the single compilation
+        @jax.jit
+        def _decode_loop(params, token, cache, nsteps):
+            buf = jnp.zeros((max_len_cap, token.shape[0]), jnp.int32)
+
+            def body(i, carry):
+                token, cache, buf = carry
+                logits, cache = _one(params, token, cache)
+                token = jnp.argmax(logits, -1).astype(jnp.int32)
+                buf = jax.lax.dynamic_update_slice_in_dim(
+                    buf, token[None], i, axis=0)
+                return token, cache, buf
+
+            return jax.lax.fori_loop(0, nsteps, body, (token, cache, buf))
 
         self._prefill = _prefill
         self._prefill_plan = _prefill_plan
         self._prefill_reuse = _prefill_reuse
         self._decode = _decode
+        self._decode_loop = _decode_loop
 
     def _grow_cache(self, cache):
         """Pad the prefill cache out to max_len decode slots."""
@@ -279,30 +299,40 @@ class ServingEngine:
         outs = [[] for _ in group]
         alive = np.array([r.max_new_tokens for r in group])
         t0 = time.time()
+        stream = [np.asarray(token)]  # token produced at step i
+        now = time.time()  # np.asarray synced the first token
+        for j, r in enumerate(group):
+            r.metrics.first_token_t = now
+        # rolled decode (ISSUE 6): one traced-length loop dispatch per
+        # SEGMENT between distinct request finish steps — finish_t
+        # stays per-request, decode_step traces exactly once, and the
+        # host loop runs len(distinct budgets) times instead of budget
+        done = 0
+        for fin in sorted(set(int(a) for a in alive)):
+            n = fin - 1 - done
+            if n > 0:
+                token, cache, buf = self._decode_loop(
+                    self.params, token, cache, jnp.int32(n))
+                stream.extend(np.asarray(buf)[:n])  # syncs the segment
+                done = fin - 1
+            now = time.time()
+            for j, r in enumerate(group):
+                if alive[j] == fin:
+                    r.metrics.finish_t = now
         for step in range(budget):
             for j in range(b):
                 if step < alive[j]:
-                    outs[j].append(int(token[j]))
-            now = time.time()  # int(token[j]) synced this step's tokens
-            for j, r in enumerate(group):
-                if step == 0:
-                    r.metrics.first_token_t = now
-                if step == alive[j] - 1:
-                    r.metrics.finish_t = now
-            if (step + 1 >= alive).all():
-                break
-            logits, cache = self._decode(self.params, token, cache)
-            token = jnp.argmax(logits, -1).astype(jnp.int32)
-            # this decode produces the step+1 token: useful for exactly
-            # the requests that will consume it — the same accounting
-            # as the scheduler, where a slot decodes budget-1 useful
-            # steps per request
-            active = int((step + 1 < alive).sum())
+                    outs[j].append(int(stream[step][j]))
+        # per-step accounting, replayed from the static schedule: each
+        # decode produces the step token — useful for exactly the
+        # requests that consume it (the same accounting as the
+        # scheduler, where a slot decodes budget-1 useful steps per
+        # request); finished requests, surplus pad rows, and lanes a
+        # partial group never filled all burn slot-steps over the
+        # CONFIGURED pool (batch_size lanes) until the group drains
+        for step in range(1, budget):
+            active = int((step < alive).sum())
             self.stats.decode_tokens += active
-            # lockstep occupancy over the CONFIGURED pool (batch_size
-            # lanes, like the scheduler's num_slots): finished requests,
-            # surplus pad rows, and lanes a partial group never filled
-            # all burn slot-steps until the group drains
             self.stats.slot_steps_active += active
             self.stats.slot_steps_total += self.batch_size
         jax.block_until_ready(token)

@@ -1,0 +1,150 @@
+"""Compile-count regression guards (ISSUE 6 satellite).
+
+The rolled loops (dit.sample fixed mode, the static engine's segmented
+decode, the scheduler's drain) must keep their compiled graphs
+horizon-independent: the expensive inner functions trace a CONSTANT
+number of times no matter how many steps actually run. Each test
+monkeypatches the inner function with a trace-counting wrapper (the
+counter bumps at python call time, i.e. only while jax is tracing) and
+runs the same loop at two different horizons — the idiom
+test_drift.py established for adaptive DiT sampling.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig
+from repro.core import SLAConfig
+from repro.core import plan as plan_lib
+from repro.models import transformer as tfm
+from repro.serving.api import SamplingParams, Scheduler
+from repro.serving.engine import Request, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# dit.sample fixed-interval mode
+# ---------------------------------------------------------------------------
+def _dit_cfg():
+    return ArchConfig(
+        name="dit-test", family="dit", num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=2, head_dim=32, d_ff=128, vocab_size=0,
+        patch_dim=8, cross_attn=False, attention_kind="sla",
+        sla=SLAConfig(block_q=16, block_kv=16, kh_frac=0.25,
+                      kl_frac=0.25))
+
+
+def test_dit_fixed_mode_plans_trace_constant(monkeypatch):
+    """Rolled fixed-interval sampling traces the planning pipeline
+    exactly twice per sample() — the step-0 call plus the lax.cond
+    refresh branch — independent of num_steps. The old python loop
+    re-traced forward() at every step."""
+    from repro.models import dit
+
+    cfg = _dit_cfg()
+    params = dit.init(jax.random.PRNGKey(0), cfg)
+    calls = []
+    orig = plan_lib.plan_attention
+
+    def counted(q, k, c, scale=None, routing=None):
+        calls.append(q.shape)
+        return orig(q, k, c, scale)
+
+    monkeypatch.setattr(plan_lib, "plan_attention", counted)
+    noise = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 8))
+
+    for steps in (4, 12):
+        calls.clear()
+        out = dit.sample(params, cfg, noise, num_steps=steps,
+                         refresh_mode="fixed", refresh_interval=2)
+        jax.block_until_ready(out)
+        assert len(calls) == 2, (steps, len(calls))
+
+
+def test_dit_plan_free_mode_never_plans(monkeypatch):
+    from repro.models import dit
+
+    cfg = dataclasses.replace(_dit_cfg(), attention_kind="full")
+    params = dit.init(jax.random.PRNGKey(0), cfg)
+    calls = []
+    orig = plan_lib.plan_attention
+
+    def counted(q, k, c, scale=None, routing=None):
+        calls.append(q.shape)
+        return orig(q, k, c, scale)
+
+    monkeypatch.setattr(plan_lib, "plan_attention", counted)
+    noise = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 8))
+    out = dit.sample(params, cfg, noise, num_steps=6)
+    jax.block_until_ready(out)
+    assert calls == []
+
+
+# ---------------------------------------------------------------------------
+# serving decode loops
+# ---------------------------------------------------------------------------
+def _llm_cfg():
+    cfg = get_arch("qwen3-1.7b").smoke()
+    return dataclasses.replace(
+        cfg, sla=cfg.sla.replace(kh_frac=1.0, kl_frac=0.0))
+
+
+def _llm_params(cfg):
+    return tfm.init(jax.random.PRNGKey(0), cfg)
+
+
+def _counted_decode_step(calls):
+    orig = tfm.decode_step
+
+    def counted(*args, **kwargs):
+        calls.append(True)
+        return orig(*args, **kwargs)
+
+    return counted
+
+
+def test_engine_decode_traces_once_across_budgets(monkeypatch):
+    """The static engine's segmented `_decode_loop` (fori_loop over a
+    TRACED step count) compiles decode_step exactly once, then serves
+    every budget from the same executable."""
+    cfg = _llm_cfg()
+    params = _llm_params(cfg)
+    calls = []
+    monkeypatch.setattr(tfm, "decode_step", _counted_decode_step(calls))
+    eng = ServingEngine(cfg, params, batch_size=2, max_len=96)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, size=32).astype(np.int32)
+    for budget in (4, 12):
+        eng.run([Request(rid=budget, prompt=prompt,
+                         max_new_tokens=budget),
+                 Request(rid=budget + 1, prompt=prompt,
+                         max_new_tokens=budget)])
+    assert len(calls) == 1, len(calls)
+
+
+def test_scheduler_drain_traces_once_across_budgets(monkeypatch):
+    """Scheduler.drain()'s rolled `_decode_multi` compiles decode_step
+    exactly once across heterogeneous greedy budgets and separate
+    drains (per-token `step()` fallback never fires for pure greedy
+    token-budget requests)."""
+    cfg = _llm_cfg()
+    params = _llm_params(cfg)
+    calls = []
+    monkeypatch.setattr(tfm, "decode_step", _counted_decode_step(calls))
+    sched = Scheduler(cfg, params, num_slots=2, max_len=96)
+    rng = np.random.default_rng(1)
+    for budget in (4, 9):
+        sched.submit(rng.integers(0, cfg.vocab_size, size=32)
+                     .astype(np.int32),
+                     SamplingParams(max_new_tokens=budget))
+    reqs = sched.drain()
+    assert all(len(r.tokens_out) == r.sampling.max_new_tokens
+               for r in reqs)
+    first = len(calls)
+    assert first == 1, first
+    sched.submit(rng.integers(0, cfg.vocab_size, size=32)
+                 .astype(np.int32), SamplingParams(max_new_tokens=13))
+    sched.drain()
+    assert len(calls) == first  # same executable, third horizon
