@@ -271,6 +271,41 @@ def measure_model_decode(reps=2):
     return cells
 
 
+def recompute_acceptance(payload: dict) -> dict:
+    """Acceptance booleans, each computed from EXACTLY the cells its
+    name points at (tests/test_benchmarks.py holds this to account —
+    an earlier revision computed `kernel_beats_gather_32k` from the
+    model-level cells while naming the attention-level ones, reporting
+    true over cells that said 67.33us kernel vs 55.88us gather)."""
+    cells = payload["cells"]
+    model_cells = payload["model_cells"]
+    ctxs = payload["config"]["contexts"]
+    mk = model_cells[str(max(int(c)
+                             for c in payload["config"]
+                             ["model_contexts"]))]
+    return {
+        # attention-level: SLA decode vs dense masked decode at >= 32k
+        "sla_beats_dense_32k": all(
+            cells[str(n)]["dense"]["per_token_us"]
+            > cells[str(n)]["sla_gather"]["per_token_us"]
+            for n in ctxs if int(n) >= 32768),
+        # attention-level: the fused kernel's one-token cell vs the
+        # gather backend at 32k. Honest reading: off-TPU the kernel's
+        # XLA twin LOSES to gather at one-token granularity (its win
+        # is chunked launches — see model_chunk_beats_step_32k)
+        "kernel_beats_gather_32k": (
+            cells["32768"]["sla_kernel"]["per_token_us"]
+            < cells["32768"]["sla_gather"]["per_token_us"]),
+        # model-level: one single-launch decode_chunk vs MCHUNK
+        # per-token decode_step launches through the full transformer
+        # at the largest model context — where launch + plan-keeping
+        # granularity is the real difference between the two paths
+        "model_chunk_beats_step_32k": (
+            mk["chunk_kernel"]["per_token_us"]
+            < mk["step_gather"]["per_token_us"]),
+    }
+
+
 def run(backend: str = "gather"):
     rows = flops_rows()
     cells = measure_context_sweep()
@@ -289,21 +324,7 @@ def run(backend: str = "gather"):
         "cells": cells,
         "model_cells": model_cells,
     }
-    mk = model_cells[str(max(MODEL_CTXS))]
-    payload["acceptance"] = {
-        # attention-level: SLA decode vs dense masked decode at >= 32k
-        "sla_beats_dense_32k": all(
-            cells[str(n)]["dense"]["per_token_us"]
-            > cells[str(n)]["sla_gather"]["per_token_us"]
-            for n in CTXS if n >= 32768),
-        # kernel decode path (single-launch chunked decode) vs the
-        # per-token gather backend at >= 32k, measured through the full
-        # transformer — where launch + plan-bookkeeping granularity is
-        # the real difference between the two backends
-        "kernel_beats_gather_32k": (
-            mk["chunk_kernel"]["per_token_us"]
-            < mk["step_gather"]["per_token_us"]),
-    }
+    payload["acceptance"] = recompute_acceptance(payload)
     BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     for smax, c in cells.items():
         dense, gat = c["dense"], c["sla_gather"]

@@ -9,6 +9,7 @@
 #   scripts/ci.sh --decode-kernel # fused decode kernel + chunked decode
 #   scripts/ci.sh --routing       # learned-routing parity + gradient suite
 #   scripts/ci.sh --serve         # serving API v2: scheduler parity suite
+#   scripts/ci.sh --paged         # paged KV + CoW prefix sharing suite
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -67,6 +68,23 @@ if [[ "${1:-}" == "--serve" ]]; then
     "${PYTEST[@]}" -x -m "not slow" tests/test_serving.py
     echo "=== serving (slow: continuous engine wrapper) ==="
     "${PYTEST[@]}" -m slow tests/test_serving.py
+    exit 0
+fi
+
+if [[ "${1:-}" == "--paged" ]]; then
+    # Paged KV cache + copy-on-write prefix sharing (DESIGN.md "Paged
+    # KV & prefix caching"): PagePool refcount/eviction/exhaustion
+    # units, device-level paged-vs-monolithic bitwise parity across
+    # every decode backend, the scheduler parity matrix with full
+    # cache-leaf equality, CoW divergence after a shared prefix, the
+    # page-saving acceptance bound, and a paged serve-CLI smoke.
+    echo "=== paged KV (pool units + bitwise parity + CoW) ==="
+    "${PYTEST[@]}" -x tests/test_paged.py
+    echo "=== paged KV (benchmark-artifact honesty guards) ==="
+    "${PYTEST[@]}" -x tests/test_benchmarks.py
+    echo "=== paged KV (serve CLI smoke) ==="
+    python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --scheduler continuous --paged --requests 4 --max-new 8
     exit 0
 fi
 

@@ -239,19 +239,75 @@ def _gather_state(x: jax.Array, idx: jax.Array, k_sel: int) -> jax.Array:
     return out.reshape(b, hkv, -1, k_sel, *x.shape[3:])
 
 
+def _gather_pool(pool: jax.Array, idx: jax.Array, k_sel: int) -> jax.Array:
+    """Paged analogue of `_gather_state`: pool (P, Hkv, ...) gathered by
+    PHYSICAL page ids idx (B, Hkv, G*K) -> (B, Hkv, G, K, ...).
+
+    The ids come from routing the logical LUT through the page table
+    (`plut = pt[b, lut]`), so the gathered blocks are byte-identical to
+    what the monolithic layout's take_along_axis would read. Dead LUT
+    entries (beyond `cnt`) may land on arbitrary live pages — exactly
+    like the monolithic path they are masked to exact zeros downstream."""
+    out = jax.vmap(lambda pn, ixn: pn[ixn], in_axes=(1, 1), out_axes=1)(
+        pool, idx)
+    return out.reshape(out.shape[0], out.shape[1], -1, k_sel,
+                       *pool.shape[2:])
+
+
+def _physical_lut(pt: jax.Array, lut: jax.Array) -> jax.Array:
+    """Logical block ids -> physical page ids: pt (B, Tn), lut
+    (B, H, K) -> (B, H, K)."""
+    return jax.vmap(lambda row, l: row[l])(pt, lut)
+
+
+def _paged_dense_state(state, bkv: int):
+    """Materialize a monolithic decode-state slice from a paged one
+    (page-gathered KV + per-block partials) for backends that want the
+    contiguous layout (the dense reference oracle)."""
+    pt = state["pt"]
+
+    def blk(pool):  # (P, Hkv, ...) -> (B, Hkv, Tn, ...)
+        return jnp.moveaxis(jnp.take(pool, pt, axis=0), 2, 1)
+
+    out = {k: v for k, v in state.items() if k != "pt"}
+    kd, vd = blk(state["k"]), blk(state["v"])
+    out["k"] = kd.reshape(kd.shape[:2] + (-1, kd.shape[-1]))
+    out["v"] = vd.reshape(vd.shape[:2] + (-1, vd.shape[-1]))
+    out["hblk"] = blk(state["hblk"])
+    out["zblk"] = blk(state["zblk"])
+    return out
+
+
 @register_decode_backend("gather")
 def _decode_gather_backend(state, qg, qpg, pos, cfg, scale):
-    """O(K * bkv * d) sparse + O(K * d^2) subtractive linear per token."""
+    """O(K * bkv * d) sparse + O(K * d^2) subtractive linear per token.
+
+    Paged decode state (`"pt"` present; DESIGN.md "Paged KV & prefix
+    caching") gathers the SAME K critical blocks straight out of the
+    global page pools through the page table — physical ids replace
+    logical ones at the gather and nowhere else (masking math keeps the
+    logical LUT), so paged and monolithic outputs are bitwise equal."""
+    paged = "pt" in state
     kc, vc = state["k"], state["v"]
-    b, hkv, smax, d = kc.shape
     bkv = cfg.block_kv
-    tn = smax // bkv
+    if paged:
+        b, tn = state["pt"].shape
+        hkv, d = kc.shape[1], kc.shape[-1]
+    else:
+        b, hkv, smax, d = kc.shape
+        tn = smax // bkv
     lutg = _group_heads(state["lut"], hkv)          # (B, Hkv, G, K)
     cntg = _group_heads(state["cnt"], hkv)          # (B, Hkv, G)
     k_sel = lutg.shape[-1]
-    idx = lutg.reshape(b, hkv, -1)
-    kg = _gather_state(kc.reshape(b, hkv, tn, bkv, d), idx, k_sel)
-    vg = _gather_state(vc.reshape(b, hkv, tn, bkv, d), idx, k_sel)
+    if paged:
+        pidx = _group_heads(_physical_lut(state["pt"], state["lut"]),
+                            hkv).reshape(b, hkv, -1)
+        kg = _gather_pool(kc, pidx, k_sel)
+        vg = _gather_pool(vc, pidx, k_sel)
+    else:
+        idx = lutg.reshape(b, hkv, -1)
+        kg = _gather_state(kc.reshape(b, hkv, tn, bkv, d), idx, k_sel)
+        vg = _gather_state(vc.reshape(b, hkv, tn, bkv, d), idx, k_sel)
     s = jnp.einsum("bngd,bngkvd->bngkv", qg,
                    kg.astype(jnp.float32)) * scale
     cols = lutg[..., None] * bkv + jnp.arange(bkv)  # (B, Hkv, G, K, bkv)
@@ -267,8 +323,12 @@ def _decode_gather_backend(state, qg, qpg, pos, cfg, scale):
                      vg.reshape(b, hkv, -1, k_sel * bkv, d)
                      .astype(jnp.float32))
     # subtractive marginal aggregation from the running state
-    hg = _gather_state(state["hblk"], idx, k_sel)   # (B, Hkv, G, K, D, D)
-    zg = _gather_state(state["zblk"], idx, k_sel)   # (B, Hkv, G, K, D)
+    if paged:
+        hg = _gather_pool(state["hblk"], pidx, k_sel)
+        zg = _gather_pool(state["zblk"], pidx, k_sel)
+    else:
+        hg = _gather_state(state["hblk"], idx, k_sel)  # (B,Hkv,G,K,D,D)
+        zg = _gather_state(state["zblk"], idx, k_sel)  # (B,Hkv,G,K,D)
     hg = jnp.where(live[..., None, None], hg, 0.0)
     zg = jnp.where(live[..., None], zg, 0.0)
     h_m = state["htot"][:, :, None] - jnp.sum(hg, axis=3)
@@ -307,7 +367,11 @@ def _decode_kernel_backend(state, qg, qpg, pos, cfg, scale):
 @register_decode_backend("reference")
 def _decode_reference_backend(state, qg, qpg, pos, cfg, scale):
     """Dense O(S) oracle: expands the live row's block structure to a
-    token mask and aggregates marginal blocks directly (validation)."""
+    token mask and aggregates marginal blocks directly (validation).
+    Paged state is densified up front (the oracle wants the contiguous
+    layout anyway — it reads every position)."""
+    if "pt" in state:
+        state = _paged_dense_state(state, cfg.block_kv)
     kc, vc = state["k"], state["v"]
     b, hkv, smax, d = kc.shape
     bkv = cfg.block_kv

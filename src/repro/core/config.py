@@ -103,6 +103,13 @@ class SLAConfig:
     window: int = 0  # sliding-window constraint in TOKENS (0 = none);
     #                  applied at block granularity: out-of-window blocks are
     #                  forced negligible (exact-zero weight under SWA).
+    paged: bool = False  # serving: page the per-slot KV cache into a global
+    #                      pool of block_kv-sized pages with copy-on-write
+    #                      prefix sharing (DESIGN.md "Paged KV & prefix
+    #                      caching"); consulted by Scheduler/ServingEngine.
+    page_pool_size: Optional[int] = None  # total physical pages in the pool
+    #                      (incl. the zero page and per-slot scratch pages);
+    #                      None derives a safe default from num_slots*max_len.
 
     # knob-string vocabularies (validate() is the ONE place that rejects
     # typos; keep these in sync with the dispatch sites they gate —
@@ -165,6 +172,15 @@ class SLAConfig:
                 f"decode_mode='sla' requires block_q == block_kv (got "
                 f"{self.block_q} vs {self.block_kv}); the decode grid "
                 f"appends one query row per completed KV block")
+        if self.page_pool_size is not None and self.page_pool_size < 2:
+            raise ValueError(
+                f"SLAConfig.page_pool_size must be >= 2 (zero page + at "
+                f"least one allocatable page), got {self.page_pool_size}")
+        if self.paged and self.block_q != self.block_kv:
+            raise ValueError(
+                f"paged serving requires block_q == block_kv (pages are "
+                f"block_kv-sized and admission is block_q-aligned; got "
+                f"{self.block_q} vs {self.block_kv})")
         return self
 
     def num_critical(self, num_kv_blocks: int) -> int:

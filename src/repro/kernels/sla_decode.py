@@ -178,6 +178,137 @@ def _fused_decode(lut, cnt, marg, posv, q, qp, k, v, hblk, zblk,
       htot, ztot)
 
 
+def _decode_kernel_paged(lut_ref, plut_ref, cnt_ref, marg_ref, pos_ref,
+                         *args, **kw):
+    """Paged kernel body: identical math to `_decode_kernel` — the extra
+    `plut_ref` (physical page ids) is consumed only by the BlockSpec
+    index maps that stream KV/h/z pages out of the global pools; all
+    masking arithmetic (column ids, diagonal detection) stays on the
+    LOGICAL block ids in `lut_ref`."""
+    return _decode_kernel(lut_ref, cnt_ref, marg_ref, pos_ref, *args, **kw)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_kv", "group", "hkv", "interpret"))
+def _fused_decode_paged(lut, plut, cnt, marg, posv, q, qp, k, v, hblk, zblk,
+                        hdiag, zdiag, htot, ztot,
+                        *, scale, block_kv, group, hkv, interpret):
+    """Paged fused decode (DESIGN.md "Paged KV & prefix caching"): the
+    scalar-prefetched LUT points at the PAGE TABLE instead of contiguous
+    cache rows.
+
+    lut: (BH, C, K) logical block ids (masking math); plut: (BH, C, K)
+    physical page ids (plut = pt[b, lut] — the block-streaming index).
+    k/v: (Hkv, P, bkv, D) and hblk: (Hkv, P, D, D) / zblk: (Hkv, P, D)
+    are the global page pools, head-major so the index map addresses
+    them as ((bh // group) % hkv, page); per-token operands (q/qp,
+    hdiag/zdiag, htot/ztot) keep the flat (B*H / B*Hkv, C, ...) layout
+    of `_fused_decode`. Returns (o_s, o_l) both (BH, C, D) f32."""
+    bh, c, k_sel = lut.shape
+    d = q.shape[-1]
+    grid = (bh, c, k_sel)
+
+    kern = functools.partial(
+        _decode_kernel_paged, scale=scale, k_sel=k_sel, block_kv=block_kv)
+
+    def kv_map(bh_i, c_i, s, lut_ref, plut_ref, *_):
+        return ((bh_i // group) % hkv, plut_ref[bh_i, c_i, s], 0, 0)
+
+    def z_map(bh_i, c_i, s, lut_ref, plut_ref, *_):
+        return ((bh_i // group) % hkv, plut_ref[bh_i, c_i, s], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bh_i, c_i, s, *_:
+                         (bh_i, c_i, 0)),                        # q
+            pl.BlockSpec((1, 1, d), lambda bh_i, c_i, s, *_:
+                         (bh_i, c_i, 0)),                        # qp
+            pl.BlockSpec((1, 1, block_kv, d), kv_map),           # k pool
+            pl.BlockSpec((1, 1, block_kv, d), kv_map),           # v pool
+            pl.BlockSpec((1, 1, d, d), kv_map),                  # hblk pool
+            pl.BlockSpec((1, 1, d), z_map),                      # zblk pool
+            pl.BlockSpec((1, 1, d, d), lambda bh_i, c_i, s, *_:
+                         (bh_i // group, c_i, 0, 0)),            # hdiag
+            pl.BlockSpec((1, 1, d), lambda bh_i, c_i, s, *_:
+                         (bh_i // group, c_i, 0)),               # zdiag
+            pl.BlockSpec((1, 1, d, d), lambda bh_i, c_i, s, *_:
+                         (bh_i // group, c_i, 0, 0)),            # htot
+            pl.BlockSpec((1, 1, d), lambda bh_i, c_i, s, *_:
+                         (bh_i // group, c_i, 0)),               # ztot
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, d), lambda bh_i, c_i, s, *_: (bh_i, c_i, 0)),
+            pl.BlockSpec((1, 1, d), lambda bh_i, c_i, s, *_: (bh_i, c_i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),       # acc
+            pltpu.VMEM((1, LANES), jnp.float32),   # m
+            pltpu.VMEM((1, LANES), jnp.float32),   # l
+            pltpu.VMEM((d, d), jnp.float32),       # hsel
+            pltpu.VMEM((1, d), jnp.float32),       # zsel
+        ],
+    )
+
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((bh, c, d), jnp.float32)] * 2,
+        interpret=interpret,
+    )(lut, plut, cnt, marg, posv, q, qp, k, v, hblk, zblk, hdiag, zdiag,
+      htot, ztot)
+
+
+def _decode_attention_paged(state, qg, qpg, pos, cfg: SLAConfig, scale,
+                            interpret: bool):
+    """Paged entry: route the live-row LUT through the page table and
+    launch `_fused_decode_paged` against the global pools. Single-token
+    steps only (the chunked path snapshots per-token state the paged
+    scheduler never builds); inference-only — no custom VJP (serving
+    decode never differentiates)."""
+    b, hkv, g, cdim, d = qg.shape
+    if cdim != 1:
+        raise ValueError(
+            "paged fused decode supports single-token steps only "
+            f"(got chunk of {cdim})")
+    h = hkv * g
+    bh = b * h
+    pt = state["pt"]
+    tn = pt.shape[1]
+    bkv = cfg.block_kv
+    lut, cnt, marg = state["lut"], state["cnt"], state["marg"]
+    plut = jax.vmap(lambda row, l: row[l])(pt, lut)       # (B, H, K)
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    # the diagonal (still-accumulating) block's partials, read from the
+    # pool at the slot's current page (clamp keeps runaway inactive
+    # slots on a valid — scratch — page)
+    dpid = pt[jnp.arange(b), jnp.minimum(posv // bkv, tn - 1)]
+    hdiag = state["hblk"][dpid]                           # (B, Hkv, D, D)
+    zdiag = state["zblk"][dpid]                           # (B, Hkv, D)
+    k_sel = lut.shape[-1]
+    scale = float(d**-0.5) if scale is None else float(scale)
+    o_s, o_l = _fused_decode_paged(
+        lut.reshape(bh, 1, k_sel).astype(jnp.int32),
+        plut.reshape(bh, 1, k_sel).astype(jnp.int32),
+        cnt.reshape(bh, 1).astype(jnp.int32),
+        marg.reshape(bh, 1).astype(jnp.int32),
+        jnp.repeat(posv, h),
+        qg.astype(jnp.float32).reshape(bh, 1, d),
+        qpg.astype(jnp.float32).reshape(bh, 1, d),
+        jnp.moveaxis(state["k"], 0, 1), jnp.moveaxis(state["v"], 0, 1),
+        jnp.moveaxis(state["hblk"], 0, 1),
+        jnp.moveaxis(state["zblk"], 0, 1),
+        hdiag.reshape(b * hkv, 1, d, d), zdiag.reshape(b * hkv, 1, d),
+        state["htot"].reshape(b * hkv, 1, d, d),
+        state["ztot"].reshape(b * hkv, 1, d),
+        scale=scale, block_kv=bkv, group=g, hkv=hkv,
+        interpret=bool(interpret))
+    shape = (b, hkv, g, 1, d)
+    return o_s.reshape(shape), o_l.reshape(shape)
+
+
 # ---------------------------------------------------------------------------
 # plain-JAX twin: the gather backend's math with a chunk axis
 # ---------------------------------------------------------------------------
@@ -311,6 +442,9 @@ def decode_attention(state, qg, qpg, pos, cfg: SLAConfig, scale=None,
     (B, Hkv, G, C, D) f32; gradients flow through q/qp/k/v/hblk/zblk/
     htot/ztot via the gather-math VJP.
     """
+    if "pt" in state:
+        return _decode_attention_paged(state, qg, qpg, pos, cfg, scale,
+                                       interpret)
     b, hkv, g, cdim, d = qg.shape
     lut, cnt, marg = state["lut"], state["cnt"], state["marg"]
     if lut.ndim == 3:                       # (B, H, K) live-row layout:

@@ -94,6 +94,23 @@ def main(argv=None):
                          "instead of O(context) (DESIGN.md 'Decode-time "
                          "SLA'). Requires block-aligned prompt/cache "
                          "lengths (the engine rounds max_len up)")
+    ap.add_argument("--paged", action="store_true",
+                    help="page the per-slot KV cache: block_kv-sized "
+                         "physical pages in a refcounted global pool, "
+                         "per-slot page tables, prefix-interned prompt "
+                         "pages shared copy-on-write across requests "
+                         "(DESIGN.md 'Paged KV & prefix caching'). "
+                         "Greedy tokens are bitwise-identical to the "
+                         "unpaged scheduler. Requires --scheduler "
+                         "continuous")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="total physical pages in the paged KV pool "
+                         "(incl. the zero page and one scratch page per "
+                         "slot). Default: full per-slot backing — "
+                         "1 + slots + slots * (max_len / block_kv); "
+                         "smaller values bank on prefix sharing and "
+                         "fail loudly (PagePoolExhausted) when the bet "
+                         "doesn't pay")
     ap.add_argument("--routing-mode", default=None,
                     choices=["threshold", "learned"],
                     help="block-classification router: 'threshold' ranks "
@@ -110,6 +127,8 @@ def main(argv=None):
         args.drift_threshold = parts[0] if len(parts) == 1 else tuple(parts)
     if args.stream and args.scheduler != "continuous":
         ap.error("--stream requires --scheduler continuous")
+    if args.paged and args.scheduler != "continuous":
+        ap.error("--paged requires --scheduler continuous")
 
     from repro.core import backends as backend_registry
     backend_registry.resolve(args.backend)  # unknown names fail here, loudly
@@ -135,7 +154,9 @@ def main(argv=None):
                           max_len=max_len, backend=args.backend,
                           decode_sla=args.decode_sla or None,
                           plan_reuse=args.plan_reuse,
-                          drift_threshold=args.drift_threshold)
+                          drift_threshold=args.drift_threshold,
+                          paged=args.paged or None,
+                          pool_pages=args.pool_pages)
         t0 = time.time()
         for i in range(args.requests):
             sched.submit(
@@ -166,7 +187,9 @@ def main(argv=None):
                            plan_reuse=args.plan_reuse,
                            drift_threshold=args.drift_threshold,
                            decode_sla=args.decode_sla,
-                           scheduler=args.scheduler)
+                           scheduler=args.scheduler,
+                           paged=args.paged or None,
+                           pool_pages=args.pool_pages)
     t0 = time.time()
     done = engine.run(reqs)
     _print_stats(args, engine.stats, len(done), time.time() - t0,
@@ -182,15 +205,24 @@ def _print_stats(args, st, n_done, wall, metrics, drift_threshold):
     if metrics:
         from repro.serving.api import percentile as pct
 
-        ttfts = [m.ttft_s for m in metrics]
-        lats = [m.latency_s for m in metrics]
-        print(f"per-request: TTFT p50 {pct(ttfts, 0.5)*1e3:.0f}ms / "
-              f"p95 {pct(ttfts, 0.95)*1e3:.0f}ms | latency p50 "
-              f"{pct(lats, 0.5)*1e3:.0f}ms / p95 {pct(lats, 0.95)*1e3:.0f}ms")
+        # unfinished / never-prefilled requests report None, not 0.0
+        ttfts = [m.ttft_s for m in metrics if m.ttft_s is not None]
+        lats = [m.latency_s for m in metrics if m.latency_s is not None]
+        if ttfts and lats:
+            print(f"per-request: TTFT p50 {pct(ttfts, 0.5)*1e3:.0f}ms / "
+                  f"p95 {pct(ttfts, 0.95)*1e3:.0f}ms | latency p50 "
+                  f"{pct(lats, 0.5)*1e3:.0f}ms / p95 "
+                  f"{pct(lats, 0.95)*1e3:.0f}ms")
     if st.slot_steps_total:
         print(f"scheduler: {st.admissions} admissions | decode-slot "
               f"occupancy {st.occupancy():.2f} "
               f"({st.slot_steps_active}/{st.slot_steps_total} slot-steps)")
+    if getattr(args, "paged", False):
+        print(f"paged KV: {st.pages_in_use} pages in use "
+              f"(peak {st.pages_peak}) | {st.page_allocs} allocs, "
+              f"{st.cow_copies} CoW copies | prefix cache "
+              f"{st.prefix_hits} page hits / {st.prefix_misses} misses, "
+              f"{st.prefix_full_hits} full-prompt hits")
     if args.plan_reuse != "off":
         print(f"plan reuse: {st.plan_builds} built, {st.plan_reuses} "
               f"reused, {st.plan_replans} drift re-plans | retention "

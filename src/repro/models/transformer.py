@@ -502,6 +502,28 @@ def _blk_update(buf, upd, row):
     return jax.vmap(one)(buf, upd, row)
 
 
+def _page_gather(pool, pt):
+    """Per-layer page pool (P, Hkv, ...) -> per-slot block view
+    (B, Hkv, Tn, ...) through the page table pt (B, Tn) int32."""
+    return jnp.moveaxis(jnp.take(pool, pt, axis=0), 2, 1)
+
+
+def _page_gather_kv(pool, pt):
+    """KV page pool (P, Hkv, bkv, Dh) -> the contiguous (B, Hkv, S, Dh)
+    cache view a monolithic per-slot cache would hold."""
+    g = _page_gather(pool, pt)                  # (B, Hkv, Tn, bkv, Dh)
+    return g.reshape(g.shape[:2] + (g.shape[2] * g.shape[3], g.shape[4]))
+
+
+def _page_write_kv(pool, new, pid, off):
+    """Write one new-token KV into its page: pool (P, Hkv, bkv, Dh),
+    new (B, Hkv, 1, Dh), pid/off (B,). Page-table invariant (enforced
+    by the scheduler's copy-on-write pass): every active slot's write
+    page is privately owned, so the pids are distinct and the scatter
+    is conflict-free."""
+    return pool.at[pid, :, off].set(new[:, :, 0, :].astype(pool.dtype))
+
+
 def decode_step(params, cfg: ArchConfig, token, cache,
                 compute_dtype=jnp.bfloat16, backend: str = "gather",
                 drift_threshold=None):
@@ -517,33 +539,55 @@ def decode_step(params, cfg: ArchConfig, token, cache,
     (`_decode_step_sla`); otherwise dense masked attention over the
     full static cache (O(S) per token — exactly the decode_* cells'
     old cost model).
+
+    Paged caches (`make_paged_cache`, DESIGN.md "Paged KV & prefix
+    caching") carry `kp`/`vp` page pools plus a `pt` page table instead
+    of monolithic k/v; the same step math runs against page-gathered
+    views, so paged and monolithic decode are bitwise identical.
     """
     if "sla" in cache:
         return _decode_step_sla(params, cfg, token, cache, compute_dtype,
                                 backend, drift_threshold)
+    paged = "kp" in cache
     emb = params["embed"]
     x = jnp.take(emb, token[:, None], axis=0).astype(compute_dtype)
     b = x.shape[0]
     pos = cache["pos"]  # scalar or (B,) int32
     positions = jnp.broadcast_to(pos, (b,))[:, None]
     kinds = layer_kinds(cfg)
+    if paged:
+        pt = cache["pt"]
+        bkv = cache["kp"].shape[3]
+        tn = pt.shape[1]
+        # runaway inactive slots clamp onto their scratch page
+        wpid = pt[jnp.arange(b), jnp.minimum(pos // bkv, tn - 1)]
+        woff = pos % bkv
 
     def body(x, layer):
         p, kind, kc, vc = layer
         xn = rms_norm(x, p["ln1"])
         q, k_new, v_new = _qkv(p, xn, cfg, positions)
-        kc = _cache_write(kc, k_new, pos)
-        vc = _cache_write(vc, v_new, pos)
-        o = _dense_decode_attn(q, kc, vc, pos, kind, cfg)
+        if paged:
+            kc = _page_write_kv(kc, k_new, wpid, woff)
+            vc = _page_write_kv(vc, v_new, wpid, woff)
+            kd, vd = _page_gather_kv(kc, pt), _page_gather_kv(vc, pt)
+        else:
+            kc = _cache_write(kc, k_new, pos)
+            vc = _cache_write(vc, v_new, pos)
+            kd, vd = kc, vc
+        o = _dense_decode_attn(q, kd, vd, pos, kind, cfg)
         x = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
         f, _ = _ffn(p, rms_norm(x, p["ln2"]), cfg)
         return x + f, (kc, vc)
 
-    x, (kc, vc) = jax.lax.scan(
-        body, x, (params["layers"], kinds, cache["k"], cache["v"]))
+    kv_in = (cache["kp"], cache["vp"]) if paged else (cache["k"], cache["v"])
+    x, (kc, vc) = jax.lax.scan(body, x, (params["layers"], kinds) + kv_in)
     x = rms_norm(x, params["ln_f"])
     logits = logits_from_hidden(params, x[:, 0])
-    new_cache = {"k": kc, "v": vc, "pos": pos + 1}
+    if paged:
+        new_cache = {"kp": kc, "vp": vc, "pt": pt, "pos": pos + 1}
+    else:
+        new_cache = {"k": kc, "v": vc, "pos": pos + 1}
     return logits, new_cache
 
 
@@ -580,21 +624,39 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
     (`lax.cond(jnp.any(boundary))`), so the amortized-cost claim
     holds per slot on average but individual steps may pay it for a
     single slot. Plan/state counters become per-slot (L, B) arrays.
+
+    Paged caches (DESIGN.md "Paged KV & prefix caching") swap the
+    monolithic per-slot k/v/hblk/zblk/kpool for global page pools
+    indexed by the `pt` page table; every read goes through a
+    page-gathered view that is value-identical to the monolithic
+    layout, and every write lands in the slot's (privately owned)
+    current page — so the step stays bitwise equal to unpaged decode.
     """
     from repro.core import backends as backend_lib
     from repro.core.phi import phi
 
     backend_lib.resolve_decode(backend)
+    paged = "kp" in cache
     emb = params["embed"]
     x = jnp.take(emb, token[:, None], axis=0).astype(compute_dtype)
     b = x.shape[0]
     pos = cache["pos"]
     vec = jnp.ndim(pos) > 0  # per-slot positions (continuous batching)
+    if paged and not vec:
+        raise ValueError("paged decode requires per-slot (B,) positions")
     st = cache["sla"]
     sla = cfg.sla
     bq = sla.block_q
-    smax = cache["k"].shape[-2]
-    tn = smax // sla.block_kv
+    if paged:
+        pt = cache["pt"]
+        tn = pt.shape[1]
+        smax = tn * sla.block_kv
+        # runaway inactive slots clamp onto their scratch page
+        wpid = pt[jnp.arange(b), jnp.minimum(pos // sla.block_kv, tn - 1)]
+        woff = pos % sla.block_kv
+    else:
+        smax = cache["k"].shape[-2]
+        tn = smax // sla.block_kv
     dcfg = sla.decode_plan_cfg(tn)
     kinds = layer_kinds(cfg)
     used = sorted(set(layer_kinds_list(cfg)))
@@ -629,8 +691,12 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
          llut, lcnt, lmarg, ret_prev) = layer
         xn = rms_norm(x, p["ln1"])
         q, k_new, v_new = _qkv(p, xn, cfg, positions)
-        kc = _cache_write(kc, k_new, pos)
-        vc = _cache_write(vc, v_new, pos)
+        if paged:
+            kc = _page_write_kv(kc, k_new, wpid, woff)
+            vc = _page_write_kv(vc, v_new, wpid, woff)
+        else:
+            kc = _cache_write(kc, k_new, pos)
+            vc = _cache_write(vc, v_new, pos)
         h, hkv = q.shape[1], k_new.shape[1]
         g = h // hkv
         qf = q[:, :, 0, :].astype(jnp.float32)       # (B, H, D)
@@ -650,7 +716,8 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
 
         # ---- 1. finalize the just-completed row (uses the PRE-update
         # kpool: the completed row cannot see the current block) ----
-        kpool_mean = kp_sum / sla.block_kv
+        kp_view = _page_gather(kp_sum, pt) if paged else kp_sum
+        kpool_mean = kp_view / sla.block_kv
         kpm = jnp.repeat(kpool_mean, g, axis=1)      # (B, H, Tn, D)
         pc_prev = jax.lax.cond(
             any_boundary,
@@ -668,15 +735,25 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
         # ---- 2. O(1) running-state update for the new token ----
         phik = phi(kf, sla.phi)                      # (B, Hkv, D) f32
         hupd = jnp.einsum("bkd,bke->bkde", phik, vf)
-        hb = _blk_update(hb, hupd, row)
-        zb = _blk_update(zb, phik, row)
+        if paged:
+            # distinct private write pages -> conflict-free update; the
+            # gather/add/set form (not scatter-add) mirrors the
+            # monolithic slice/add/write so XLA fuses the phi-derived
+            # update identically and the partials stay BITWISE equal
+            hb = hb.at[wpid].set(hb[wpid] + hupd)
+            zb = zb.at[wpid].set(zb[wpid] + phik)
+            kp_sum = kp_sum.at[wpid].set(kp_sum[wpid] + kf)
+        else:
+            hb = _blk_update(hb, hupd, row)
+            zb = _blk_update(zb, phik, row)
+            kp_sum = _blk_update(kp_sum, kf, row)
         ht = ht + hupd
         zt = zt + phik
-        kp_sum = _blk_update(kp_sum, kf, row)
 
         # ---- 3. live-row structure (boundary only): drift-gated
         # inherit-vs-fresh, per-layer threshold ----
-        kpm_live = jnp.repeat(kp_sum / cnt_div, g, axis=1)
+        kp_view = _page_gather(kp_sum, pt) if paged else kp_sum
+        kpm_live = jnp.repeat(kp_view / cnt_div, g, axis=1)
         pc_live = jax.lax.cond(
             any_boundary,
             lambda _: masks_lib.score_row(routing, qf, kpm_live, rowm,
@@ -719,6 +796,8 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
         # ---- 4. attention: critical blocks + O(1) linear state ----
         state = {"k": kc, "v": vc, "hblk": hb, "zblk": zb, "htot": ht,
                  "ztot": zt, "lut": llut, "cnt": lcnt, "marg": lmarg}
+        if paged:
+            state["pt"] = pt
 
         def do_sla(_):
             return backend_lib.decode_execute(
@@ -727,6 +806,10 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
                 .astype(x.dtype)
 
         def do_dense(_):
+            if paged:
+                return _dense_decode_attn(q, _page_gather_kv(kc, pt),
+                                          _page_gather_kv(vc, pt), pos,
+                                          kind, cfg)
             return _dense_decode_attn(q, kc, vc, pos, kind, cfg)
 
         if used == [KIND_SLA]:
@@ -743,22 +826,35 @@ def _decode_step_sla(params, cfg: ArchConfig, token, cache, compute_dtype,
               jnp.where(boundary, retention, ret_prev))
         return x2 + f, ys
 
-    xs = (params["layers"], kinds, thresholds, cache["k"], cache["v"],
-          st["hblk"], st["zblk"], st["htot"], st["ztot"], st["kpool"],
-          st["qpool"], st["plan"], st["live_lut"], st["live_cnt"],
-          st["live_marg"], st["retention"])
+    if paged:
+        slap = cache["slap"]
+        xs = (params["layers"], kinds, thresholds, cache["kp"],
+              cache["vp"], slap["hblk"], slap["zblk"], st["htot"],
+              st["ztot"], slap["kpool"], st["qpool"], st["plan"],
+              st["live_lut"], st["live_cnt"], st["live_marg"],
+              st["retention"])
+    else:
+        xs = (params["layers"], kinds, thresholds, cache["k"], cache["v"],
+              st["hblk"], st["zblk"], st["htot"], st["ztot"], st["kpool"],
+              st["qpool"], st["plan"], st["live_lut"], st["live_cnt"],
+              st["live_marg"], st["retention"])
     x, ys = jax.lax.scan(body, x, xs)
     (kc, vc, hb, zb, ht, zt, kp_sum, qp_sum, plan, llut, lcnt, lmarg,
      exts, reps, reuses, rets) = ys
     x = rms_norm(x, params["ln_f"])
     logits = logits_from_hidden(params, x[:, 0])
     new_st = {
-        "hblk": hb, "zblk": zb, "htot": ht, "ztot": zt, "kpool": kp_sum,
+        "htot": ht, "ztot": zt,
         "qpool": qp_sum, "plan": plan, "rows": st["rows"] + append,
         "live_lut": llut, "live_cnt": lcnt, "live_marg": lmarg,
         "extends": st["extends"] + exts, "replans": st["replans"] + reps,
         "reuses": st["reuses"] + reuses, "retention": rets,
     }
+    if paged:
+        return logits, {"kp": kc, "vp": vc, "pt": pt, "pos": pos + 1,
+                        "slap": {"hblk": hb, "zblk": zb, "kpool": kp_sum},
+                        "sla": new_st}
+    new_st.update({"hblk": hb, "zblk": zb, "kpool": kp_sum})
     return logits, {"k": kc, "v": vc, "pos": pos + 1, "sla": new_st}
 
 
@@ -1143,4 +1239,192 @@ def insert_slot(cache: dict, single: dict, slot) -> dict:
             # (L,) single-request counters -> column `slot` of (L, B)
             ns[key] = s[key].at[:, slot].set(t[key])
         out["sla"] = ns
+    return out
+
+
+# --------------------------------------------------------------------------
+# paged serving: page pools + page table (DESIGN.md "Paged KV & prefix
+# caching"). Host-side refcounting/CoW lives in serving/pages.py; these
+# are the device-side constructors and scatters.
+# --------------------------------------------------------------------------
+PAGED_POOL_KEYS = ("hblk", "zblk", "kpool")  # per-block leaves that move
+#                                              from per-slot state into the
+#                                              global page pools under paging
+PAGED_SLOT_KEYS = ("htot", "ztot", "qpool", "live_lut", "live_cnt",
+                   "live_marg")
+
+
+def make_paged_cache(cfg: ArchConfig, batch: int, max_len: int,
+                     num_pages: int, dtype=jnp.bfloat16,
+                     decode_sla: Optional[bool] = None) -> dict:
+    """Paged decode cache: global pools of block_kv-sized pages plus a
+    per-slot page table, replacing make_cache(per_slot=True)'s
+    monolithic (L, B, Hkv, max_len, Dh) slabs.
+
+      kp/vp   (L, P, Hkv, bkv, Dh)  KV page pools
+      pt      (B, Tn) int32         logical block -> physical page,
+                                    shared by every layer (page ids are
+                                    allocated per logical block, and all
+                                    layers of one block live at one id)
+      slap.*  (L, P, Hkv, ...)      decode-SLA per-block h/z/kpool
+                                    partials, pooled at the same ids
+
+    Physical page 0 is the permanent all-zero page; the scheduler pins
+    one private scratch page per slot on top so inactive slots (which
+    keep stepping through every batched dispatch) always write
+    somewhere harmless. Per-slot decode-SLA state (plan rows, totals,
+    live-row LUT, counters) keeps the monolithic per-slot layout."""
+    sla = cfg.sla
+    if max_len % sla.block_kv:
+        raise ValueError(
+            f"paged cache needs block-aligned max_len (got {max_len} "
+            f"for block_kv={sla.block_kv})")
+    tn = max_len // sla.block_kv
+    nl, hkv, dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    pshape = (nl, num_pages, hkv, sla.block_kv, dh)
+    cache = {"kp": jnp.zeros(pshape, dtype), "vp": jnp.zeros(pshape, dtype),
+             "pt": jnp.zeros((batch, tn), jnp.int32),
+             "pos": jnp.zeros((batch,), jnp.int32)}
+    if decode_sla is None:
+        decode_sla = sla.decode_mode == "sla"
+    if decode_sla:
+        _check_decode_grid(cfg, max_len, max_len)
+        mc = jnp.full((nl, batch, cfg.num_heads, 0, 0), -1, jnp.int8)
+        empty = jnp.zeros((nl, batch, hkv, 0, dh), dtype)
+        st = _seed_decode_state(cfg, empty, empty, mc, max_len)
+        st["rows"] = jnp.full((batch,), st["rows"], jnp.int32)
+        for key in ("extends", "replans", "reuses", "retention"):
+            st[key] = jnp.repeat(st[key][:, None], batch, axis=1)
+        cache["slap"] = {
+            "hblk": jnp.zeros((nl, num_pages, hkv, dh, dh), jnp.float32),
+            "zblk": jnp.zeros((nl, num_pages, hkv, dh), jnp.float32),
+            "kpool": jnp.zeros((nl, num_pages, hkv, dh), jnp.float32)}
+        for key in PAGED_POOL_KEYS:
+            del st[key]
+        cache["sla"] = st
+    return cache
+
+
+def insert_slot_state_paged(cache: dict, single: dict, slot) -> dict:
+    """Scatter only the PER-SLOT half of a batch-1 prefill into `slot`
+    of a paged cache: pos plus (under decode-SLA) plan rows, running
+    totals, pooled q and counters. Page contents are written separately
+    by `insert_slot_paged` — or not at all when every prompt page was a
+    prefix-cache hit (the full-prompt snapshot fast path)."""
+    if ("sla" in cache) != ("sla" in single):
+        raise ValueError(
+            "decode-SLA 'sla' state mismatch: the paged cache and the "
+            "prefill state must both (or neither) carry it")
+    out = dict(cache)
+    out["pos"] = cache["pos"].at[slot].set(single["pos"])
+    if "sla" in cache:
+        s, t = cache["sla"], single["sla"]
+
+        def upd(live, one):
+            return jax.lax.dynamic_update_slice_in_dim(
+                live, one.astype(live.dtype), slot, axis=1)
+
+        ns = {key: upd(s[key], t[key]) for key in PAGED_SLOT_KEYS}
+        ns["plan"] = jax.tree_util.tree_map(upd, s["plan"], t["plan"])
+        ns["rows"] = s["rows"].at[slot].set(t["rows"])
+        for key in ("extends", "replans", "reuses", "retention"):
+            ns[key] = s[key].at[:, slot].set(t[key])
+        out["sla"] = ns
+    return out
+
+
+def slot_state_from_prefill(single: dict) -> dict:
+    """The per-slot half of a batch-1 prefill cache (what
+    `insert_slot_state_paged` consumes): everything except KV rows and
+    per-block partials. This is the full-prompt snapshot the scheduler
+    caches for exact prefix hits."""
+    out = {"pos": single["pos"]}
+    if "sla" in single:
+        st = single["sla"]
+        out["sla"] = {key: st[key] for key in st if key
+                      not in PAGED_POOL_KEYS}
+    return out
+
+
+def insert_slot_paged(cache: dict, single: dict, slot, page_ids) -> dict:
+    """Scatter a batch-1 prefill cache into `slot` of a paged cache.
+
+    `page_ids` (n_prompt_pages,) int32 names the physical page for each
+    prompt block, host-allocated/interned before the call. KV rows and
+    (under decode-SLA) the per-block h/z/kpool partials land in the
+    pools at those ids; the per-slot state goes through
+    `insert_slot_state_paged`. Prefix-interned hit pages are rewritten
+    with byte-identical contents (causal attention makes page j a pure
+    function of the padded tokens below its end), which keeps admission
+    a single static-shape jit per bucket size. The page table itself is
+    host-owned and pushed separately."""
+    if single["k"].shape[1] != 1:
+        raise ValueError(
+            f"insert_slot_paged takes a batch-1 prefill cache (got "
+            f"batch {single['k'].shape[1]})")
+    bkv = cache["kp"].shape[3]
+    npp = page_ids.shape[0]
+    if single["k"].shape[-2] < npp * bkv:
+        raise ValueError(
+            f"prefill cache holds {single['k'].shape[-2]} positions but "
+            f"{npp} pages of {bkv} were requested")
+    out = insert_slot_state_paged(cache, single, slot)
+    nl, hkv = cache["kp"].shape[0], cache["kp"].shape[2]
+
+    def kv_pages(x):  # (L, 1, Hkv, S, Dh) -> (L, npp, Hkv, bkv, Dh)
+        xs = x[:, 0, :, :npp * bkv, :].reshape(nl, hkv, npp, bkv, -1)
+        return jnp.moveaxis(xs, 1, 2)
+
+    out["kp"] = cache["kp"].at[:, page_ids].set(
+        kv_pages(single["k"]).astype(cache["kp"].dtype))
+    out["vp"] = cache["vp"].at[:, page_ids].set(
+        kv_pages(single["v"]).astype(cache["vp"].dtype))
+    if "sla" in cache:
+
+        def blk_pages(x):  # (L, 1, Hkv, Tn, ...) -> (L, npp, Hkv, ...)
+            return jnp.moveaxis(x[:, 0, :, :npp], 1, 2)
+
+        out["slap"] = {
+            key: cache["slap"][key].at[:, page_ids].set(
+                blk_pages(single["sla"][key]))
+            for key in PAGED_POOL_KEYS}
+    return out
+
+
+def copy_page(cache: dict, dst, src) -> dict:
+    """Device-side page copy `src -> dst` across every pool (KV and,
+    under decode-SLA, the h/z/kpool partials). The scheduler's
+    copy-on-write pass uses this both to duplicate a shared page before
+    a divergent write and to ZERO a freshly allocated decode page
+    (src = the permanent zero page — the h/z partials accumulate onto
+    the page via gather/add/set, so recycled pages must start clean)."""
+    out = dict(cache)
+    for key in ("kp", "vp"):
+        out[key] = cache[key].at[:, dst].set(cache[key][:, src])
+    if "slap" in cache:
+        out["slap"] = {k: v.at[:, dst].set(v[:, src])
+                       for k, v in cache["slap"].items()}
+    return out
+
+
+def paged_dense_view(cfg: ArchConfig, cache: dict) -> dict:
+    """Materialize the monolithic per-slot cache a paged cache
+    represents (page-gathered KV slabs + per-block partials). Test /
+    debugging aid: the paged-vs-monolithic parity suite compares active
+    slots of this view bitwise against the unpaged scheduler's cache."""
+    pt = cache["pt"]
+
+    def kv(pool):  # (L, P, Hkv, bkv, Dh) -> (L, B, Hkv, S, Dh)
+        g = jnp.moveaxis(jnp.take(pool, pt, axis=1), 3, 2)
+        return g.reshape(g.shape[:3] + (g.shape[3] * g.shape[4],
+                                        g.shape[5]))
+
+    out = {"k": kv(cache["kp"]), "v": kv(cache["vp"]),
+           "pos": cache["pos"]}
+    if "sla" in cache:
+        st = dict(cache["sla"])
+        for key in PAGED_POOL_KEYS:
+            st[key] = jnp.moveaxis(
+                jnp.take(cache["slap"][key], pt, axis=1), 3, 2)
+        out["sla"] = st
     return out

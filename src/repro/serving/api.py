@@ -87,7 +87,10 @@ class RequestMetrics:
 
     queue_s / ttft_s / latency_s are derived and measured per request —
     the v1 engine assigned every request the engine's cumulative
-    prefill+decode seconds instead."""
+    prefill+decode seconds instead. Each derived metric is None until
+    the event it measures has actually happened (an unfinished request
+    has no latency, a never-prefilled one no TTFT); clamping them to
+    0.0 silently reported in-flight requests as instantaneous."""
 
     submit_t: float = 0.0
     admit_t: float = 0.0
@@ -96,16 +99,22 @@ class RequestMetrics:
     decode_tokens: int = 0  # total generated tokens (incl. the prefill one)
 
     @property
-    def queue_s(self) -> float:
-        return max(0.0, self.admit_t - self.submit_t)
+    def queue_s(self) -> Optional[float]:
+        if self.admit_t == 0.0:
+            return None
+        return self.admit_t - self.submit_t
 
     @property
-    def ttft_s(self) -> float:
-        return max(0.0, self.first_token_t - self.submit_t)
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_t == 0.0:
+            return None
+        return self.first_token_t - self.submit_t
 
     @property
-    def latency_s(self) -> float:
-        return max(0.0, self.finish_t - self.submit_t)
+    def latency_s(self) -> Optional[float]:
+        if self.finish_t == 0.0:
+            return None
+        return self.finish_t - self.submit_t
 
 
 @dataclasses.dataclass
@@ -168,6 +177,19 @@ class ServeStats:
     admissions: int = 0
     slot_steps_active: int = 0
     slot_steps_total: int = 0
+    # paged-KV accounting (DESIGN.md "Paged KV & prefix caching"):
+    # pages_in_use / pages_peak = referenced physical pages (current /
+    # high-water), page_allocs = pool allocations, prefix_hits/misses =
+    # per-page prefix-cache lookups at admission, prefix_full_hits =
+    # whole-prompt snapshot hits (prefill compute skipped entirely),
+    # cow_copies = copy-on-write duplications of a shared page.
+    pages_in_use: int = 0
+    pages_peak: int = 0
+    page_allocs: int = 0
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    prefix_full_hits: int = 0
+    cow_copies: int = 0
 
     def occupancy(self) -> float:
         """Decode-slot utilization in [0, 1]."""
@@ -269,7 +291,9 @@ class Scheduler:
                  decode_sla: Optional[bool] = None,
                  plan_reuse: str = "off", drift_threshold=None,
                  prefill_bucket: Optional[int] = None,
-                 compute_dtype=jnp.bfloat16):
+                 compute_dtype=jnp.bfloat16,
+                 paged: Optional[bool] = None,
+                 pool_pages: Optional[int] = None):
         from repro.core import backends as backend_registry
 
         backend = backend_registry.resolve(backend)
@@ -280,6 +304,22 @@ class Scheduler:
                 "'off' or 'adaptive'")
         if decode_sla is None:
             decode_sla = cfg.sla.decode_mode == "sla"
+        if paged is None:
+            paged = cfg.sla.paged
+        if paged and plan_reuse == "adaptive":
+            # prefix pages are interned by prompt BYTES; adaptive plan
+            # reuse makes a prefill depend on every earlier request's
+            # plans, so identical bytes would no longer mean identical
+            # page contents
+            raise ValueError(
+                "paged=True is incompatible with plan_reuse='adaptive': "
+                "cross-request plan state breaks content-keyed prefix "
+                "page interning (use plan_reuse='off')")
+        if paged and cfg.sla.block_q != cfg.sla.block_kv:
+            raise ValueError(
+                f"paged KV pages are block_kv-sized and admission is "
+                f"block_q-aligned; the grids must match (got block_q="
+                f"{cfg.sla.block_q}, block_kv={cfg.sla.block_kv})")
         self.cfg = cfg
         self.params = params
         self.mdl = registry.get_model(cfg)
@@ -288,6 +328,7 @@ class Scheduler:
         self.num_slots = num_slots
         self.backend = backend
         self.decode_sla = decode_sla
+        self.paged = paged
         self.plan_reuse = plan_reuse
         self.drift_threshold = normalize_drift_threshold(cfg,
                                                          drift_threshold)
@@ -295,9 +336,10 @@ class Scheduler:
         # admission at block boundaries: cache length and prefill
         # buckets are whole numbers of blocks, so every slot's position
         # starts block-aligned and plan_extend's static-grid invariants
-        # hold per slot
-        self.max_len = block_bucket(max_len, self.block) if decode_sla \
-            else max_len
+        # hold per slot (paged mode block-aligns unconditionally — the
+        # page pool is carved into block_kv-sized pages)
+        self.max_len = block_bucket(max_len, self.block) \
+            if (decode_sla or paged) else max_len
         self.compute_dtype = compute_dtype
         self.stats = ServeStats()
 
@@ -310,6 +352,43 @@ class Scheduler:
                         if prefill_bucket else None)
         self._plans = None  # (1, bucket) plan stack for plan_reuse
         self._stat_base = [None] * num_slots  # decode-SLA counter bases
+
+        if paged:
+            from repro.serving.pages import PagePool, ZERO_PAGE
+
+            if getattr(self.mdl, "make_paged_cache", None) is None:
+                raise ValueError(
+                    f"paged=True requires a model family with a paged "
+                    f"decode cache (make_paged_cache / insert_slot_paged)"
+                    f"; family {cfg.family!r} has none")
+            tn = self.max_len // self.block
+            # full per-slot backing + one pinned scratch page per slot +
+            # the permanent zero page: exactly enough for zero sharing,
+            # so any override below this trades capacity for the prefix
+            # cache actually paying off
+            default_pool = 1 + num_slots + num_slots * tn
+            if pool_pages is None:
+                pool_pages = (cfg.sla.page_pool_size
+                              if cfg.sla.page_pool_size is not None
+                              else default_pool)
+            self.pool_pages = pool_pages
+            self._pool = PagePool(pool_pages)
+            self._zero_page = ZERO_PAGE
+            # one pinned scratch page per slot: inactive slots keep
+            # stepping through every batched dispatch, and their garbage
+            # writes must land somewhere harmless
+            self._scratch = [self._pool.alloc() for _ in range(num_slots)]
+            self._pt_host = np.zeros((num_slots, tn), np.int32)
+            for j in range(num_slots):
+                self._pt_host[j, :] = self._scratch[j]
+            self._slot_pids: List[List[int]] = [[] for _ in
+                                                range(num_slots)]
+            self._slot_base = [0] * num_slots  # prefill bucket at admit
+            # full-prompt snapshots: (bucket, padded bytes) -> (per-slot
+            # prefill state, first-token logits); exact hits skip the
+            # prefill dispatch entirely
+            self._snapshots = collections.OrderedDict()
+            self._snapshot_cap = 32
 
         mdl, backend_, thr = self.mdl, backend, self.drift_threshold
         dkw = {"decode_max_len": self.max_len} if decode_sla else {}
@@ -372,15 +451,71 @@ class Scheduler:
                               v=jnp.pad(single["v"], pad))
             return mdl.insert_slot(live, single, slot)
 
+        # masked decode pair for MIXED drain ticks (some active slots
+        # need per-token host control, the rest are pure-greedy): each
+        # dispatch computes the full batch but commits cache/token
+        # updates only where `mask` is set, so host-controlled slots
+        # stay frozen through the greedy roll and vice versa. Per-slot
+        # decode is batch-independent, so committed trajectories are
+        # bitwise the ones per-token step() would have produced.
+        nsl = num_slots
+
+        def _mask_leaves(mask, new, old):
+            def sel(n, o):
+                if n.ndim == 1 and n.shape[0] == nsl:
+                    return jnp.where(mask, n, o)
+                if n.ndim >= 2 and n.shape[1] == nsl:
+                    m = mask.reshape((1, -1) + (1,) * (n.ndim - 2))
+                    return jnp.where(m, n, o)
+                if n.ndim >= 2 and n.shape[0] == nsl:
+                    m = mask.reshape((-1,) + (1,) * (n.ndim - 1))
+                    return jnp.where(m, n, o)
+                return n
+            return jax.tree_util.tree_map(sel, new, old)
+
+        @jax.jit
+        def _decode_mask(params, token, cache, mask):
+            logits, new_cache = _one(params, token, cache)
+            return logits, _mask_leaves(mask, new_cache, cache)
+
+        @jax.jit
+        def _decode_multi_mask(params, token, cache, nsteps, mask):
+            buf = jnp.zeros((max_len_, token.shape[0]), jnp.int32)
+
+            def body(i, carry):
+                token, cache, buf = carry
+                logits, new_cache = _one(params, token, cache)
+                cache = _mask_leaves(mask, new_cache, cache)
+                new_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                token = jnp.where(mask, new_tok, token)
+                buf = jax.lax.dynamic_update_slice_in_dim(
+                    buf, token[None], i, axis=0)
+                return token, cache, buf
+
+            return jax.lax.fori_loop(0, nsteps, body, (token, cache, buf))
+
         self._prefill = _prefill
         self._prefill_plan = _prefill_plan
         self._prefill_reuse = _prefill_reuse
         self._decode = _decode
         self._decode_multi = _decode_multi
+        self._decode_mask = _decode_mask
+        self._decode_multi_mask = _decode_multi_mask
         self._admit_jit = _admit
-        self._live = mdl.make_cache(cfg, num_slots, self.max_len,
-                                    dtype=compute_dtype,
-                                    decode_sla=decode_sla, per_slot=True)
+        if paged:
+            self._admit_paged_jit = jax.jit(mdl.insert_slot_paged)
+            self._admit_state_jit = jax.jit(mdl.insert_slot_state_paged)
+            self._copy_page_jit = jax.jit(mdl.copy_page)
+            self._live = mdl.make_paged_cache(cfg, num_slots, self.max_len,
+                                              pool_pages,
+                                              dtype=compute_dtype,
+                                              decode_sla=decode_sla)
+            self._push_pt()
+        else:
+            self._live = mdl.make_cache(cfg, num_slots, self.max_len,
+                                        dtype=compute_dtype,
+                                        decode_sla=decode_sla,
+                                        per_slot=True)
 
     # -- public API --------------------------------------------------------
     def submit(self, prompt, sampling: Optional[SamplingParams] = None
@@ -426,6 +561,9 @@ class Scheduler:
                   if self._slots[j] is not None]
         if not active:
             return events
+        if self.paged:
+            for j in active:
+                self._ensure_decode_pages(j, 1)
         t0 = time.time()
         logits, self._live = self._decode(
             self.params, jnp.asarray(self._tokens), self._live)
@@ -470,8 +608,15 @@ class Scheduler:
         return list(self._requests)
 
     def _drain_tick(self) -> List[StreamEvent]:
-        """One drain iteration: admit, then decode one rolled segment
-        (or one `step()` when per-token host control is required)."""
+        """One drain iteration: admit, then decode one rolled segment.
+
+        Active slots are PARTITIONED: pure-greedy slots (no sampling, no
+        stop tokens) always take a rolled multi-step dispatch, while
+        host-controlled slots (temperature > 0 or stop tokens) take one
+        masked single step. A tick where every active slot is greedy
+        uses the original unmasked `_decode_multi` trace; a mixed tick
+        uses the masked pair, so one sampling request no longer drags
+        every greedy slot down to per-token host round-trips."""
         events: List[StreamEvent] = []
         for slot in range(self.num_slots):
             if self._slots[slot] is None and self._queue:
@@ -480,25 +625,84 @@ class Scheduler:
                   if self._slots[j] is not None]
         if not active:
             return events
-        if any(self._slots[j].sampling.temperature > 0.0
-               or self._slots[j].sampling.stop_tokens for j in active):
+        ctl = [j for j in active
+               if self._slots[j].sampling.temperature > 0.0
+               or self._slots[j].sampling.stop_tokens]
+        greedy = [j for j in active if j not in ctl]
+        if ctl and self.paged:
+            # page-pool leaves have no batch axis to mask on (distinct
+            # slots write distinct pages inside ONE dispatch), so a
+            # masked commit can't keep a slot's pool writes out —
+            # per-token lockstep is the correct fallback
             return events + self.step()
-        # every active request is greedy with a pure token budget:
-        # nothing can finish before the smallest remaining budget, so
-        # run exactly that many steps in one traced-length dispatch
-        nsteps = min(self._slots[j].sampling.max_new_tokens
-                     - len(self._slots[j].tokens_out) for j in active)
+        if ctl and greedy:
+            events += self._masked_ctl_step(ctl)
+            # a ctl slot may have finished and freed a slot; greedy
+            # slots are untouched by the masked step
+            return events + self._greedy_roll(greedy, masked=True)
+        if ctl:
+            return events + self.step()
+        return events + self._greedy_roll(greedy, masked=False)
+
+    def _masked_ctl_step(self, ctl: List[int]) -> List[StreamEvent]:
+        """One decode step committed only for the host-controlled slots
+        in `ctl` (sampling / stop-token requests)."""
+        events: List[StreamEvent] = []
+        mask = np.zeros((self.num_slots,), bool)
+        mask[ctl] = True
         t0 = time.time()
-        token, self._live, buf = self._decode_multi(
+        logits, self._live = self._decode_mask(
             self.params, jnp.asarray(self._tokens), self._live,
-            jnp.int32(nsteps))
+            jnp.asarray(mask))
+        larr = np.asarray(logits)  # host sync; ctl slots sample anyway
+        now = time.time()
+        self.stats.decode_s += now - t0
+        self.stats.decode_tokens += len(ctl)
+        self.stats.slot_steps_active += len(ctl)
+        self.stats.slot_steps_total += self.num_slots
+        for j in ctl:
+            r = self._slots[j]
+            tok = self._sample(r, larr[j])
+            self._tokens[j] = tok
+            r.tokens_out.append(tok)
+            r.metrics.decode_tokens += 1
+            events.append(StreamEvent(rid=r.rid, kind="token", t=now,
+                                      token=tok,
+                                      index=len(r.tokens_out) - 1))
+            if self._is_done(r):
+                self._finish(r, j, now, events)
+        return events
+
+    def _greedy_roll(self, greedy: List[int],
+                     masked: bool) -> List[StreamEvent]:
+        """Rolled multi-step greedy decode over the slots in `greedy`:
+        nothing can finish before the smallest remaining budget, so run
+        exactly that many steps in one traced-length dispatch (masked
+        when host-controlled slots share the batch and must not move)."""
+        events: List[StreamEvent] = []
+        nsteps = min(self._slots[j].sampling.max_new_tokens
+                     - len(self._slots[j].tokens_out) for j in greedy)
+        if self.paged:
+            for j in greedy:
+                self._ensure_decode_pages(j, nsteps)
+        t0 = time.time()
+        if masked:
+            mask = np.zeros((self.num_slots,), bool)
+            mask[greedy] = True
+            token, self._live, buf = self._decode_multi_mask(
+                self.params, jnp.asarray(self._tokens), self._live,
+                jnp.int32(nsteps), jnp.asarray(mask))
+        else:
+            token, self._live, buf = self._decode_multi(
+                self.params, jnp.asarray(self._tokens), self._live,
+                jnp.int32(nsteps))
         toks = np.asarray(buf)[:nsteps]  # host sync
         now = time.time()
         self.stats.decode_s += now - t0
-        self.stats.decode_tokens += nsteps * len(active)
-        self.stats.slot_steps_active += nsteps * len(active)
+        self.stats.decode_tokens += nsteps * len(greedy)
+        self.stats.slot_steps_active += nsteps * len(greedy)
         self.stats.slot_steps_total += nsteps * self.num_slots
-        for j in active:
+        for j in greedy:
             r = self._slots[j]
             for i in range(nsteps):
                 tok = int(toks[i][j])
@@ -553,9 +757,13 @@ class Scheduler:
                 f"{self._bucket + r.sampling.max_new_tokens}")
         toks = np.zeros((1, self._bucket), np.int32)
         toks[0, self._bucket - plen:] = r.prompt  # left-pad
-        last_hidden, cache = self._run_prefill(jnp.asarray(toks))
-        logits = np.asarray(logits_from_hidden(self.params, last_hidden))
-        self._live = self._admit_jit(self._live, cache, slot)
+        if self.paged:
+            logits = self._admit_paged(toks, slot)
+        else:
+            last_hidden, cache = self._run_prefill(jnp.asarray(toks))
+            logits = np.asarray(
+                logits_from_hidden(self.params, last_hidden))
+            self._live = self._admit_jit(self._live, cache, slot)
         if self.decode_sla:
             self.stats.decode_plan_builds += self.cfg.num_layers
             self._stat_base[slot] = self._slot_counters(slot)
@@ -586,6 +794,132 @@ class Scheduler:
             self._plans, self.stats, self.cfg.num_layers)
         return last_hidden, cache
 
+    # -- paged KV internals (DESIGN.md "Paged KV & prefix caching") --------
+    def _page_keys(self, padded: np.ndarray) -> List[bytes]:
+        """One intern key per prompt page: the raw bytes of the padded
+        prompt up to that page's END. Causal attention over absolute
+        positions makes page j's KV rows and h/z partials a pure
+        function of the tokens below (j+1)*block_kv, so identical bytes
+        mean bitwise-identical page contents — across requests and even
+        across prefill buckets (the left-pad layout is part of the
+        bytes, so differently-padded prompts simply never match)."""
+        bkv = self.block
+        return [padded[:(j + 1) * bkv].tobytes()
+                for j in range(padded.size // bkv)]
+
+    def _push_pt(self):
+        """Publish the host-owned page table to the device cache. `pt`
+        is read-only inside every jitted decode/admit dispatch; the
+        scheduler owns it here and overwrites it between dispatches."""
+        self._live = dict(self._live)
+        self._live["pt"] = jnp.asarray(self._pt_host)
+
+    def _sync_page_stats(self):
+        ps, st = self._pool.stats, self.stats
+        st.pages_in_use = self._pool.in_use()
+        st.pages_peak = max(st.pages_peak, st.pages_in_use)
+        st.page_allocs = ps.allocs
+        st.prefix_hits = ps.prefix_hits
+        st.prefix_misses = ps.prefix_misses
+        st.cow_copies = ps.cow_copies
+
+    def _set_slot_pages(self, slot: int, pids: List[int]):
+        """Point `slot`'s page-table row at its prompt pages (one
+        pool ref each, already taken); the decode tail reads the
+        permanent zero page until the CoW pass privatizes it."""
+        npp = len(pids)
+        self._pt_host[slot, :npp] = pids
+        self._pt_host[slot, npp:] = self._zero_page
+        self._slot_pids[slot] = list(pids)
+        self._slot_base[slot] = self._bucket
+        self._push_pt()
+
+    def _admit_paged(self, toks: np.ndarray, slot: int) -> np.ndarray:
+        """Page-granular admission. Returns the first-token logits row.
+
+        Fast path: an exact (bucket, padded-prompt-bytes) snapshot hit
+        whose prompt pages are all still interned skips the prefill
+        dispatch entirely — the per-slot state and first-token logits
+        were cached when the prompt was first seen, and the pages
+        already hold its KV/partials. Otherwise one (1, bucket) prefill
+        runs as usual and each prompt page is interned by its prefix
+        bytes; pages that hit are REWRITTEN with byte-identical
+        contents, which keeps admission a single static-shape jit."""
+        padded = toks[0]
+        keys = self._page_keys(padded)
+        snap_key = (self._bucket, padded.tobytes())
+        snap = self._snapshots.get(snap_key)
+        if snap is not None:
+            pids, ok = [], True
+            for key in keys:
+                pid = self._pool.lookup(key)
+                if pid is None:  # a page was evicted since the snapshot
+                    ok = False
+                    break
+                pids.append(pid)
+            if ok:
+                self._snapshots.move_to_end(snap_key)
+                state, logits = snap
+                self._live = self._admit_state_jit(self._live, state,
+                                                   slot)
+                self._set_slot_pages(slot, pids)
+                self.stats.prefix_full_hits += 1
+                self._sync_page_stats()
+                return logits
+            for pid in pids:  # partial hit: hand the taken refs back
+                self._pool.release(pid)
+        last_hidden, cache = self._run_prefill(jnp.asarray(toks))
+        logits = np.asarray(logits_from_hidden(self.params, last_hidden))
+        pids = []
+        for key in keys:
+            pid = self._pool.lookup(key)
+            if pid is None:
+                pid = self._pool.alloc()
+                self._pool.intern(key, pid)
+            pids.append(pid)
+        self._live = self._admit_paged_jit(
+            self._live, cache, slot, jnp.asarray(pids, jnp.int32))
+        self._set_slot_pages(slot, pids)
+        self._snapshots[snap_key] = (
+            self.mdl.slot_state_from_prefill(cache), logits)
+        self._snapshots.move_to_end(snap_key)
+        while len(self._snapshots) > self._snapshot_cap:
+            self._snapshots.popitem(last=False)
+        self._sync_page_stats()
+        return logits
+
+    def _ensure_decode_pages(self, slot: int, nsteps: int):
+        """Copy-on-write pass before a decode dispatch: every page in
+        `slot`'s write range for the next `nsteps` tokens must be
+        private (refcount 1, not the zero page) before the jitted step
+        touches it. Fresh decode pages start as a copy of the permanent
+        zero page — the h/z partials ACCUMULATE into them, so a
+        recycled page must be cleaned; shared (prefix-interned or
+        CoW-shared) pages are duplicated on first divergent write."""
+        r = self._slots[slot]
+        pos = self._slot_base[slot] + len(r.tokens_out) - 1
+        bkv = self.block
+        tn = self._pt_host.shape[1]
+        first = min(pos // bkv, tn - 1)
+        last = min((pos + nsteps - 1) // bkv, tn - 1)
+        changed = False
+        for blk in range(first, last + 1):
+            pid = int(self._pt_host[slot, blk])
+            if pid != self._zero_page and self._pool.refs(pid) == 1:
+                continue  # already exclusively ours
+            new, src = self._pool.ensure_private(pid)
+            self._live = self._copy_page_jit(self._live, new, src)
+            own = self._slot_pids[slot]
+            if pid in own:
+                own[own.index(pid)] = new
+            else:
+                own.append(new)  # the zero page was never slot-owned
+            self._pt_host[slot, blk] = new
+            changed = True
+        if changed:
+            self._push_pt()
+            self._sync_page_stats()
+
     def _slot_counters(self, slot: int) -> dict:
         st = self._live["sla"]
         return {key: np.asarray(st[key][:, slot])
@@ -612,6 +946,17 @@ class Scheduler:
         r.state = RequestState.FINISHED
         r.metrics.finish_t = now
         self._slots[slot] = None
+        if self.paged:
+            # drop this slot's page refs (interned prefix pages stay
+            # resident under the index's own ref until LRU-evicted) and
+            # point the row back at the pinned scratch page so the
+            # now-idle slot's garbage writes land somewhere harmless
+            for pid in self._slot_pids[slot]:
+                self._pool.release(pid)
+            self._slot_pids[slot] = []
+            self._pt_host[slot, :] = self._scratch[slot]
+            self._push_pt()
+            self._sync_page_stats()
         if self.decode_sla and self._stat_base[slot] is not None:
             base, cur = self._stat_base[slot], self._slot_counters(slot)
             self.stats.decode_plan_extends += int(

@@ -71,7 +71,9 @@ class ServingEngine:
                  max_len: int = 512, greedy: bool = True,
                  backend: str = "gather", plan_reuse: str = "off",
                  drift_threshold=None, decode_sla: bool = False,
-                 scheduler: str = "static"):
+                 scheduler: str = "static",
+                 paged: Optional[bool] = None,
+                 pool_pages: Optional[int] = None):
         from repro.core import backends as backend_registry
         backend = backend_registry.resolve(backend)  # fail loudly, early
         cfg.sla.validate()
@@ -83,6 +85,14 @@ class ServingEngine:
             raise ValueError(
                 f"unknown scheduler {scheduler!r}; expected 'static' or "
                 "'continuous'")
+        if paged is None:
+            paged = cfg.sla.paged
+        if paged and scheduler != "continuous":
+            raise ValueError(
+                "paged KV caching requires the continuous-batching "
+                "scheduler (the static engine decodes group-local "
+                "caches; there is no shared pool to page)")
+        self.paged = paged
         self.cfg = cfg
         self.params = params
         self.mdl = registry.get_model(cfg)
@@ -112,7 +122,8 @@ class ServingEngine:
             self._sched = Scheduler(
                 cfg, params, num_slots=batch_size, max_len=max_len,
                 backend=backend, decode_sla=self.decode_sla,
-                plan_reuse=plan_reuse, drift_threshold=drift_threshold)
+                plan_reuse=plan_reuse, drift_threshold=drift_threshold,
+                paged=paged, pool_pages=pool_pages)
             self._sched.stats = self.stats
             return
 
@@ -174,18 +185,33 @@ class ServingEngine:
         self._decode = _decode
         self._decode_loop = _decode_loop
 
+    # cache leaves _grow_cache knows how to handle: "k"/"v" are the
+    # (L, B, H, S, D) KV slabs padded along their sequence axis; the
+    # rest pass through untouched. Keyed by NAME, not rank — a rank
+    # test ("leaf.ndim == 5") would silently zero-pad any future
+    # rank-5 leaf as if it were KV (or skip a reshaped KV leaf).
+    _GROW_KV_KEYS = ("k", "v")
+    _GROW_PASS_KEYS = ("pos", "sla")
+
     def _grow_cache(self, cache):
         """Pad the prefill cache out to max_len decode slots."""
-        def pad(path_unused, leaf):
-            if hasattr(leaf, "ndim") and leaf.ndim == 5:
-                # (L, B, H, S, D) kv cache
+        grown = {}
+        for key, leaf in cache.items():
+            if key in self._GROW_KV_KEYS:
                 extra = self.max_len - leaf.shape[3]
                 if extra > 0:
-                    pad_blk = jnp.zeros(leaf.shape[:3] + (extra,)
-                                        + leaf.shape[4:], leaf.dtype)
-                    return jnp.concatenate([leaf, pad_blk], axis=3)
-            return leaf
-        return jax.tree_util.tree_map_with_path(pad, cache)
+                    pad = [(0, 0)] * 3 + [(0, extra), (0, 0)]
+                    leaf = jnp.pad(leaf, pad)
+                grown[key] = leaf
+            elif key in self._GROW_PASS_KEYS:
+                grown[key] = leaf
+            else:
+                raise ValueError(
+                    f"_grow_cache: unknown cache leaf {key!r} — add it "
+                    f"to _GROW_KV_KEYS (sequence-padded KV) or "
+                    f"_GROW_PASS_KEYS (passed through) so it cannot be "
+                    f"silently mis-padded")
+        return grown
 
     def _prefill_bucket(self, requests: List[Request]) -> int:
         """Static prefill length shared by every chunk (plan-reuse mode):

@@ -1,0 +1,105 @@
+"""Benchmark-artifact honesty guards (ISSUE 7 satellite).
+
+BENCH_decode.json's acceptance booleans must be recomputed from EXACTLY
+the cells their names point at. An earlier revision computed
+`kernel_beats_gather_32k` from the model-level cells while the name
+(and the cells it shipped next to) said attention-level: the JSON
+reported `true` over cells showing sla_kernel 67.33us vs sla_gather
+55.88us. These tests pin every boolean to its source cells so a
+payload edit (or a renamed metric) cannot drift them apart again.
+"""
+import json
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH = ROOT / "BENCH_decode.json"
+
+
+def _payload():
+    if not BENCH.exists():
+        pytest.skip("BENCH_decode.json not generated")
+    return json.loads(BENCH.read_text())
+
+
+def test_acceptance_matches_recompute():
+    """The stored acceptance block is byte-for-byte what
+    recompute_acceptance derives from the stored cells."""
+    from benchmarks.fig_decode import recompute_acceptance
+
+    payload = _payload()
+    assert payload["acceptance"] == recompute_acceptance(payload)
+
+
+def test_each_boolean_reads_its_named_cells():
+    """Independent spelling of each boolean's defining inequality,
+    straight off the cells — catches a recompute_acceptance that
+    quietly changes which cells a name points at."""
+    payload = _payload()
+    acc, cells = payload["acceptance"], payload["cells"]
+    assert acc["kernel_beats_gather_32k"] == (
+        cells["32768"]["sla_kernel"]["per_token_us"]
+        < cells["32768"]["sla_gather"]["per_token_us"])
+    assert acc["sla_beats_dense_32k"] == all(
+        cells[str(n)]["dense"]["per_token_us"]
+        > cells[str(n)]["sla_gather"]["per_token_us"]
+        for n in payload["config"]["contexts"] if int(n) >= 32768)
+    top = str(max(int(c) for c in payload["config"]["model_contexts"]))
+    mk = payload["model_cells"][top]
+    assert acc["model_chunk_beats_step_32k"] == (
+        mk["chunk_kernel"]["per_token_us"]
+        < mk["step_gather"]["per_token_us"])
+
+
+def test_recompute_acceptance_is_honest_on_synthetic_cells():
+    """recompute_acceptance on a hand-built payload where the kernel
+    LOSES at the attention level but WINS at the model level — the
+    exact shape of the original bug — reports both truths separately."""
+    from benchmarks.fig_decode import recompute_acceptance
+
+    def cell(us):
+        return {"compile_s": 0.0, "per_token_us": us}
+
+    payload = {
+        "config": {"contexts": [8192, 32768],
+                   "model_contexts": [8192, 32768]},
+        "cells": {
+            "8192": {"dense": cell(100.0), "sla_gather": cell(50.0),
+                     "sla_kernel": cell(60.0)},
+            "32768": {"dense": cell(400.0), "sla_gather": cell(55.0),
+                      "sla_kernel": cell(67.0)},
+        },
+        "model_cells": {
+            "8192": {"step_gather": cell(200.0),
+                     "chunk_kernel": cell(30.0)},
+            "32768": {"step_gather": cell(260.0),
+                      "chunk_kernel": cell(28.0)},
+        },
+    }
+    acc = recompute_acceptance(payload)
+    assert acc["sla_beats_dense_32k"] is True
+    assert acc["kernel_beats_gather_32k"] is False  # 67 > 55
+    assert acc["model_chunk_beats_step_32k"] is True  # 28 < 260
+
+
+SERVING = ROOT / "BENCH_serving.json"
+
+
+def test_serving_acceptance_matches_recompute():
+    """BENCH_serving.json obeys the same honesty contract: stored
+    acceptance == recompute from the stored cells, and each boolean's
+    inequality re-derives from the cells it names."""
+    from benchmarks.fig_serving import recompute_acceptance
+
+    if not SERVING.exists():
+        pytest.skip("BENCH_serving.json not generated")
+    payload = json.loads(SERVING.read_text())
+    acc = payload["acceptance"]
+    assert acc == recompute_acceptance(payload)
+    assert acc["shared_prefix_saves_pages"] == (
+        payload["paged"]["shared_prefix"]["page_allocs"]
+        < payload["paged"]["unique_prompts"]["page_allocs"])
+    assert acc["continuous_beats_static_occupancy"] == (
+        payload["paths"]["continuous"]["occupancy"]
+        > payload["paths"]["static"]["occupancy"])

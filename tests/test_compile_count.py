@@ -148,3 +148,38 @@ def test_scheduler_drain_traces_once_across_budgets(monkeypatch):
                  .astype(np.int32), SamplingParams(max_new_tokens=13))
     sched.drain()
     assert len(calls) == first  # same executable, third horizon
+
+
+def test_scheduler_mixed_drain_traces_constant(monkeypatch):
+    """Mixed drains (sampling + greedy slots) partition into the masked
+    single-step path for controlled slots plus the masked rolled loop
+    for greedy slots — at most 3 traces of decode_step total
+    (_decode_mask, _decode_multi_mask, _decode_multi), and NO retraces
+    on a second mixed drain with different budgets. The old _drain_tick
+    dropped EVERY slot to per-token step() whenever any active slot
+    sampled."""
+    cfg = _llm_cfg()
+    params = _llm_params(cfg)
+    calls = []
+    monkeypatch.setattr(tfm, "decode_step", _counted_decode_step(calls))
+    sched = Scheduler(cfg, params, num_slots=2, max_len=96)
+    rng = np.random.default_rng(2)
+
+    def load(sample_budget, greedy_budget):
+        sched.submit(rng.integers(0, cfg.vocab_size, size=32)
+                     .astype(np.int32),
+                     SamplingParams(max_new_tokens=sample_budget,
+                                    temperature=0.8, seed=7))
+        sched.submit(rng.integers(0, cfg.vocab_size, size=32)
+                     .astype(np.int32),
+                     SamplingParams(max_new_tokens=greedy_budget))
+
+    load(3, 8)
+    reqs = sched.drain()
+    assert all(len(r.tokens_out) == r.sampling.max_new_tokens
+               for r in reqs)
+    first = len(calls)
+    assert first <= 3, first
+    load(5, 16)
+    sched.drain()
+    assert len(calls) == first  # same executables at new horizons

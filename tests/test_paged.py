@@ -1,0 +1,418 @@
+"""Paged KV cache + copy-on-write prefix sharing (ISSUE 7 tentpole).
+
+Pillars:
+  * PagePool — refcount/intern/LRU-eviction/exhaustion unit behavior
+    (host bookkeeping only; never touches device memory);
+  * device-level bitwise parity — a paged cache driven through
+    decode_step produces logits bitwise equal to the monolithic
+    per-slot cache, for every SLA decode backend (gather / reference /
+    fused kernel) AND dense decode, with an inactive scratch-backed
+    slot riding along;
+  * scheduler-level parity matrix — greedy tokens from the paged
+    Scheduler bitwise-match the unpaged Scheduler under decode-SLA
+    on/off, staggered arrivals, and slot turnover, with full
+    cache-leaf equality (via paged_dense_view) checked at every step;
+  * CoW prefix sharing — requests with a common prompt prefix share
+    physical prefix pages (refs >= 2) that stay bitwise identical,
+    while their decode pages diverge onto private CoW copies; page
+    allocations scale O(prefix + sum(unique suffixes));
+  * exhaustion — a pool too small for its workload raises
+    PagePoolExhausted instead of silently recycling referenced pages.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import transformer as tfm
+from repro.serving.api import SamplingParams, Scheduler
+from repro.serving.pages import (PagePool, PagePoolExhausted, ZERO_PAGE)
+
+
+def _arch(kh=0.25, decode=True):
+    cfg = get_arch("qwen3-1.7b").smoke()
+    sla = cfg.sla.replace(kh_frac=kh, kl_frac=0.0)
+    if decode:
+        sla = sla.replace(decode_mode="sla")
+    return dataclasses.replace(cfg, sla=sla)
+
+
+def _params(cfg):
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    params["layers"]["sla_proj"] = jax.random.normal(
+        jax.random.PRNGKey(7), params["layers"]["sla_proj"].shape) * 0.3
+    return params
+
+
+def _prompts(cfg, lens, seed=0, prefix=0):
+    """`prefix` > 0 gives every prompt the same leading tokens."""
+    rs = np.random.default_rng(seed)
+    shared = rs.integers(0, cfg.vocab_size, size=prefix).astype(np.int32)
+    out = []
+    for n in lens:
+        p = rs.integers(0, cfg.vocab_size, size=n - prefix) \
+            .astype(np.int32)
+        out.append(np.concatenate([shared, p]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PagePool unit behavior
+# ---------------------------------------------------------------------------
+def test_pool_alloc_release_refcounts():
+    pool = PagePool(4)
+    assert pool.refs(ZERO_PAGE) == 1  # permanently pinned
+    a, b = pool.alloc(), pool.alloc()
+    assert a != b and ZERO_PAGE not in (a, b)
+    assert pool.refs(a) == pool.refs(b) == 1
+    assert pool.in_use() == 3
+    pool.retain(a)
+    pool.release(a)
+    assert pool.refs(a) == 1  # still held
+    pool.release(a)
+    assert pool.refs(a) == 0 and pool.free_pages() == 2
+    with pytest.raises(ValueError, match="unreferenced"):
+        pool.release(a)
+    with pytest.raises(ValueError, match="unreferenced"):
+        pool.retain(a)
+    pool.release(ZERO_PAGE)  # no-op, never freed
+    assert pool.refs(ZERO_PAGE) == 1
+    with pytest.raises(ValueError, match=">= 2"):
+        PagePool(1)
+
+
+def test_pool_intern_lookup_and_lru_eviction():
+    pool = PagePool(3)  # zero page + 2
+    a = pool.alloc()
+    pool.intern(b"key-a", a)
+    assert pool.refs(a) == 2  # caller + index
+    hit = pool.lookup(b"key-a")
+    assert hit == a and pool.refs(a) == 3
+    assert pool.lookup(b"missing") is None
+    assert pool.stats.prefix_hits == 1 and pool.stats.prefix_misses == 1
+    pool.release(a)  # lookup's ref
+    pool.release(a)  # original ref -> index-only, LRU-evictable
+    assert pool.refs(a) == 1
+    b2 = pool.alloc()          # takes the last free page
+    c = pool.alloc()           # must EVICT the index-only page a
+    assert c == a and pool.stats.evictions == 1
+    assert pool.lookup(b"key-a") is None  # evicted from the index
+    assert pool.refs(b2) == pool.refs(c) == 1
+
+
+def test_pool_exhaustion_fails_loudly():
+    pool = PagePool(3)
+    a = pool.alloc()
+    pool.alloc()
+    pool.intern(b"a", a)  # interned but still caller-referenced
+    with pytest.raises(PagePoolExhausted, match="exhausted"):
+        pool.alloc()
+
+
+def test_pool_ensure_private_cow():
+    pool = PagePool(5)
+    a = pool.alloc()
+    same, src = pool.ensure_private(a)
+    assert same == a and src is None  # already exclusive
+    pool.retain(a)  # now shared
+    new, src = pool.ensure_private(a)
+    assert new != a and src == a
+    assert pool.refs(a) == 1 and pool.refs(new) == 1
+    assert pool.stats.cow_copies == 1
+    # the zero page is shared by construction: always copies
+    fresh, src = pool.ensure_private(ZERO_PAGE)
+    assert src == ZERO_PAGE and fresh not in (ZERO_PAGE, a, new)
+    assert pool.refs(ZERO_PAGE) == 1  # release of zero page is a no-op
+
+
+# ---------------------------------------------------------------------------
+# device-level bitwise parity (all decode backends + dense)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["gather", "reference", "kernel"])
+def test_paged_decode_bitwise_matches_monolithic(backend):
+    """3 decode steps over one active slot (2 prompt pages + a decode
+    page) and one inactive scratch-backed slot: logits bitwise equal to
+    the monolithic per-slot cache, the zero page stays zero, and the
+    inactive slot's garbage lands only in its scratch page."""
+    cfg = _arch()
+    params = _params(cfg)
+    rs = np.random.default_rng(0)
+    prompt = rs.integers(0, cfg.vocab_size, size=(1, 32)).astype(np.int32)
+    _, single = tfm.prefill(params, cfg, jnp.asarray(prompt),
+                            decode_max_len=96)
+
+    mono = tfm.make_cache(cfg, 2, 96, decode_sla=True, per_slot=True)
+    mono = tfm.insert_slot(mono, single, 0)
+    paged = tfm.make_paged_cache(cfg, 2, 96, 20, decode_sla=True)
+    paged = tfm.insert_slot_paged(paged, single, 0, jnp.asarray([3, 4]))
+    pt = np.zeros((2, 6), np.int32)
+    pt[0] = [3, 4, 5, 0, 0, 0]  # prompt pages + private decode page
+    pt[1] = 2                   # inactive slot -> scratch page
+    paged["pt"] = jnp.asarray(pt)
+
+    tok = jnp.asarray([7, 11], jnp.int32)
+    m, p = mono, paged
+    for i in range(3):
+        lm, m = tfm.decode_step(params, cfg, tok, m, backend=backend)
+        lp, p = tfm.decode_step(params, cfg, tok, p, backend=backend)
+        np.testing.assert_array_equal(np.asarray(lm[0]),
+                                      np.asarray(lp[0]), err_msg=str(i))
+    # zero page untouched; slot-1 garbage confined to its scratch page
+    assert not np.asarray(p["kp"][:, 0]).any()
+    assert not np.asarray(p["slap"]["hblk"][:, 0]).any()
+    assert np.asarray(p["kp"][:, 2]).any()  # scratch absorbed the writes
+    # full cache-leaf equality through the dense view
+    view = tfm.paged_dense_view(cfg, p)
+    for key in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(m[key][:, 0, :, :35]),
+                                      np.asarray(view[key][:, 0, :, :35]),
+                                      err_msg=key)
+    for key in ("hblk", "zblk", "kpool", "htot", "ztot"):
+        np.testing.assert_array_equal(np.asarray(m["sla"][key][:, 0]),
+                                      np.asarray(view["sla"][key][:, 0]),
+                                      err_msg=key)
+
+
+def test_paged_dense_decode_bitwise():
+    """Same parity for plain dense decode (no SLA state at all)."""
+    cfg = _arch(decode=False)
+    params = _params(cfg)
+    rs = np.random.default_rng(0)
+    prompt = rs.integers(0, cfg.vocab_size, size=(1, 32)).astype(np.int32)
+    _, single = tfm.prefill(params, cfg, jnp.asarray(prompt))
+    mono = tfm.make_cache(cfg, 2, 96, decode_sla=False, per_slot=True)
+    pad = 96 - single["k"].shape[-2]
+    grown = dict(single,
+                 k=jnp.pad(single["k"], [(0, 0)] * 3 + [(0, pad), (0, 0)]),
+                 v=jnp.pad(single["v"], [(0, 0)] * 3 + [(0, pad), (0, 0)]))
+    mono = tfm.insert_slot(mono, grown, 0)
+    paged = tfm.make_paged_cache(cfg, 2, 96, 20, decode_sla=False)
+    paged = tfm.insert_slot_paged(paged, single, 0, jnp.asarray([3, 4]))
+    pt = np.zeros((2, 6), np.int32)
+    pt[0] = [3, 4, 5, 0, 0, 0]
+    pt[1] = 2
+    paged["pt"] = jnp.asarray(pt)
+    tok = jnp.asarray([7, 11], jnp.int32)
+    m, p = mono, paged
+    for i in range(3):
+        lm, m = tfm.decode_step(params, cfg, tok, m)
+        lp, p = tfm.decode_step(params, cfg, tok, p)
+        np.testing.assert_array_equal(np.asarray(lm[0]),
+                                      np.asarray(lp[0]), err_msg=str(i))
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level parity matrix (paged vs unpaged, leaf equality)
+# ---------------------------------------------------------------------------
+def _compare_active_slots(cfg, un, pg):
+    """Bitwise cache-leaf equality for every slot active in both."""
+    view = tfm.paged_dense_view(cfg, pg._live)
+    for j in range(un.num_slots):
+        if un._slots[j] is None or pg._slots[j] is None:
+            continue
+        assert un._slots[j].rid == pg._slots[j].rid
+        np.testing.assert_array_equal(
+            np.asarray(un._live["pos"][j]), np.asarray(pg._live["pos"][j]))
+        for key in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(un._live[key][:, j]),
+                np.asarray(view[key][:, j]), err_msg=f"slot {j} {key}")
+        if "sla" not in un._live:
+            continue
+        a, b = un._live["sla"], view["sla"]
+        for key in ("hblk", "zblk", "kpool", "htot", "ztot", "qpool",
+                    "live_lut", "live_cnt", "live_marg"):
+            np.testing.assert_array_equal(
+                np.asarray(a[key][:, j]), np.asarray(b[key][:, j]),
+                err_msg=f"slot {j} {key}")
+        np.testing.assert_array_equal(np.asarray(a["rows"][j]),
+                                      np.asarray(b["rows"][j]))
+        np.testing.assert_array_equal(np.asarray(a["plan"].mc[:, j]),
+                                      np.asarray(b["plan"].mc[:, j]))
+
+
+@pytest.mark.parametrize("decode_sla", [False, True])
+def test_paged_scheduler_parity_matrix(decode_sla):
+    """Greedy tokens AND per-step cache leaves bitwise-match the
+    unpaged Scheduler: staggered arrivals, heterogeneous budgets, slot
+    turnover (4 requests through 2 slots), decode-SLA on/off."""
+    cfg = _arch(decode=decode_sla)
+    params = _params(cfg)
+    prompts = _prompts(cfg, lens=(32, 20, 32, 24), prefix=16)
+    budgets = (6, 10, 4, 8)
+    kw = dict(num_slots=2, max_len=96, prefill_bucket=32,
+              decode_sla=decode_sla)
+    un = Scheduler(cfg, params, paged=False, **kw)
+    pg = Scheduler(cfg, params, paged=True, **kw)
+    for s in (un, pg):
+        for p, b in zip(prompts[:2], budgets[:2]):
+            s.submit(p, SamplingParams(max_new_tokens=b))
+    steps = 0
+    while un.has_work or pg.has_work:
+        un.step()
+        pg.step()
+        _compare_active_slots(cfg, un, pg)
+        steps += 1
+        if steps == 3:  # staggered arrivals, mid-flight
+            for s in (un, pg):
+                for p, b in zip(prompts[2:], budgets[2:]):
+                    s.submit(p, SamplingParams(max_new_tokens=b))
+    a, b = un.drain(), pg.drain()
+    assert len(a) == len(b) == 4
+    for ra, rb in zip(a, b):
+        assert ra.tokens_out == rb.tokens_out, f"rid {ra.rid}"
+    assert pg.stats.admissions > pg.num_slots  # slots turned over
+    assert pg.stats.pages_peak > 0
+    assert pg.stats.prefix_hits > 0  # 16-token shared prefix = 1 page
+
+
+def test_paged_drain_parity_rolled_path():
+    """drain()'s rolled multi-step dispatch (not per-token step()) also
+    matches unpaged token-for-token."""
+    cfg = _arch(decode=True)
+    params = _params(cfg)
+    prompts = _prompts(cfg, lens=(32, 20, 32), prefix=0)
+    budgets = (6, 9, 5)
+
+    def run(paged):
+        s = Scheduler(cfg, params, num_slots=2, max_len=96,
+                      prefill_bucket=32, decode_sla=True, paged=paged)
+        for p, b in zip(prompts, budgets):
+            s.submit(p, SamplingParams(max_new_tokens=b))
+        return [list(r.tokens_out) for r in s.drain()]
+
+    assert run(False) == run(True)
+
+
+def test_paged_full_prompt_snapshot_skips_prefill():
+    """Identical prompts: the second admission is a full-prompt
+    snapshot hit (no prefill dispatch) and still decodes the same
+    greedy tokens."""
+    cfg = _arch(decode=True)
+    params = _params(cfg)
+    prompt = _prompts(cfg, lens=(32,))[0]
+    sched = Scheduler(cfg, params, num_slots=1, max_len=96,
+                      prefill_bucket=32, decode_sla=True, paged=True)
+    for _ in range(3):
+        sched.submit(prompt, SamplingParams(max_new_tokens=5))
+    done = sched.drain()
+    toks = [list(r.tokens_out) for r in done]
+    assert toks[0] == toks[1] == toks[2]
+    assert sched.stats.prefix_full_hits == 2  # admissions 2 and 3
+
+
+# ---------------------------------------------------------------------------
+# CoW prefix sharing
+# ---------------------------------------------------------------------------
+def test_cow_divergence_after_shared_prefix():
+    """Two concurrent requests sharing a 32-token prompt prefix: the
+    prefix pages are physically shared (refs >= 2, one table entry
+    each), bitwise identical between the slots' views, and the decode
+    pages they diverge onto are private CoW copies with different
+    contents."""
+    cfg = _arch(decode=True)
+    params = _params(cfg)
+    prompts = _prompts(cfg, lens=(48, 48), prefix=32)
+    sched = Scheduler(cfg, params, num_slots=2, max_len=96,
+                      prefill_bucket=48, decode_sla=True, paged=True)
+    for p in prompts:
+        sched.submit(p, SamplingParams(max_new_tokens=8))
+    for _ in range(4):  # admit both + a few decode steps, still active
+        sched.step()
+    pt = sched._pt_host
+    bkv = cfg.sla.block_kv
+    npp = 48 // bkv
+    # prefix pages (2 full blocks of the shared 32 tokens) are SHARED
+    assert pt[0, 0] == pt[1, 0] and pt[0, 1] == pt[1, 1]
+    for blk in (0, 1):
+        assert sched._pool.refs(int(pt[0, blk])) >= 2
+    # the unique-suffix prompt page and the decode page are private
+    assert pt[0, 2] != pt[1, 2]
+    assert pt[0, npp] != pt[1, npp] != ZERO_PAGE
+    assert sched.stats.cow_copies >= 2  # one privatized decode page each
+    view = tfm.paged_dense_view(cfg, sched._live)
+    k = np.asarray(view["k"])
+    # shared prefix rows bitwise equal across slots; divergent decode
+    # rows differ (different suffixes -> different tokens -> different KV)
+    np.testing.assert_array_equal(k[:, 0, :, :2 * bkv], k[:, 1, :, :2 * bkv])
+    assert not np.array_equal(k[:, 0, :, 2 * bkv:3 * bkv],
+                              k[:, 1, :, 2 * bkv:3 * bkv])
+    sched.drain()
+    # finish released the slots' refs; interned pages persist index-only
+    assert all(r is None for r in sched._slots)
+    for blk in (0, 1):
+        assert sched._pool.refs(int(pt[0, blk])) == 1
+
+
+def test_shared_prefix_saves_pages():
+    """Acceptance: N requests with a common prefix allocate
+    O(prefix + sum(unique suffixes)) pages — strictly fewer than N
+    unique prompts of the same lengths."""
+    cfg = _arch(decode=True)
+    params = _params(cfg)
+    bkv = cfg.sla.block_kv
+
+    def allocs(prefix):
+        prompts = _prompts(cfg, lens=(48,) * 4, prefix=prefix, seed=3)
+        s = Scheduler(cfg, params, num_slots=2, max_len=96,
+                      prefill_bucket=48, decode_sla=True, paged=True)
+        for p in prompts:
+            s.submit(p, SamplingParams(max_new_tokens=4))
+        s.drain()
+        return s.stats.page_allocs, s.stats
+
+    shared, st = allocs(prefix=32)
+    unique, _ = allocs(prefix=0)
+    # shared: 2 scratch + 2 prefix pages + 4 * (1 suffix + 1 decode)
+    assert shared == 2 + 32 // bkv + 4 * 2
+    # unique: same minus sharing -> every prompt pays all 3 pages
+    assert unique == 2 + 4 * (3 + 1)
+    assert shared < unique
+    assert st.prefix_hits >= 2 * 3  # prefix pages hit by requests 2..4
+
+
+def test_page_pool_exhaustion_fails_loudly():
+    """A pool with no room for a single request's decode page raises
+    PagePoolExhausted (interned prompt pages referenced by the live
+    slot are NOT evictable) instead of corrupting a referenced page."""
+    cfg = _arch(decode=True)
+    params = _params(cfg)
+    prompt = _prompts(cfg, lens=(32,))[0]
+    # 4 pages: zero + scratch + exactly the 2 prompt pages -> the first
+    # decode-page privatization has nothing to allocate
+    sched = Scheduler(cfg, params, num_slots=1, max_len=96,
+                      prefill_bucket=32, decode_sla=True, paged=True,
+                      pool_pages=4)
+    sched.submit(prompt, SamplingParams(max_new_tokens=4))
+    with pytest.raises(PagePoolExhausted):
+        sched.drain()
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+def test_paged_rejects_adaptive_plan_reuse():
+    cfg = _arch(decode=True)
+    with pytest.raises(ValueError, match="adaptive"):
+        Scheduler(cfg, params=None, paged=True, plan_reuse="adaptive")
+
+
+def test_paged_requires_continuous_scheduler():
+    from repro.serving.engine import ServingEngine
+
+    cfg = _arch(decode=True)
+    with pytest.raises(ValueError, match="continuous"):
+        ServingEngine(cfg, params=None, scheduler="static", paged=True)
+
+
+def test_paged_config_knobs_validate():
+    from repro.core import SLAConfig
+
+    with pytest.raises(ValueError, match="page_pool_size"):
+        SLAConfig(page_pool_size=1).validate()
+    with pytest.raises(ValueError, match="block"):
+        SLAConfig(paged=True, block_q=32, block_kv=64).validate()
+    SLAConfig(paged=True, page_pool_size=8).validate()

@@ -416,3 +416,67 @@ def test_validate_called_at_entry_points():
     q = jnp.zeros((1, 2, 32, 16))
     with pytest.raises(ValueError, match="mode"):
         plan_attention(q, q, bad.sla)
+
+
+def test_request_metrics_unset_return_none():
+    """Derived metrics are None until their gating event happens —
+    clamping to 0.0 silently reported in-flight requests as
+    instantaneous (the ISSUE 7 latency bug)."""
+    from repro.serving.api import RequestMetrics
+
+    m = RequestMetrics(submit_t=100.0)
+    assert m.queue_s is None
+    assert m.ttft_s is None
+    assert m.latency_s is None
+    m.admit_t = 100.5
+    assert m.queue_s == pytest.approx(0.5)
+    assert m.ttft_s is None and m.latency_s is None
+    m.first_token_t = 101.0
+    assert m.ttft_s == pytest.approx(1.0)
+    assert m.latency_s is None  # still decoding: NOT 0.0
+    m.finish_t = 103.0
+    assert m.latency_s == pytest.approx(3.0)
+
+
+def test_scheduler_inflight_metrics_are_none():
+    """A decoding request has ttft_s but no latency_s; a queued request
+    has neither."""
+    cfg = _arch()
+    params = _params(cfg)
+    prompts = _prompts(cfg, lens=(32, 24))
+    sched = Scheduler(cfg, params, num_slots=1, max_len=96,
+                      prefill_bucket=32)
+    for p in prompts:
+        sched.submit(p, SamplingParams(max_new_tokens=8))
+    sched.step()  # admits request 0, decodes one token
+    decoding, queued = sched._requests
+    assert decoding.metrics.queue_s is not None
+    assert decoding.metrics.ttft_s is not None
+    assert decoding.metrics.latency_s is None
+    assert queued.metrics.queue_s is None
+    assert queued.metrics.ttft_s is None
+    assert queued.metrics.latency_s is None
+    done = sched.drain()
+    assert all(r.metrics.latency_s >= r.metrics.ttft_s > 0.0
+               for r in done)
+
+
+def test_grow_cache_is_name_keyed():
+    """_grow_cache pads exactly the leaves it names: k/v grow along the
+    sequence axis with content preserved, pos passes through, and an
+    UNKNOWN leaf — even one with the rank-5 shape of a KV slab — fails
+    loudly instead of being silently zero-padded (the old `ndim == 5`
+    rank test did exactly that)."""
+    cfg = _arch()
+    params = _params(cfg)
+    eng = ServingEngine(cfg, params, batch_size=1, max_len=64)
+    toks = jnp.asarray(_prompts(cfg, lens=(32,))[0])[None]
+    _, cache = tfm.prefill(params, cfg, toks)
+    grown = eng._grow_cache(cache)
+    assert grown["k"].shape[3] == 64 and grown["v"].shape[3] == 64
+    np.testing.assert_array_equal(np.asarray(grown["k"][..., :32, :]),
+                                  np.asarray(cache["k"]))
+    assert grown["pos"] is cache["pos"]
+    cache["stats5d"] = jnp.zeros(cache["k"].shape)  # rank-5 impostor
+    with pytest.raises(ValueError, match="stats5d"):
+        eng._grow_cache(cache)
