@@ -10,6 +10,7 @@
 #   scripts/ci.sh --routing       # learned-routing parity + gradient suite
 #   scripts/ci.sh --serve         # serving API v2: scheduler parity suite
 #   scripts/ci.sh --paged         # paged KV + CoW prefix sharing suite
+#   scripts/ci.sh --chunked-prefill # chunked admission prefill suite
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -85,6 +86,29 @@ if [[ "${1:-}" == "--paged" ]]; then
     echo "=== paged KV (serve CLI smoke) ==="
     python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --scheduler continuous --paged --requests 4 --max-new 8
+    exit 0
+fi
+
+if [[ "${1:-}" == "--chunked-prefill" ]]; then
+    # Chunked admission prefill (DESIGN.md "Chunked admission
+    # prefill"): the bitwise chunked-vs-blocking parity matrix
+    # (tokens + cache leaves, gather/kernel x decode-SLA on/off),
+    # decode/chunk event interleaving, carry-resume at chunk-aligned
+    # shared prefixes, the traced-offset compile-count guard, the
+    # snapshot-hit counter invariants, and the nearest-rank percentile
+    # fix; then the stall-trace benchmark regenerates
+    # BENCH_serving.json and the honesty guards re-check it.
+    echo "=== chunked prefill (parity + interleaving + counters) ==="
+    "${PYTEST[@]}" -x -k "chunked or percentile or snapshot" \
+        tests/test_serving.py tests/test_paged.py
+    echo "=== chunked prefill (stall-trace benchmark) ==="
+    PYTHONPATH="src:." python benchmarks/fig_serving.py
+    echo "=== chunked prefill (benchmark honesty guards) ==="
+    "${PYTEST[@]}" -x tests/test_benchmarks.py
+    echo "=== chunked prefill (serve CLI smoke) ==="
+    python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --scheduler continuous --paged --prefill-chunk 1 \
+        --requests 3 --prompt-len 32 --max-new 4
     exit 0
 fi
 

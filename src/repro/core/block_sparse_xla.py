@@ -82,8 +82,16 @@ def sparse_component_gather(
     q: jax.Array, k: jax.Array, v: jax.Array,
     lut: jax.Array, counts: jax.Array, cfg: SLAConfig,
     scale: float | None = None, chunk: int = 8,
+    row_offset=0,
 ) -> Tuple[jax.Array, jax.Array]:
     """O^s via LUT gather. q,k,v: (B, H, N, D); lut: (B, H, Tm, K).
+
+    `row_offset` (python int or traced int32 scalar) shifts the
+    absolute query-row-block ids used by the causal mask: chunked
+    prefill attends a (N = chunk) query span starting at block
+    `row_offset` against the full KV bucket, and a TRACED offset keeps
+    every chunk index on one compiled graph (DESIGN.md "Chunked
+    admission prefill").
 
     Returns (o_s (B, H, N, D) f32, lse (B, H, N) f32).
     """
@@ -112,7 +120,7 @@ def sparse_component_gather(
                             bq, bkv)
         return None, (o, lse)
 
-    i0s = jnp.arange(tm).reshape(tm // chunk, chunk)
+    i0s = (row_offset + jnp.arange(tm)).reshape(tm // chunk, chunk)
     _, (o, lse) = jax.lax.scan(
         body, None,
         (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(lutc, 2, 0),
@@ -125,15 +133,17 @@ def sparse_component_gather(
 def sla_forward_gather(
     q: jax.Array, k: jax.Array, v: jax.Array,
     qp: jax.Array, kp: jax.Array, plan: SLAPlan, cfg: SLAConfig,
-    scale: float | None = None, chunk: int = 8,
+    scale: float | None = None, chunk: int = 8, row_offset=0,
 ) -> Tuple[jax.Array, jax.Array]:
     """(O^s, O^l) with gather-based sparse part and matmul-aggregated
     linear part. The block structure (row LUT + marginal aggregation
-    matrix) comes from the precomputed `plan`. Shapes: (B, H, N, D)."""
+    matrix) comes from the precomputed `plan`. Shapes: (B, H, N, D).
+    `row_offset` as in `sparse_component_gather` (the plan's row axis
+    then covers only the chunk's query blocks)."""
     b, h, n, d = q.shape
     tn = plan.num_kv_blocks
     o_s, _ = sparse_component_gather(q, k, v, plan.lut, plan.counts, cfg,
-                                     scale, chunk)
+                                     scale, chunk, row_offset)
 
     kpb = kp.astype(jnp.float32).reshape(b, h, tn, cfg.block_kv, d)
     vb = v.astype(jnp.float32).reshape(b, h, tn, cfg.block_kv, d)

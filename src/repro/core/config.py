@@ -110,6 +110,11 @@ class SLAConfig:
     page_pool_size: Optional[int] = None  # total physical pages in the pool
     #                      (incl. the zero page and per-slot scratch pages);
     #                      None derives a safe default from num_slots*max_len.
+    prefill_chunk_blocks: Optional[int] = None  # serving: admission prefill
+    #                      advances this many block_q-sized chunks per
+    #                      scheduler tick instead of one blocking prefill
+    #                      (DESIGN.md "Chunked admission prefill"). Requires
+    #                      paged serving; None keeps blocking admission.
 
     # knob-string vocabularies (validate() is the ONE place that rejects
     # typos; keep these in sync with the dispatch sites they gate —
@@ -181,6 +186,16 @@ class SLAConfig:
                 f"paged serving requires block_q == block_kv (pages are "
                 f"block_kv-sized and admission is block_q-aligned; got "
                 f"{self.block_q} vs {self.block_kv})")
+        if self.prefill_chunk_blocks is not None:
+            if self.prefill_chunk_blocks < 1:
+                raise ValueError(
+                    f"SLAConfig.prefill_chunk_blocks must be >= 1 (got "
+                    f"{self.prefill_chunk_blocks})")
+            if self.block_q != self.block_kv:
+                raise ValueError(
+                    f"chunked admission prefill requires block_q == "
+                    f"block_kv (chunks are whole pages; got "
+                    f"{self.block_q} vs {self.block_kv})")
         return self
 
     def num_critical(self, num_kv_blocks: int) -> int:

@@ -61,6 +61,19 @@ def block_valid(cfg: SLAConfig, tm: int, tn: int) -> jax.Array:
     return valid
 
 
+def _pooled_scores(qp: jax.Array, kp: jax.Array, cfg: SLAConfig,
+                   scale: float) -> jax.Array:
+    """Shared scoring tail over already-pooled block features: the
+    pooled dot-product map, validity masking, row softmax. Both routers
+    end here, so full-map and pooled-carry callers share ONE set of ops
+    (bitwise-identical score maps either way)."""
+    s = jnp.einsum("...md,...nd->...mn", qp, kp) * scale
+    if cfg.causal or cfg.window:
+        valid = block_valid(cfg, s.shape[-2], s.shape[-1])
+        s = jnp.where(valid, s, NEG_INF)
+    return jax.nn.softmax(s, axis=-1)
+
+
 def predict_pc(
     q: jax.Array, k: jax.Array, cfg: SLAConfig, scale: float | None = None
 ) -> jax.Array:
@@ -69,11 +82,7 @@ def predict_pc(
     scale = (d**-0.5) if scale is None else scale
     qp = pool_blocks(q, cfg.block_q)
     kp = pool_blocks(k, cfg.block_kv)
-    s = jnp.einsum("...md,...nd->...mn", qp, kp) * scale
-    if cfg.causal or cfg.window:
-        valid = block_valid(cfg, s.shape[-2], s.shape[-1])
-        s = jnp.where(valid, s, NEG_INF)
-    return jax.nn.softmax(s, axis=-1)
+    return _pooled_scores(qp, kp, cfg, scale)
 
 
 # ---------------------------------------------------------------------------
@@ -129,11 +138,7 @@ def predict_routing(
                     routing["wq"].astype(jnp.float32))
     kp = jnp.einsum("bhnd,hde->bhne", kp,
                     routing["wk"].astype(jnp.float32))
-    s = jnp.einsum("...md,...nd->...mn", qp, kp) * scale
-    if cfg.causal or cfg.window:
-        valid = block_valid(cfg, s.shape[-2], s.shape[-1])
-        s = jnp.where(valid, s, NEG_INF)
-    return jax.nn.softmax(s, axis=-1)
+    return _pooled_scores(qp, kp, cfg, scale)
 
 
 def routing_gates(pc: jax.Array, mc: jax.Array, cfg: SLAConfig) -> jax.Array:
@@ -184,6 +189,31 @@ def score_map(
     if cfg.routing_mode == "learned":
         return predict_routing(routing, q, k, cfg, scale)
     return predict_pc(q, k, cfg, scale)
+
+
+def score_map_pooled(
+    routing: dict | None, qp: jax.Array, kp: jax.Array, cfg: SLAConfig,
+    scale: float | None = None,
+) -> jax.Array:
+    """`score_map` from already-pooled block features.
+
+    qp: (B, H, Tm, D) / kp: (B, H, Tn, D) mean-pooled per-block features
+    (what `pool_blocks` produces). Equals `score_map(routing, q, k, ...)`
+    bitwise when the pools match `pool_blocks` of the same (q, k) —
+    the chunked-prefill carry maintains exactly those pools, so a chunk
+    can re-score the FULL map without holding raw q/k (DESIGN.md
+    "Chunked admission prefill")."""
+    check_routing_mode(cfg, routing)
+    d = qp.shape[-1]
+    scale = (d**-0.5) if scale is None else scale
+    qp = qp.astype(jnp.float32)
+    kp = kp.astype(jnp.float32)
+    if cfg.routing_mode == "learned":
+        qp = jnp.einsum("bhmd,hde->bhme", qp,
+                        routing["wq"].astype(jnp.float32))
+        kp = jnp.einsum("bhnd,hde->bhne", kp,
+                        routing["wk"].astype(jnp.float32))
+    return _pooled_scores(qp, kp, cfg, scale)
 
 
 def classify_blocks(pc: jax.Array, cfg: SLAConfig) -> jax.Array:

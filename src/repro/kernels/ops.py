@@ -163,6 +163,40 @@ def _sla_core_bwd(cfg, scale, interpret, res, cts):
 _sla_core.defvjp(_sla_core_fwd, _sla_core_bwd)
 
 
+def sla_attention_rows(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    qp: jax.Array, kp: jax.Array,
+    marginal: jax.Array, lut: jax.Array, counts: jax.Array,
+    cfg: SLAConfig, scale: float | None = None, interpret: bool = True,
+    row_offset=0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Forward-only fused kernel over a SPAN of query-row blocks.
+
+    Chunked-prefill entry point (DESIGN.md "Chunked admission prefill"):
+    q/qp cover `C = Cm * block_q` query tokens whose first row block
+    sits at absolute block id `row_offset` (python int or traced int32
+    — traced keeps every chunk index on one compiled kernel), while
+    k/v/kp cover the FULL (B, H, N, D) KV bucket. `marginal`
+    (B, H, Cm, Tn), `lut` (B, H, Cm, K) and `counts` (B, H, Cm) are the
+    chunk's rows of the full plan. Mirrors `_fwd_impl` op-for-op — the
+    per-block h/z einsums run at full bucket width and the row
+    reductions are batch-independent, so chunk outputs are bitwise
+    equal to the same rows of the blocking forward. No custom_vjp:
+    prefill chunks are inference-only.
+    """
+    scale = float(q.shape[-1] ** -0.5) if scale is None else float(scale)
+    fq, fk, fv, fqp, fkp = map(_flat, (q, k, v, qp, kp))
+    a, flut, fcounts = map(_flat, (marginal, lut, counts))
+    hb, zb = _hz_blocks(fkp, fv, cfg.block_kv)
+    hi, zi = _aggregate(a, hb, zb)
+    base = jnp.asarray(row_offset, jnp.int32).reshape(1)
+    o_s, o_l, _ = sla_fwd(flut, fcounts, fq, fk, fv, fqp, hi, zi,
+                          scale=scale, causal=cfg.causal,
+                          block_q=cfg.block_q, block_kv=cfg.block_kv,
+                          interpret=interpret, base=base)
+    return o_s.reshape(q.shape), o_l.reshape(q.shape)
+
+
 def sla_attention_core(
     q: jax.Array, k: jax.Array, v: jax.Array,
     qp: jax.Array, kp: jax.Array,

@@ -31,7 +31,7 @@ def _dot(a, b, trans_b=False):
     return jax.lax.dot_general(a, b, dims, preferred_element_type=jnp.float32)
 
 
-def _fwd_kernel(lut_ref, counts_ref,  # scalar prefetch
+def _fwd_kernel(lut_ref, counts_ref, base_ref,  # scalar prefetch
                 q_ref, k_ref, v_ref, qp_ref, hi_ref, zi_ref,  # inputs
                 os_ref, ol_ref, lse_ref,  # outputs
                 acc_ref, m_ref, l_ref,  # VMEM scratch
@@ -52,7 +52,7 @@ def _fwd_kernel(lut_ref, counts_ref,  # scalar prefetch
         sij = _dot(q, kk, trans_b=True) * scale  # (bq, bkv) f32
         if causal:
             j = lut_ref[bh, i, s]
-            rows = i * block_q + jax.lax.broadcasted_iota(
+            rows = (base_ref[0] + i) * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_kv), 0)
             cols = j * block_kv + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_kv), 1)
@@ -86,7 +86,7 @@ def _fwd_kernel(lut_ref, counts_ref,  # scalar prefetch
     jax.jit,
     static_argnames=("scale", "causal", "block_q", "block_kv", "interpret"))
 def sla_fwd(lut, counts, q, k, v, qp, hi, zi, *, scale, causal,
-            block_q, block_kv, interpret=True):
+            block_q, block_kv, interpret=True, base=None):
     """Run the fused forward kernel.
 
     Args:
@@ -95,9 +95,15 @@ def sla_fwd(lut, counts, q, k, v, qp, hi, zi, *, scale, causal,
       q, qp:  (BH, N, D); k, v: (BH_kv, N, D) with BH % BH_kv == 0.
       hi:     (BH, Tm, D, D) f32 aggregated marginal H per row.
       zi:     (BH, Tm, D) f32 aggregated marginal Z per row.
+      base:   (1,) int32 absolute block id of query row 0 (default 0) —
+        shifts the causal mask so a chunked-prefill span attends its
+        true positions; TRACED (scalar-prefetched), so every chunk
+        index shares one compiled kernel.
 
     Returns: (o_s (BH,N,D) f32, o_l (BH,N,D) f32, lse (BH,N) f32)
     """
+    if base is None:
+        base = jnp.zeros((1,), jnp.int32)
     bh_q, n, d = q.shape
     bh_kv = k.shape[0]
     group = bh_q // bh_kv
@@ -109,11 +115,11 @@ def sla_fwd(lut, counts, q, k, v, qp, hi, zi, *, scale, causal,
         _fwd_kernel, scale=scale, k_sel=k_sel, causal=causal,
         block_q=block_q, block_kv=block_kv)
 
-    def kv_map(bh, i, s, lut_ref, counts_ref):
+    def kv_map(bh, i, s, lut_ref, counts_ref, base_ref):
         return (bh // group, lut_ref[bh, i, s], 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda bh, i, s, *_: (bh, i, 0)),  # q
@@ -143,5 +149,5 @@ def sla_fwd(lut, counts, q, k, v, qp, hi, zi, *, scale, causal,
             jax.ShapeDtypeStruct((bh_q, 1, n), jnp.float32),
         ],
         interpret=interpret,
-    )(lut, counts, q, k, v, qp, hi, zi)
+    )(lut, counts, base, q, k, v, qp, hi, zi)
     return o_s, o_l, lse[:, 0, :]

@@ -23,6 +23,13 @@ end-to-end examples):
   --decode-sla              decode-time SLA (DESIGN.md "Decode-time SLA")
   --routing-mode            threshold vs learned block routing
                             (DESIGN.md "Learned routing")
+  --paged / --pool-pages    paged KV cache + prefix page cache
+                            (DESIGN.md "Paged KV & prefix caching")
+  --prefill-chunk           chunked admission prefill: admit long
+                            prompts one N-block chunk per tick so the
+                            other slots keep decoding (DESIGN.md
+                            "Chunked admission prefill"; requires
+                            --paged, continuous scheduler)
 """
 from __future__ import annotations
 
@@ -111,6 +118,21 @@ def main(argv=None):
                          "smaller values bank on prefix sharing and "
                          "fail loudly (PagePoolExhausted) when the bet "
                          "doesn't pay")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    metavar="BLOCKS",
+                    help="chunked admission prefill: a request that "
+                         "misses the full-prompt snapshot owns its slot "
+                         "in PREFILLING state and advances BLOCKS SLA "
+                         "blocks of prompt per tick while other slots "
+                         "keep decoding — bounding the decode stall a "
+                         "long prompt inflicts to one chunk's dispatch. "
+                         "Tokens and cache contents stay bitwise equal "
+                         "to blocking admission (DESIGN.md 'Chunked "
+                         "admission prefill'). Requires --paged and "
+                         "--scheduler continuous; lifts "
+                         "sla.col_capacity_factor to None (printed) — "
+                         "chunk classification is row-decomposable "
+                         "only uncapped")
     ap.add_argument("--routing-mode", default=None,
                     choices=["threshold", "learned"],
                     help="block-classification router: 'threshold' ranks "
@@ -129,6 +151,9 @@ def main(argv=None):
         ap.error("--stream requires --scheduler continuous")
     if args.paged and args.scheduler != "continuous":
         ap.error("--paged requires --scheduler continuous")
+    if args.prefill_chunk is not None and not args.paged:
+        ap.error("--prefill-chunk requires --paged (chunks land "
+                 "through the page-table scatter)")
 
     from repro.core import backends as backend_registry
     backend_registry.resolve(args.backend)  # unknown names fail here, loudly
@@ -140,6 +165,18 @@ def main(argv=None):
         # before init: learned mode adds the routing head to the params
         cfg = dataclasses.replace(
             cfg, sla=cfg.sla.replace(routing_mode=args.routing_mode))
+    if (args.prefill_chunk is not None
+            and cfg.sla.col_capacity_factor is not None):
+        # chunk plan rows are sliced from the full classification; the
+        # column-capacity demotion pass couples rows, so chunked
+        # admission requires the uncapped per-row regime. Lifting the
+        # cap keeps strictly MORE critical columns — still a valid SLA
+        # plan, applied to blocking admission identically.
+        print("--prefill-chunk: lifting sla.col_capacity_factor "
+              f"({cfg.sla.col_capacity_factor} -> None); chunked "
+              "classification is row-decomposable only uncapped")
+        cfg = dataclasses.replace(
+            cfg, sla=cfg.sla.replace(col_capacity_factor=None))
     cfg.sla.validate()
     mdl = registry.get_model(cfg)
     params = mdl.init(jax.random.PRNGKey(args.seed), cfg)
@@ -156,7 +193,8 @@ def main(argv=None):
                           plan_reuse=args.plan_reuse,
                           drift_threshold=args.drift_threshold,
                           paged=args.paged or None,
-                          pool_pages=args.pool_pages)
+                          pool_pages=args.pool_pages,
+                          prefill_chunk_blocks=args.prefill_chunk)
         t0 = time.time()
         for i in range(args.requests):
             sched.submit(
@@ -189,7 +227,8 @@ def main(argv=None):
                            decode_sla=args.decode_sla,
                            scheduler=args.scheduler,
                            paged=args.paged or None,
-                           pool_pages=args.pool_pages)
+                           pool_pages=args.pool_pages,
+                           prefill_chunk_blocks=args.prefill_chunk)
     t0 = time.time()
     done = engine.run(reqs)
     _print_stats(args, engine.stats, len(done), time.time() - t0,
@@ -223,6 +262,10 @@ def _print_stats(args, st, n_done, wall, metrics, drift_threshold):
               f"{st.cow_copies} CoW copies | prefix cache "
               f"{st.prefix_hits} page hits / {st.prefix_misses} misses, "
               f"{st.prefix_full_hits} full-prompt hits")
+    if getattr(args, "prefill_chunk", None):
+        print(f"chunked admission: {st.chunked_admissions} requests in "
+              f"{st.prefill_chunks} chunks | max inter-token gap "
+              f"{st.max_decode_gap_s * 1e3:.0f}ms")
     if args.plan_reuse != "off":
         print(f"plan reuse: {st.plan_builds} built, {st.plan_reuses} "
               f"reused, {st.plan_replans} drift re-plans | retention "

@@ -29,6 +29,55 @@ from repro.optim import adamw
 from repro.optim.compression import ef_compress_decompress, ef_init
 
 
+ROUTING_WARM_EPS = 1e-3
+
+
+def routing_warm_init(params):
+    """Replace the zero-initialized per-head Proj merge (`sla_proj`)
+    with an epsilon-scaled identity (`ROUTING_WARM_EPS * I`).
+
+    Opt-in escape hatch for the learned-routing dead point (see
+    `check_routing_dead_point`): a tiny but nonzero Proj lets the
+    straight-through routing gradients through from step 0 while
+    perturbing the model's output by only O(eps * ||o_l||)."""
+    layers = dict(params["layers"])
+    proj = layers["sla_proj"]
+    eye = jnp.eye(proj.shape[-1], dtype=proj.dtype)
+    layers["sla_proj"] = jnp.broadcast_to(eye, proj.shape) * ROUTING_WARM_EPS
+    return dict(params, layers=layers)
+
+
+def check_routing_dead_point(params, mask):
+    """Warn loudly when a fine-tune is pinned at the learned-routing
+    dead point: the routing head is trainable but every `sla_proj` is
+    exactly zero. Routing parameters only receive gradients through the
+    straight-through marginal gates of the LINEAR branch, and that
+    branch's output is multiplied by `sla_proj` (Eq. 6) — so all-zero
+    Proj multiplies every routing gradient by exact zero and
+    `--train-only routing` silently flatlines. Returns True iff the
+    warning fired (tests assert both paths)."""
+    import warnings
+
+    flat_m = jax.tree_util.tree_leaves_with_path(mask)
+    trains_routing = any("routing" in jax.tree_util.keystr(path) and t
+                         for path, t in flat_m)
+    proj = params.get("layers", {}).get("sla_proj")
+    if not trains_routing or proj is None:
+        return False
+    if bool(jnp.any(proj != 0)):
+        return False
+    warnings.warn(
+        "learned-routing dead point: --train-only includes the routing "
+        "head, but every sla_proj is exactly zero (the paper's init). "
+        "Routing gradients flow only through the linear branch, whose "
+        "output is multiplied by sla_proj — they are therefore all "
+        "exactly zero and routing will never move. Pass "
+        "--routing-warm-init to seed sla_proj with an epsilon identity, "
+        "or include 'sla_proj' in --train-only and train the merge off "
+        "zero first.")
+    return True
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -60,6 +109,18 @@ def main(argv=None):
                          "train (e.g. 'routing,sla_proj'); everything "
                          "else is frozen — the fixed-FLOP-budget "
                          "fine-tuning recipe")
+    ap.add_argument("--routing-warm-init", action="store_true",
+                    help="seed every layer's sla_proj with a small "
+                         "epsilon-scaled identity (1e-3) instead of the "
+                         "paper's zero init. Breaks the learned-routing "
+                         "dead point: routing gradients flow only "
+                         "through the straight-through marginal gates "
+                         "into the LINEAR branch, whose output is "
+                         "multiplied by sla_proj — all-zero sla_proj "
+                         "therefore multiplies every routing gradient "
+                         "by exact zero, and '--train-only routing' "
+                         "cannot move (a fresh checkpoint warns loudly "
+                         "instead of silently flatlining)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -77,6 +138,8 @@ def main(argv=None):
 
     rng = jax.random.PRNGKey(args.seed)
     params = mdl.init(rng, cfg)
+    if args.routing_warm_init:
+        params = routing_warm_init(params)
     opt_state = adamw.init(params)
     from jax.sharding import NamedSharding, PartitionSpec as P
     p_shard = param_shardings(mesh, jax.eval_shape(lambda: params))
@@ -119,6 +182,7 @@ def main(argv=None):
         print(f"training {n_train} of "
               f"{sum(p.size for p in jax.tree_util.tree_leaves(params))} "
               f"params ({args.train_only})")
+        check_routing_dead_point(params, mask)
 
     def loss_of(p, batch):
         return loss_impl(p, cfg, batch)

@@ -442,6 +442,246 @@ def prefill(params, cfg: ArchConfig, tokens, compute_dtype=jnp.bfloat16,
     return (x[:, -1], cache) + extras
 
 
+# --------------------------------------------------------------------------
+# chunked admission prefill (DESIGN.md "Chunked admission prefill"):
+# consume the prompt one block-aligned span at a time so the scheduler can
+# interleave decode ticks between chunks. The carry maintains exactly the
+# state later chunks (and `_seed_decode_state`) need: per-layer KV written
+# so far, the mean-pooled q/k block features (so every chunk can re-score
+# the FULL block map via `masks.score_map_pooled` — bitwise what blocking
+# prefill scores), and the decode-grid classification rows. Finalization
+# goes through `_seed_decode_state` on the carried KV + rows, so every
+# cache leaf is bitwise identical to blocking `prefill` BY CONSTRUCTION.
+# --------------------------------------------------------------------------
+def check_chunked_prefill(cfg: ArchConfig, backend: str = "gather"):
+    """Loudly reject configs the chunked-prefill machine cannot serve
+    bitwise. Chunk plan rows are sliced from a full-map classification,
+    which is only row-decomposable without the column-capacity demotion
+    pass (it couples rows); the execution path covers SLA layers on the
+    gather/kernel backends only."""
+    from repro.core import backends as backend_lib
+
+    sla = cfg.sla
+    if sla.mode != "sla":
+        raise ValueError(
+            f"chunked admission prefill requires sla.mode='sla' (got "
+            f"{sla.mode!r})")
+    if sorted(set(layer_kinds_list(cfg))) != [KIND_SLA]:
+        raise ValueError(
+            "chunked admission prefill requires an all-SLA layer stack "
+            "(mixed full/swa stacks prefill blocking)")
+    if sla.col_capacity_factor is not None:
+        raise ValueError(
+            "chunked admission prefill requires "
+            "sla.col_capacity_factor=None: the column-capacity demotion "
+            "pass couples query rows, so chunk plan rows could not be "
+            "sliced from the full classification bitwise")
+    if sla.window or cfg.sliding_window:
+        raise ValueError(
+            "chunked admission prefill does not support window-"
+            "constrained SLA layers")
+    if sla.block_q != sla.block_kv:
+        raise ValueError(
+            f"chunked admission prefill requires block_q == block_kv "
+            f"(got {sla.block_q} vs {sla.block_kv})")
+    if backend_lib.resolve(backend) not in ("gather", "kernel"):
+        raise ValueError(
+            f"chunked admission prefill supports backends "
+            f"'gather'/'kernel' (got {backend!r})")
+
+
+def make_prefill_carry(cfg: ArchConfig, bucket: int,
+                       compute_dtype=jnp.bfloat16,
+                       decode_sla: bool = False) -> dict:
+    """Zero-initialized chunked-prefill carry for a (1, bucket) admission.
+
+    Leaves (all stacked (L, ...) so `prefill_chunk` scans them):
+      k/v  (L, 1, Hkv, bucket, Dh)  KV written so far (future rows zero)
+      qpm  (L, 1, H, Tm, Dh) f32    mean-pooled q per written block row
+      kpm  (L, 1, H, Tm, Dh) f32    mean-pooled (GQA-repeated) k per block
+      dmc  (L, 1, H, Tm, Tm) int8   decode-grid rows (decode_sla only)
+    """
+    sla = cfg.sla
+    if bucket % sla.block_q:
+        raise ValueError(
+            f"chunked prefill needs a block-aligned bucket (got {bucket} "
+            f"for block_q={sla.block_q})")
+    nl, hkv, h, dh = (cfg.num_layers, cfg.num_kv_heads, cfg.num_heads,
+                      cfg.head_dim)
+    tm = bucket // sla.block_q
+    carry = {
+        "k": jnp.zeros((nl, 1, hkv, bucket, dh), compute_dtype),
+        "v": jnp.zeros((nl, 1, hkv, bucket, dh), compute_dtype),
+        "qpm": jnp.zeros((nl, 1, h, tm, dh), jnp.float32),
+        "kpm": jnp.zeros((nl, 1, h, tm, dh), jnp.float32),
+    }
+    if decode_sla:
+        carry["dmc"] = jnp.full((nl, 1, h, tm, tm), -1, jnp.int8)
+    return carry
+
+
+def prefill_chunk(params, cfg: ArchConfig, tokens, carry, start,
+                  compute_dtype=jnp.bfloat16, backend: str = "gather",
+                  decode_max_len: Optional[int] = None):
+    """Consume one block-aligned span of prompt tokens against the
+    already-prefilled prefix.
+
+    tokens: (1, C) int32, C a multiple of block_q; `start` the span's
+    absolute token offset (block-aligned; python int or TRACED int32 —
+    traced keeps every chunk index on one compiled graph). Returns
+    (new_carry, last_hidden (1, d)) — the final chunk's last hidden
+    feeds `logits_from_hidden` for the admission's first token.
+
+    Bitwise contract (tests/test_serving.py chunked-parity suite): after
+    the last chunk, carry k/v/dmc equal blocking `prefill`'s caches and
+    decode rows bit-for-bit. Per layer the chunk (a) writes its KV and
+    pooled q/k rows into the carry, (b) re-scores the FULL block map
+    from the pooled carry (`masks.score_map_pooled` — masked-softmax
+    rows depend only on columns <= row, all written) and slices its
+    rows, (c) replicates `backends.execute`'s glue against the
+    full-bucket carried KV (zero-padded future blocks contribute exact
+    zeros through the marginal mask), (d) classifies its decode-grid
+    rows from the same pooled maps. `decode_max_len` must match the
+    value blocking prefill would get (required when carry has "dmc").
+    """
+    from repro.core import backends as backend_lib
+    from repro.core.block_sparse_xla import sla_forward_gather
+    from repro.core.phi import phi
+    from repro.kernels import ops as kops
+
+    check_chunked_prefill(cfg, backend)
+    backend = backend_lib.resolve(backend)
+    sla = cfg.sla
+    bq = sla.block_q
+    b, c = tokens.shape
+    if b != 1:
+        raise ValueError(f"prefill_chunk takes a batch-1 span (got {b})")
+    if c % bq:
+        raise ValueError(
+            f"chunk length {c} must be a multiple of block_q={bq}")
+    bucket = carry["k"].shape[-2]
+    tm = bucket // bq
+    nb = c // bq
+    decode_sla = "dmc" in carry
+    if decode_sla and decode_max_len is None:
+        raise ValueError(
+            "carry tracks decode-grid rows ('dmc') — pass the same "
+            "decode_max_len blocking prefill would use")
+    plan_cfg = dataclasses.replace(sla, causal=True)
+    dcfg = (sla.decode_plan_cfg(decode_max_len // sla.block_kv)
+            if decode_sla else None)
+    start = jnp.asarray(start, jnp.int32)
+    sb = start // bq
+    positions = jnp.broadcast_to(
+        (start + jnp.arange(c, dtype=jnp.int32))[None, :], (b, c))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    interpret = jax.default_backend() != "tpu"  # kernel-backend parity
+
+    def body(x, layer):
+        layer = list(layer)
+        p, kc, vc, qpm, kpm = (layer.pop(0), layer.pop(0), layer.pop(0),
+                               layer.pop(0), layer.pop(0))
+        dmc = layer.pop(0) if decode_sla else None
+        xn = rms_norm(x, p["ln1"])
+        q, k, v = _qkv(p, xn, cfg, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, k.astype(kc.dtype), start, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, v.astype(vc.dtype), start, axis=2)
+        h, hkv = q.shape[1], k.shape[1]
+        g = h // hkv
+        kr = jnp.repeat(k, g, axis=1) if g > 1 else k
+        # pooled-map rows: mean over each block's own tokens only, so
+        # chunk-local pooling equals full-prefill pooling bitwise (and
+        # repeat/pool commute for the GQA broadcast)
+        qpm = jax.lax.dynamic_update_slice_in_dim(
+            qpm, masks_lib.pool_blocks(q, bq), sb, axis=2)
+        kpm = jax.lax.dynamic_update_slice_in_dim(
+            kpm, masks_lib.pool_blocks(kr, sla.block_kv), sb, axis=2)
+        routing = p.get("routing") if sla.routing_mode == "learned" \
+            else None
+        # full-map re-score + slice: rows <= written region are exact
+        # (masked softmax rows never read unwritten columns; argsort is
+        # per-row with col_capacity None)
+        mc = masks_lib.classify_blocks(
+            masks_lib.score_map_pooled(routing, qpm, kpm, plan_cfg),
+            plan_cfg)
+        mc_rows = jax.lax.dynamic_slice_in_dim(mc, sb, nb, axis=2)
+        lut, counts = plan_lib.build_lut(mc_rows,
+                                         plan_cfg.num_critical(tm))
+        # inference-only: the hard indicator is bitwise the forward
+        # value of the learned-routing straight-through gates
+        marginal = (mc_rows == 0).astype(jnp.float32)
+        if decode_sla:
+            mcd = masks_lib.classify_blocks(
+                masks_lib.score_map_pooled(routing, qpm, kpm, dcfg),
+                dcfg)
+            dmc = jax.lax.dynamic_update_slice_in_dim(
+                dmc, jax.lax.dynamic_slice_in_dim(mcd, sb, nb, axis=2),
+                sb, axis=2)
+        # chunk attention: replicate backends.execute's glue with the
+        # chunk's rows against the full-bucket carry KV
+        krf = jnp.repeat(kc, g, axis=1) if g > 1 else kc
+        vrf = jnp.repeat(vc, g, axis=1) if g > 1 else vc
+        qp, kp = phi(q, sla.phi), phi(krf, sla.phi)
+        if backend == "gather":
+            rows_plan = plan_lib.SLAPlan(
+                mc=mc_rows, lut=lut, counts=counts,
+                col_lut=jnp.zeros((b, h, tm, 1), jnp.int32),
+                col_counts=jnp.zeros((b, h, tm), jnp.int32),
+                marginal=marginal)
+            o_s, o_l = sla_forward_gather(q, krf, vrf, qp, kp, rows_plan,
+                                          plan_cfg, row_offset=sb)
+        else:
+            o_s, o_l = kops.sla_attention_rows(
+                q, krf, vrf, qp, kp, marginal, lut, counts, plan_cfg,
+                interpret=interpret, row_offset=sb)
+        proj = p["sla_proj"].astype(jnp.float32)
+        o = (o_s + jnp.einsum("bhnd,hde->bhne", o_l, proj)).astype(x.dtype)
+        out = o.transpose(0, 2, 1, 3).reshape(b, c, -1)
+        out = jnp.einsum("bse,ed->bsd", out,
+                         ctx.fsdp_gather(p["wo"].astype(x.dtype), "row"))
+        x = ctx.shard_residual(x + ctx.shard_residual(out))
+        f, _ = _ffn(p, rms_norm(x, p["ln2"]), cfg)
+        x = ctx.shard_residual(x + ctx.shard_residual(f))
+        ys = (kc, vc, qpm, kpm) + ((dmc,) if decode_sla else ())
+        return x, ys
+
+    xs = (params["layers"], carry["k"], carry["v"], carry["qpm"],
+          carry["kpm"])
+    if decode_sla:
+        xs = xs + (carry["dmc"],)
+    x, ys = jax.lax.scan(body, x, xs)
+    new_carry = {"k": ys[0], "v": ys[1], "qpm": ys[2], "kpm": ys[3]}
+    if decode_sla:
+        new_carry["dmc"] = ys[4]
+    x = rms_norm(x, params["ln_f"])
+    return new_carry, x[:, -1]
+
+
+def finalize_chunked_prefill(cfg: ArchConfig, carry,
+                             decode_max_len: Optional[int] = None) -> dict:
+    """Chunked-prefill carry -> the cache dict blocking `prefill`
+    returns. Deliberately mirrors `prefill`'s tail exactly — the decode
+    state is rebuilt with `_seed_decode_state` (`plan_from_mask` on the
+    full carried rows), NOT `plan_extend`, because the incremental path
+    leaves stale values in dead col_lut padding slots and the serving
+    bitwise bar covers every cache leaf."""
+    kc, vc = carry["k"], carry["v"]
+    bucket = kc.shape[-2]
+    cache = {"k": kc, "v": vc, "pos": jnp.int32(bucket)}
+    if decode_max_len is not None:
+        _check_decode_grid(cfg, bucket, decode_max_len)
+        cache["sla"] = _seed_decode_state(cfg, kc, vc, carry["dmc"],
+                                          decode_max_len)
+        grow = decode_max_len - bucket
+        if grow > 0:
+            pad = [(0, 0)] * 3 + [(0, grow), (0, 0)]
+            cache["k"] = jnp.pad(kc, pad)
+            cache["v"] = jnp.pad(vc, pad)
+    return cache
+
+
 def _dense_decode_attn(q, kc, vc, pos, kind, cfg: ArchConfig):
     """Masked softmax over the full static cache — O(S) per token.
 

@@ -27,12 +27,23 @@ slot. Cross-request plan reuse (`plan_reuse="adaptive"`) and decode-time
 SLA (`decode_sla=True`) both ride along — this is where they pay off
 hardest, because slots turn over continuously instead of waiting for
 the slowest group member.
+
+Chunked admission prefill (DESIGN.md "Chunked admission prefill"): with
+`prefill_chunk_blocks` set, a paged admission that misses the
+full-prompt snapshot becomes a multi-tick `_PrefillJob` — the request
+owns its slot in PREFILLING state (masked out of decode dispatch like a
+finished-budget slot) and advances one block-aligned chunk per tick
+through `transformer.prefill_chunk`, so other slots keep emitting
+tokens while a long prompt prefills. Completion runs blocking
+admission's tail verbatim (finalize -> page-table scatter -> snapshot),
+which keeps chunked tokens and cache leaves bitwise equal to blocking's.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import enum
+import math
 import time
 from typing import Deque, Iterator, List, Optional, Tuple
 
@@ -190,6 +201,16 @@ class ServeStats:
     prefix_misses: int = 0
     prefix_full_hits: int = 0
     cow_copies: int = 0
+    # chunked-admission accounting (DESIGN.md "Chunked admission
+    # prefill"): chunked_admissions = requests admitted through the
+    # multi-tick chunk machine, prefill_chunks = chunk dispatches that
+    # actually ran (prefix-resumed chunks are skipped and never
+    # counted), max_decode_gap_s = largest wall-clock gap between
+    # consecutive token emissions — the decode-stall metric chunked
+    # admission exists to shrink.
+    chunked_admissions: int = 0
+    prefill_chunks: int = 0
+    max_decode_gap_s: float = 0.0
 
     def occupancy(self) -> float:
         """Decode-slot utilization in [0, 1]."""
@@ -216,9 +237,18 @@ def normalize_drift_threshold(cfg: ArchConfig, drift_threshold):
 
 def percentile(xs, p: float) -> float:
     """Nearest-rank percentile (the serving-metrics convention used by
-    both `launch/serve.py` and `benchmarks/fig_serving.py`)."""
+    both `launch/serve.py` and `benchmarks/fig_serving.py`): the
+    smallest element with at least ceil(p * n) of the values at or
+    below it, i.e. sorted(xs)[ceil(p * n) - 1]. The previous
+    `int(p * n)` index sat one element HIGH of the nearest rank
+    whenever p * n was not integral (p95 of 20 samples read xs[19],
+    the max, instead of xs[18]) and only p == 1.0 was saved by the
+    min clamp; tests/test_serving.py pins the exact ranks."""
     xs = sorted(xs)
-    return xs[min(len(xs) - 1, int(p * len(xs)))]
+    if not xs:
+        raise ValueError("percentile() of an empty sequence")
+    rank = min(len(xs), max(1, math.ceil(p * len(xs))))
+    return xs[rank - 1]
 
 
 def prefill_with_plan_reuse(prefill_plan, prefill_reuse, params, toks,
@@ -271,6 +301,31 @@ def check_serving_family(cfg: ArchConfig, mdl, plan_reuse: str,
 # ---------------------------------------------------------------------------
 # the scheduler
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _PrefillJob:
+    """One in-flight chunked admission (DESIGN.md "Chunked admission
+    prefill"). The request owns `slot` in PREFILLING state while its
+    prompt advances one chunk per tick; `carry` is the model-side
+    chunked-prefill carry (KV written so far, pooled block features,
+    decode-grid rows), `pids` the pool refs claimed page by page as
+    chunks land (handed over to `_set_slot_pages` at completion), and
+    `dispatched` the prompt tokens that actually ran (prefix-resumed
+    chunks are skipped)."""
+
+    r: ServedRequest
+    slot: int
+    toks: np.ndarray        # (1, bucket) left-padded prompt
+    keys: List[bytes]       # page intern keys for every prompt page
+    bucket: int             # admission-time bucket (survives later growth)
+    carry: object
+    num_chunks: int
+    t0: float               # admission wall-clock (metrics.admit_t)
+    next_chunk: int = 0
+    dispatched: int = 0
+    pids: List[int] = dataclasses.field(default_factory=list)
+    last_hidden: object = None
+
+
 class Scheduler:
     """Continuous-batching scheduler over a fixed pool of decode slots.
 
@@ -293,7 +348,8 @@ class Scheduler:
                  prefill_bucket: Optional[int] = None,
                  compute_dtype=jnp.bfloat16,
                  paged: Optional[bool] = None,
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None,
+                 prefill_chunk_blocks: Optional[int] = None):
         from repro.core import backends as backend_registry
 
         backend = backend_registry.resolve(backend)
@@ -320,11 +376,32 @@ class Scheduler:
                 f"paged KV pages are block_kv-sized and admission is "
                 f"block_q-aligned; the grids must match (got block_q="
                 f"{cfg.sla.block_q}, block_kv={cfg.sla.block_kv})")
+        if prefill_chunk_blocks is None:
+            prefill_chunk_blocks = cfg.sla.prefill_chunk_blocks
+        if prefill_chunk_blocks is not None:
+            if prefill_chunk_blocks < 1:
+                raise ValueError(
+                    f"prefill_chunk_blocks must be >= 1 (got "
+                    f"{prefill_chunk_blocks})")
+            if not paged:
+                raise ValueError(
+                    "prefill_chunk_blocks requires paged=True: chunked "
+                    "admission lands its pages through the page-table "
+                    "scatter and the prefix page cache")
         self.cfg = cfg
         self.params = params
         self.mdl = registry.get_model(cfg)
         check_serving_family(cfg, self.mdl, plan_reuse, decode_sla,
                              continuous=True)
+        if prefill_chunk_blocks is not None:
+            chk = getattr(self.mdl, "check_chunked_prefill", None)
+            if chk is None:
+                raise ValueError(
+                    f"prefill_chunk_blocks requires a model family with "
+                    f"chunked prefill (prefill_chunk / "
+                    f"finalize_chunked_prefill); family {cfg.family!r} "
+                    f"has none")
+            chk(cfg, backend)  # loud eligibility (all-SLA, no col-cap, ...)
         self.num_slots = num_slots
         self.backend = backend
         self.decode_sla = decode_sla
@@ -352,6 +429,19 @@ class Scheduler:
                         if prefill_bucket else None)
         self._plans = None  # (1, bucket) plan stack for plan_reuse
         self._stat_base = [None] * num_slots  # decode-SLA counter bases
+        # chunked-admission state (DESIGN.md "Chunked admission
+        # prefill"): one optional in-flight _PrefillJob per slot, a
+        # zero-carry prototype per bucket size, and an LRU of carries
+        # saved at every chunk boundary so a shared padded prefix
+        # resumes past its chunks instead of recomputing them
+        self.prefill_chunk_blocks = prefill_chunk_blocks
+        self._chunk_tokens = ((prefill_chunk_blocks or 0) * self.block)
+        self._job_by_slot: List[Optional[_PrefillJob]] = \
+            [None] * num_slots
+        self._carry_protos: dict = {}
+        self._carry_snaps = collections.OrderedDict()
+        self._carry_cap = 16
+        self._last_token_t: Optional[float] = None
 
         if paged:
             from repro.serving.pages import PagePool, ZERO_PAGE
@@ -450,6 +540,27 @@ class Scheduler:
                 single = dict(single, k=jnp.pad(single["k"], pad),
                               v=jnp.pad(single["v"], pad))
             return mdl.insert_slot(live, single, slot)
+
+        if self._chunk_tokens:
+            dmx = self.max_len if decode_sla else None
+
+            # `start` is a TRACED int32, so one compiled graph covers
+            # every chunk index of a given (bucket, chunk) shape pair
+            @jax.jit
+            def _chunk(params, tokens, carry, start):
+                return mdl.prefill_chunk(params, cfg, tokens, carry,
+                                         start,
+                                         compute_dtype=compute_dtype,
+                                         backend=backend_,
+                                         decode_max_len=dmx)
+
+            @jax.jit
+            def _finalize(carry):
+                return mdl.finalize_chunked_prefill(cfg, carry,
+                                                    decode_max_len=dmx)
+
+            self._chunk = _chunk
+            self._finalize = _finalize
 
         # masked decode pair for MIXED drain ticks (some active slots
         # need per-token host control, the rest are pure-greedy): each
@@ -551,14 +662,38 @@ class Scheduler:
         return bool(self._queue) or any(r is not None for r in self._slots)
 
     def step(self) -> List[StreamEvent]:
-        """Admit queued requests into free slots, then run ONE batched
-        decode step over the live cache. Returns the events produced."""
+        """Advance in-flight chunked prefills by one chunk and admit
+        queued requests into free slots, then run ONE batched decode
+        step over the live cache. Returns the events produced."""
         events: List[StreamEvent] = []
+        self._tick_admit(events)
+        return events + self._decode_tick()
+
+    def _tick_admit(self, events: List[StreamEvent]):
+        """Shared tick head: every in-flight chunked-prefill job
+        advances ONE chunk (a completion hands its slot to this very
+        tick's decode), then queued requests fill free slots."""
+        for slot in range(self.num_slots):
+            if self._job_by_slot[slot] is not None:
+                self._advance_job(slot, events)
         for slot in range(self.num_slots):
             if self._slots[slot] is None and self._queue:
                 self._admit_next(slot, events)
-        active = [j for j in range(self.num_slots)
-                  if self._slots[j] is not None]
+
+    def _decoding(self) -> List[int]:
+        """Slots eligible for decode dispatch: occupied AND past their
+        prefill. PREFILLING job slots are masked out exactly like
+        freed slots — their page-table rows still point at the pinned
+        scratch page, so the batched dispatch's garbage writes land
+        harmlessly until completion scatters the real pages in."""
+        return [j for j in range(self.num_slots)
+                if self._slots[j] is not None
+                and self._slots[j].state is RequestState.DECODING]
+
+    def _decode_tick(self) -> List[StreamEvent]:
+        """ONE batched decode step over the live cache."""
+        events: List[StreamEvent] = []
+        active = self._decoding()
         if not active:
             return events
         if self.paged:
@@ -579,6 +714,7 @@ class Scheduler:
         self.stats.decode_tokens += len(active)
         self.stats.slot_steps_active += len(active)
         self.stats.slot_steps_total += self.num_slots
+        self._note_gap(now)
         for j in active:
             r = self._slots[j]
             tok = int(greedy_toks[j]) if r.sampling.temperature <= 0.0 \
@@ -618,11 +754,8 @@ class Scheduler:
         uses the masked pair, so one sampling request no longer drags
         every greedy slot down to per-token host round-trips."""
         events: List[StreamEvent] = []
-        for slot in range(self.num_slots):
-            if self._slots[slot] is None and self._queue:
-                self._admit_next(slot, events)
-        active = [j for j in range(self.num_slots)
-                  if self._slots[j] is not None]
+        self._tick_admit(events)
+        active = self._decoding()
         if not active:
             return events
         ctl = [j for j in active
@@ -634,14 +767,14 @@ class Scheduler:
             # slots write distinct pages inside ONE dispatch), so a
             # masked commit can't keep a slot's pool writes out —
             # per-token lockstep is the correct fallback
-            return events + self.step()
+            return events + self._decode_tick()
         if ctl and greedy:
             events += self._masked_ctl_step(ctl)
             # a ctl slot may have finished and freed a slot; greedy
             # slots are untouched by the masked step
             return events + self._greedy_roll(greedy, masked=True)
         if ctl:
-            return events + self.step()
+            return events + self._decode_tick()
         return events + self._greedy_roll(greedy, masked=False)
 
     def _masked_ctl_step(self, ctl: List[int]) -> List[StreamEvent]:
@@ -660,6 +793,7 @@ class Scheduler:
         self.stats.decode_tokens += len(ctl)
         self.stats.slot_steps_active += len(ctl)
         self.stats.slot_steps_total += self.num_slots
+        self._note_gap(now)
         for j in ctl:
             r = self._slots[j]
             tok = self._sample(r, larr[j])
@@ -682,6 +816,11 @@ class Scheduler:
         events: List[StreamEvent] = []
         nsteps = min(self._slots[j].sampling.max_new_tokens
                      - len(self._slots[j].tokens_out) for j in greedy)
+        if any(job is not None for job in self._job_by_slot):
+            # a chunked prefill is in flight: cap the roll so its next
+            # chunk interleaves at per-token granularity instead of
+            # stalling behind a multi-step dispatch
+            nsteps = 1
         if self.paged:
             for j in greedy:
                 self._ensure_decode_pages(j, nsteps)
@@ -702,6 +841,7 @@ class Scheduler:
         self.stats.decode_tokens += nsteps * len(greedy)
         self.stats.slot_steps_active += nsteps * len(greedy)
         self.stats.slot_steps_total += nsteps * self.num_slots
+        self._note_gap(now)
         for j in greedy:
             r = self._slots[j]
             for i in range(nsteps):
@@ -758,32 +898,71 @@ class Scheduler:
         toks = np.zeros((1, self._bucket), np.int32)
         toks[0, self._bucket - plen:] = r.prompt  # left-pad
         if self.paged:
-            logits = self._admit_paged(toks, slot)
+            padded = toks[0]
+            keys = self._page_keys(padded)
+            # precedence: full-prompt snapshot > chunked machine >
+            # blocking dispatch (the snapshot fast path short-circuits
+            # the whole chunk state machine)
+            logits = self._try_snapshot(padded, keys, slot)
+            if logits is not None:
+                self._finish_admission(r, slot, logits, t0, events,
+                                       prefilled=0, plan_built=False)
+                return
+            if self._chunk_tokens:
+                self._start_job(r, slot, toks, keys, t0, events)
+                return
+            logits = self._dispatch_paged(toks, keys, slot)
         else:
             last_hidden, cache = self._run_prefill(jnp.asarray(toks))
             logits = np.asarray(
                 logits_from_hidden(self.params, last_hidden))
             self._live = self._admit_jit(self._live, cache, slot)
+        self._finish_admission(r, slot, logits, t0, events,
+                               prefilled=self._bucket, plan_built=True)
+
+    def _finish_admission(self, r: ServedRequest, slot: int, logits,
+                          t0: float, events: List[StreamEvent], *,
+                          prefilled: int, plan_built: bool,
+                          start_emitted: bool = False):
+        """Common admission tail (blocking, snapshot-hit and chunked
+        completions): decode-SLA accounting — gated on whether a
+        prefill actually dispatched, a snapshot fast-path hit builds no
+        plans and prefills no tokens — then first-token sampling,
+        events, and the slot hand-off to DECODING."""
         if self.decode_sla:
-            self.stats.decode_plan_builds += self.cfg.num_layers
+            if plan_built:
+                self.stats.decode_plan_builds += self.cfg.num_layers
             self._stat_base[slot] = self._slot_counters(slot)
         tok = self._sample(r, logits[0])
         self._tokens[slot] = tok
         now = time.time()
         self.stats.admissions += 1
-        self.stats.prefill_tokens += self._bucket
+        self.stats.prefill_tokens += prefilled
         self.stats.prefill_s += now - t0
         r.metrics.first_token_t = now
         r.state = RequestState.DECODING
         r.tokens_out.append(tok)
         r.metrics.decode_tokens += 1
-        events.append(StreamEvent(rid=r.rid, kind="start", t=t0))
+        if not start_emitted:
+            events.append(StreamEvent(rid=r.rid, kind="start", t=t0))
+        self._note_gap(now)
         events.append(StreamEvent(rid=r.rid, kind="token", t=now,
                                   token=tok, index=0))
+        self._slots[slot] = r
         if self._is_done(r):
             self._finish(r, slot, now, events)
-        else:
-            self._slots[slot] = r
+
+    def _note_gap(self, now: float):
+        """Track the largest wall-clock gap between consecutive token
+        emissions (`ServeStats.max_decode_gap_s`) — the decode-stall
+        metric chunked admission exists to shrink: a blocking long
+        prefill freezes every decoding slot for the whole dispatch,
+        chunked admission bounds the freeze to one chunk."""
+        if self._last_token_t is not None:
+            gap = now - self._last_token_t
+            if gap > self.stats.max_decode_gap_s:
+                self.stats.max_decode_gap_s = gap
+        self._last_token_t = now
 
     def _run_prefill(self, toks: jnp.ndarray):
         """(1, bucket) prefill, through the plan-reuse path if enabled."""
@@ -823,70 +1002,195 @@ class Scheduler:
         st.prefix_misses = ps.prefix_misses
         st.cow_copies = ps.cow_copies
 
-    def _set_slot_pages(self, slot: int, pids: List[int]):
+    def _set_slot_pages(self, slot: int, pids: List[int],
+                        bucket: Optional[int] = None):
         """Point `slot`'s page-table row at its prompt pages (one
         pool ref each, already taken); the decode tail reads the
-        permanent zero page until the CoW pass privatizes it."""
+        permanent zero page until the CoW pass privatizes it. `bucket`
+        defaults to the shared prefill bucket — a chunked completion
+        passes its own admission-time bucket, which may predate a
+        growth triggered by a later queued prompt."""
         npp = len(pids)
         self._pt_host[slot, :npp] = pids
         self._pt_host[slot, npp:] = self._zero_page
         self._slot_pids[slot] = list(pids)
-        self._slot_base[slot] = self._bucket
+        self._slot_base[slot] = self._bucket if bucket is None else bucket
         self._push_pt()
 
-    def _admit_paged(self, toks: np.ndarray, slot: int) -> np.ndarray:
-        """Page-granular admission. Returns the first-token logits row.
-
-        Fast path: an exact (bucket, padded-prompt-bytes) snapshot hit
-        whose prompt pages are all still interned skips the prefill
-        dispatch entirely — the per-slot state and first-token logits
-        were cached when the prompt was first seen, and the pages
-        already hold its KV/partials. Otherwise one (1, bucket) prefill
-        runs as usual and each prompt page is interned by its prefix
-        bytes; pages that hit are REWRITTEN with byte-identical
-        contents, which keeps admission a single static-shape jit."""
-        padded = toks[0]
-        keys = self._page_keys(padded)
+    def _try_snapshot(self, padded: np.ndarray, keys: List[bytes],
+                      slot: int) -> Optional[np.ndarray]:
+        """Full-prompt snapshot fast path: an exact (bucket,
+        padded-prompt-bytes) snapshot hit whose prompt pages are all
+        still interned skips the prefill dispatch entirely — the
+        per-slot state and first-token logits were cached when the
+        prompt was first seen, and the pages already hold its
+        KV/partials. Returns the logits row, or None on a miss."""
         snap_key = (self._bucket, padded.tobytes())
         snap = self._snapshots.get(snap_key)
-        if snap is not None:
-            pids, ok = [], True
-            for key in keys:
-                pid = self._pool.lookup(key)
-                if pid is None:  # a page was evicted since the snapshot
-                    ok = False
-                    break
-                pids.append(pid)
-            if ok:
-                self._snapshots.move_to_end(snap_key)
-                state, logits = snap
-                self._live = self._admit_state_jit(self._live, state,
-                                                   slot)
-                self._set_slot_pages(slot, pids)
-                self.stats.prefix_full_hits += 1
-                self._sync_page_stats()
-                return logits
-            for pid in pids:  # partial hit: hand the taken refs back
-                self._pool.release(pid)
-        last_hidden, cache = self._run_prefill(jnp.asarray(toks))
-        logits = np.asarray(logits_from_hidden(self.params, last_hidden))
-        pids = []
+        if snap is None:
+            return None
+        pids, ok = [], True
         for key in keys:
             pid = self._pool.lookup(key)
-            if pid is None:
-                pid = self._pool.alloc()
-                self._pool.intern(key, pid)
+            if pid is None:  # a page was evicted since the snapshot
+                ok = False
+                break
             pids.append(pid)
-        self._live = self._admit_paged_jit(
-            self._live, cache, slot, jnp.asarray(pids, jnp.int32))
+        if not ok:
+            for pid in pids:  # partial hit: hand the taken refs back
+                self._pool.release(pid)
+            return None
+        self._snapshots.move_to_end(snap_key)
+        state, logits = snap
+        self._live = self._admit_state_jit(self._live, state, slot)
         self._set_slot_pages(slot, pids)
+        self.stats.prefix_full_hits += 1
+        self._sync_page_stats()
+        return logits
+
+    def _claim_page(self, key: bytes) -> int:
+        """Lookup-or-alloc one prompt page by its prefix-bytes intern
+        key; the returned pool ref belongs to the caller."""
+        pid = self._pool.lookup(key)
+        if pid is None:
+            pid = self._pool.alloc()
+            self._pool.intern(key, pid)
+        return pid
+
+    def _store_snapshot(self, snap_key, cache, logits):
         self._snapshots[snap_key] = (
             self.mdl.slot_state_from_prefill(cache), logits)
         self._snapshots.move_to_end(snap_key)
         while len(self._snapshots) > self._snapshot_cap:
             self._snapshots.popitem(last=False)
+
+    def _dispatch_paged(self, toks: np.ndarray, keys: List[bytes],
+                        slot: int) -> np.ndarray:
+        """Blocking page-granular admission: one (1, bucket) prefill,
+        each prompt page interned by its prefix bytes; pages that hit
+        are REWRITTEN with byte-identical contents, which keeps
+        admission a single static-shape jit. Returns the first-token
+        logits row."""
+        last_hidden, cache = self._run_prefill(jnp.asarray(toks))
+        logits = np.asarray(logits_from_hidden(self.params, last_hidden))
+        pids = [self._claim_page(key) for key in keys]
+        self._live = self._admit_paged_jit(
+            self._live, cache, slot, jnp.asarray(pids, jnp.int32))
+        self._set_slot_pages(slot, pids)
+        self._store_snapshot((self._bucket, toks[0].tobytes()), cache,
+                             logits)
         self._sync_page_stats()
         return logits
+
+    # -- chunked admission (DESIGN.md "Chunked admission prefill") ---------
+    def _carry_proto(self, bucket: int):
+        """Zero chunked-prefill carry for `bucket` (cached; the arrays
+        are immutable, so every job can start from the same one)."""
+        proto = self._carry_protos.get(bucket)
+        if proto is None:
+            proto = self.mdl.make_prefill_carry(
+                self.cfg, bucket, compute_dtype=self.compute_dtype,
+                decode_sla=self.decode_sla)
+            self._carry_protos[bucket] = proto
+        return proto
+
+    def _carry_put(self, key, carry):
+        self._carry_snaps[key] = carry
+        self._carry_snaps.move_to_end(key)
+        while len(self._carry_snaps) > self._carry_cap:
+            self._carry_snaps.popitem(last=False)
+
+    def _claim_job_pages(self, job: _PrefillJob, lo: int, hi: int):
+        """Intern-or-alloc the pages covering padded tokens [lo, hi) —
+        one pool ref each, held by the job until `_set_slot_pages`
+        takes them over at completion. Interned hits count prefix hits
+        exactly once per page, as in blocking admission; page CONTENTS
+        land at completion's full byte-identical rewrite, which is safe
+        because nothing reads a slot's pages before its own completion
+        scatter (snapshot fast-path hits require a stored snapshot, and
+        snapshots are only stored after such a rewrite)."""
+        bkv = self.block
+        for j in range(lo // bkv, hi // bkv):
+            job.pids.append(self._claim_page(job.keys[j]))
+        self._sync_page_stats()
+
+    def _start_job(self, r: ServedRequest, slot: int, toks: np.ndarray,
+                   keys: List[bytes], t0: float,
+                   events: List[StreamEvent]):
+        """Claim `slot` for a multi-tick chunked admission. The request
+        sits in PREFILLING state (masked out of decode dispatch) while
+        `_tick_admit` advances it one chunk per tick; its first chunk
+        runs within THIS tick. If a carry snapshot survives for a
+        chunk-boundary prefix of the padded prompt, the job resumes
+        past those chunks — a shared prefix skips its chunks, its pages
+        claimed by intern lookup instead of recomputation."""
+        bucket, ct = self._bucket, self._chunk_tokens
+        job = _PrefillJob(r=r, slot=slot, toks=toks, keys=keys,
+                          bucket=bucket, carry=self._carry_proto(bucket),
+                          num_chunks=-(-bucket // ct), t0=t0)
+        for c in range(job.num_chunks - 1, 0, -1):
+            ckey = (bucket, toks[0, :c * ct].tobytes())
+            snap = self._carry_snaps.get(ckey)
+            if snap is not None:
+                self._carry_snaps.move_to_end(ckey)
+                job.carry = snap
+                job.next_chunk = c
+                self._claim_job_pages(job, 0, c * ct)
+                break
+        self.stats.chunked_admissions += 1
+        self._job_by_slot[slot] = job
+        self._slots[slot] = r  # owns the slot; PREFILLING masks decode
+        events.append(StreamEvent(rid=r.rid, kind="start", t=t0))
+        self._advance_job(slot, events)
+
+    def _advance_job(self, slot: int, events: List[StreamEvent]):
+        """Run ONE prefill chunk for the job occupying `slot`: the
+        chunk's KV/pooled rows land in the carry, its pages are claimed
+        from the pool, and the boundary carry is snapshotted for future
+        prefix resumes. The final chunk hands the slot to decode."""
+        job = self._job_by_slot[slot]
+        ct = self._chunk_tokens
+        lo = job.next_chunk * ct
+        hi = min(lo + ct, job.bucket)
+        t0 = time.time()
+        carry, last_hidden = self._chunk(
+            self.params, jnp.asarray(job.toks[:, lo:hi]), job.carry,
+            jnp.int32(lo))
+        carry = jax.block_until_ready(carry)
+        self.stats.prefill_s += time.time() - t0
+        self.stats.prefill_chunks += 1
+        job.carry = carry
+        job.last_hidden = last_hidden
+        job.dispatched += hi - lo
+        self._claim_job_pages(job, lo, hi)
+        if hi < job.bucket:  # full-prompt resume is the snapshot's job
+            self._carry_put((job.bucket, job.toks[0, :hi].tobytes()),
+                            carry)
+        job.next_chunk += 1
+        if job.next_chunk >= job.num_chunks:
+            self._complete_job(slot, job, events)
+
+    def _complete_job(self, slot: int, job: _PrefillJob,
+                      events: List[StreamEvent]):
+        """Blocking admission's tail, verbatim: finalize the carry into
+        the cache dict blocking prefill returns (decode state rebuilt
+        with `_seed_decode_state`, so every leaf is bitwise blocking's),
+        scatter it into `slot` through the page table, store the
+        full-prompt snapshot, emit the first token."""
+        t0 = time.time()
+        cache = self._finalize(job.carry)
+        logits = np.asarray(
+            logits_from_hidden(self.params, job.last_hidden))
+        self._live = self._admit_paged_jit(
+            self._live, cache, slot, jnp.asarray(job.pids, jnp.int32))
+        self._set_slot_pages(slot, job.pids, bucket=job.bucket)
+        self._store_snapshot((job.bucket, job.toks[0].tobytes()), cache,
+                             logits)
+        self._sync_page_stats()
+        self._job_by_slot[slot] = None
+        self._finish_admission(job.r, slot, logits, t0, events,
+                               prefilled=job.dispatched, plan_built=True,
+                               start_emitted=True)
 
     def _ensure_decode_pages(self, slot: int, nsteps: int):
         """Copy-on-write pass before a decode dispatch: every page in

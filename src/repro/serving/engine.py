@@ -73,7 +73,8 @@ class ServingEngine:
                  drift_threshold=None, decode_sla: bool = False,
                  scheduler: str = "static",
                  paged: Optional[bool] = None,
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None,
+                 prefill_chunk_blocks: Optional[int] = None):
         from repro.core import backends as backend_registry
         backend = backend_registry.resolve(backend)  # fail loudly, early
         cfg.sla.validate()
@@ -92,6 +93,13 @@ class ServingEngine:
                 "paged KV caching requires the continuous-batching "
                 "scheduler (the static engine decodes group-local "
                 "caches; there is no shared pool to page)")
+        if prefill_chunk_blocks is None:
+            prefill_chunk_blocks = cfg.sla.prefill_chunk_blocks
+        if prefill_chunk_blocks is not None and scheduler != "continuous":
+            raise ValueError(
+                "chunked admission prefill (prefill_chunk_blocks) "
+                "requires the continuous-batching scheduler — the "
+                "static engine has no decode to interleave chunks with")
         self.paged = paged
         self.cfg = cfg
         self.params = params
@@ -123,7 +131,8 @@ class ServingEngine:
                 cfg, params, num_slots=batch_size, max_len=max_len,
                 backend=backend, decode_sla=self.decode_sla,
                 plan_reuse=plan_reuse, drift_threshold=drift_threshold,
-                paged=paged, pool_pages=pool_pages)
+                paged=paged, pool_pages=pool_pages,
+                prefill_chunk_blocks=prefill_chunk_blocks)
             self._sched.stats = self.stats
             return
 

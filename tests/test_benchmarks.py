@@ -103,3 +103,27 @@ def test_serving_acceptance_matches_recompute():
     assert acc["continuous_beats_static_occupancy"] == (
         payload["paths"]["continuous"]["occupancy"]
         > payload["paths"]["static"]["occupancy"])
+    assert acc["chunked_reduces_decode_stall"] == (
+        payload["stall"]["chunked"]["max_decode_gap_ms"]
+        < payload["stall"]["blocking"]["max_decode_gap_ms"])
+
+
+def test_serving_recompute_is_honest_on_synthetic_stall_cells():
+    """recompute_acceptance on hand-built stall cells where chunked
+    LOSES: the boolean must report that, not the headline claim."""
+    from benchmarks.fig_serving import recompute_acceptance
+
+    payload = {
+        "paths": {"static": {"occupancy": 0.5},
+                  "continuous": {"occupancy": 0.9}},
+        "paged": {"shared_prefix": {"page_allocs": 10},
+                  "unique_prompts": {"page_allocs": 20}},
+        "stall": {"blocking": {"max_decode_gap_ms": 5.0},
+                  "chunked": {"max_decode_gap_ms": 9.0}},
+    }
+    acc = recompute_acceptance(payload)
+    assert acc["chunked_reduces_decode_stall"] is False  # 9 > 5
+    assert acc["continuous_beats_static_occupancy"] is True
+    payload["stall"]["chunked"]["max_decode_gap_ms"] = 2.0
+    assert recompute_acceptance(payload)[
+        "chunked_reduces_decode_stall"] is True

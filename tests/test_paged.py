@@ -304,6 +304,31 @@ def test_paged_full_prompt_snapshot_skips_prefill():
     assert sched.stats.prefix_full_hits == 2  # admissions 2 and 3
 
 
+def test_snapshot_hit_leaves_dispatch_counters_unchanged():
+    """A full-prompt snapshot hit admits WITHOUT a prefill dispatch, so
+    the dispatch counters must not move: the old code unconditionally
+    charged `decode_plan_builds += num_layers` and
+    `prefill_tokens += bucket` per admission, overstating plan builds
+    and prefill throughput on every cache hit."""
+    cfg = _arch(decode=True)
+    params = _params(cfg)
+    prompt = _prompts(cfg, lens=(32,))[0]
+    sched = Scheduler(cfg, params, num_slots=1, max_len=96,
+                      prefill_bucket=32, decode_sla=True, paged=True)
+    sched.submit(prompt, SamplingParams(max_new_tokens=4))
+    sched.drain()
+    st = sched.stats
+    assert st.decode_plan_builds == cfg.num_layers
+    assert st.prefill_tokens == 32
+    sched.submit(prompt, SamplingParams(max_new_tokens=4))
+    sched.drain()
+    assert st.prefix_full_hits == 1
+    assert st.admissions == 2
+    # the snapshot admission dispatched nothing: both stay put
+    assert st.decode_plan_builds == cfg.num_layers
+    assert st.prefill_tokens == 32
+
+
 # ---------------------------------------------------------------------------
 # CoW prefix sharing
 # ---------------------------------------------------------------------------

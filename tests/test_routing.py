@@ -438,6 +438,55 @@ def test_train_cli_rejects_empty_train_only():
                     "--train-only", "does-not-exist"])
 
 
+def test_routing_dead_point_warns_and_warm_init_clears():
+    """Fresh checkpoint + --train-only routing is a dead point: routing
+    gradients flow only through the linear branch, whose output is
+    multiplied by the paper's ZERO-initialized sla_proj — they are all
+    exactly zero. check_routing_dead_point must warn on that state and
+    stay quiet once the proj is nonzero (tests assert BOTH paths)."""
+    from repro.launch import train
+
+    cfg = _lm_arch("learned")
+    params = tfm.init(jax.random.PRNGKey(0), cfg)  # paper init: proj=0
+    mask = adamw.trainable_mask(params, ("routing",))
+    with pytest.warns(UserWarning, match="dead point"):
+        assert train.check_routing_dead_point(params, mask) is True
+
+    # warm init replaces the zero proj with an epsilon identity ...
+    warm = train.routing_warm_init(params)
+    proj = np.asarray(warm["layers"]["sla_proj"])
+    eye = np.eye(proj.shape[-1], dtype=proj.dtype) \
+        * train.ROUTING_WARM_EPS
+    np.testing.assert_array_equal(
+        proj, np.broadcast_to(eye, proj.shape))
+    # ... and the untouched leaves are the SAME arrays, not copies
+    assert warm["layers"]["wq"] is params["layers"]["wq"]
+    # nonzero proj -> no warning, returns False
+    assert train.check_routing_dead_point(warm, mask) is False
+    # routing frozen -> not a dead point even with zero proj
+    frozen = adamw.trainable_mask(params, ("sla_proj",))
+    assert train.check_routing_dead_point(params, frozen) is False
+
+
+@pytest.mark.slow
+def test_train_cli_routing_dead_point_paths():
+    """End to end through launch/train.py: --train-only routing on a
+    fresh smoke checkpoint warns; adding --routing-warm-init does
+    not."""
+    import warnings
+
+    from repro.launch import train
+
+    args = ["--arch", "qwen3-1.7b", "--smoke", "--steps", "1",
+            "--routing-mode", "learned", "--train-only", "routing"]
+    with pytest.warns(UserWarning, match="dead point"):
+        train.main(args)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        train.main(args + ["--routing-warm-init"])
+    assert not [w for w in rec if "dead point" in str(w.message)]
+
+
 @pytest.mark.slow
 def test_serve_cli_routing_mode_learned():
     """launch/serve.py --routing-mode learned end to end (smoke): fresh

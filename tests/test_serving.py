@@ -461,6 +461,212 @@ def test_scheduler_inflight_metrics_are_none():
                for r in done)
 
 
+def test_percentile_nearest_rank():
+    """Nearest-rank percentile: rank = ceil(p*n), 1-indexed. The old
+    `int(p * n)` indexing read one element HIGH (p95 of 20 returned
+    sorted[19] — the max — instead of sorted[18])."""
+    from repro.serving.api import percentile
+
+    xs10 = [9.0, 1.0, 5.0, 3.0, 7.0, 0.0, 8.0, 2.0, 6.0, 4.0]
+    # p50 of 10 -> rank ceil(5.0) = 5 -> sorted[4]
+    assert percentile(xs10, 0.5) == sorted(xs10)[4] == 4.0
+    xs20 = [float(v) for v in range(20, 0, -1)]
+    # p95 of 20 -> rank ceil(19.0) = 19 -> sorted[18], NOT sorted[19]
+    assert percentile(xs20, 0.95) == sorted(xs20)[18] == 19.0
+    assert percentile(xs20, 1.0) == 20.0    # rank clamps to n
+    assert percentile(xs20, 0.0) == 1.0     # rank clamps to 1
+    assert percentile([3.0], 0.5) == 3.0
+    with pytest.raises(ValueError, match="empty"):
+        percentile([], 0.5)
+
+
+# ---------------------------------------------------------------------------
+# chunked admission prefill (tentpole)
+# ---------------------------------------------------------------------------
+def _chunk_arch(decode=False, kh=0.25):
+    """Chunk-eligible smoke config: per-row critical sets only
+    (col_capacity_factor=None — the column-capacity demotion pass
+    couples rows, see transformer.check_chunked_prefill)."""
+    cfg = get_arch("qwen3-1.7b").smoke()
+    sla = cfg.sla.replace(kh_frac=kh, kl_frac=0.0,
+                          col_capacity_factor=None)
+    if decode:
+        sla = sla.replace(decode_mode="sla")
+    return dataclasses.replace(cfg, sla=sla)
+
+
+def _step_until_tokens(sched, n, limit=200):
+    """step() until `n` token events were emitted; returns all events."""
+    events, toks = [], 0
+    for _ in range(limit):
+        if toks >= n:
+            break
+        new = sched.step()
+        events.extend(new)
+        toks += sum(1 for e in new if e.kind == "token")
+    assert toks >= n, f"only {toks} tokens after {limit} ticks"
+    return events
+
+
+@pytest.mark.parametrize("backend,decode_sla", [
+    ("gather", False), ("gather", True),
+    ("kernel", False), ("kernel", True),
+])
+def test_chunked_matches_blocking_bitwise(backend, decode_sla):
+    """The tentpole bar: chunked admission produces the SAME greedy
+    tokens as blocking admission (mixed lengths, slot turnover) AND a
+    mid-decode slot's cache leaves are bitwise equal — for gather and
+    fused-kernel execution, decode-SLA on and off."""
+    cfg = _chunk_arch(decode=decode_sla)
+    params = _params(cfg)
+    prompts = _prompts(cfg, lens=(64, 24, 48), seed=4)
+    budgets = (6, 8, 5)
+
+    def make(chunk):
+        return Scheduler(cfg, params, num_slots=2, max_len=96,
+                         prefill_bucket=64, decode_sla=decode_sla,
+                         backend=backend, paged=True,
+                         prefill_chunk_blocks=chunk)
+
+    def run(chunk):
+        s = make(chunk)
+        for p, b in zip(prompts, budgets):
+            s.submit(p, SamplingParams(max_new_tokens=b))
+        return [list(r.tokens_out) for r in s.drain()]
+
+    assert run(None) == run(1)
+
+    # cache-leaf parity mid-decode: one request in each scheduler,
+    # stopped after the same number of emitted tokens
+    from repro.models.transformer import paged_dense_view
+    live = {}
+    for chunk in (None, 1):
+        s = make(chunk)
+        s.submit(prompts[0], SamplingParams(max_new_tokens=8))
+        _step_until_tokens(s, 4)
+        live[chunk] = (s._live, paged_dense_view(cfg, s._live))
+    (la, va), (lb, vb) = live[None], live[1]
+    np.testing.assert_array_equal(np.asarray(la["pos"][0]),
+                                  np.asarray(lb["pos"][0]))
+    for key in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(va[key][:, 0]),
+                                      np.asarray(vb[key][:, 0]),
+                                      err_msg=key)
+    if decode_sla:
+        sa, sb = va["sla"], vb["sla"]
+        for key in ("hblk", "zblk", "kpool", "htot", "ztot", "qpool",
+                    "live_lut", "live_cnt", "live_marg"):
+            np.testing.assert_array_equal(np.asarray(sa[key][:, 0]),
+                                          np.asarray(sb[key][:, 0]),
+                                          err_msg=key)
+        np.testing.assert_array_equal(np.asarray(sa["rows"][0]),
+                                      np.asarray(sb["rows"][0]))
+        np.testing.assert_array_equal(np.asarray(sa["plan"].mc[:, 0]),
+                                      np.asarray(sb["plan"].mc[:, 0]))
+
+
+def test_chunked_admission_interleaves_decode():
+    """Decode tokens keep flowing BETWEEN a chunked admission's start
+    and its first token — the event order blocking admission cannot
+    produce (its prefill dispatch stalls the whole tick)."""
+    cfg = _chunk_arch()
+    params = _params(cfg)
+    prompts = _prompts(cfg, lens=(16, 64), seed=2)
+    sched = Scheduler(cfg, params, num_slots=2, max_len=96,
+                      prefill_bucket=64, paged=True,
+                      prefill_chunk_blocks=1)
+    r0 = sched.submit(prompts[0], SamplingParams(max_new_tokens=12))
+    events = _step_until_tokens(sched, 1)  # r0 is mid-decode
+    r1 = sched.submit(prompts[1], SamplingParams(max_new_tokens=4))
+    while sched.has_work:
+        events.extend(sched.step())
+    start1 = next(i for i, e in enumerate(events)
+                  if e.rid == r1 and e.kind == "start")
+    tok1 = next(i for i, e in enumerate(events)
+                if e.rid == r1 and e.kind == "token")
+    between = [e for e in events[start1:tok1]
+               if e.rid == r0 and e.kind == "token"]
+    # 64-token prompt = 4 one-block chunks = >= 3 ticks of interleaved
+    # decode between the long request's start and its first token
+    assert len(between) >= 3, len(between)
+    st = sched.stats
+    assert st.chunked_admissions == 2  # the 16-token prompt chunks too
+    assert st.prefill_chunks == 8      # 4 chunks each, no resume
+    assert st.prefill_tokens == 128    # dispatched tokens, not buckets
+
+
+def test_chunked_prefix_resume_skips_chunks():
+    """A second prompt sharing the first's chunk-aligned prefix resumes
+    from the stored carry at the last shared chunk boundary — it
+    dispatches ONE chunk, re-claims the shared pages from the intern
+    index, and still decodes exactly what blocking admission decodes."""
+    cfg = _chunk_arch()
+    params = _params(cfg)
+    rs = np.random.default_rng(5)
+    shared = rs.integers(0, cfg.vocab_size, size=48).astype(np.int32)
+    pa, pb = [np.concatenate([
+        shared, rs.integers(0, cfg.vocab_size, size=16).astype(np.int32)])
+        for _ in range(2)]
+    sched = Scheduler(cfg, params, num_slots=1, max_len=96,
+                      prefill_bucket=64, paged=True,
+                      prefill_chunk_blocks=1)
+    sched.submit(pa, SamplingParams(max_new_tokens=3))
+    sched.drain()
+    assert sched.stats.prefill_chunks == 4
+    assert sched.stats.prefill_tokens == 64
+    rid_b = sched.submit(pb, SamplingParams(max_new_tokens=3))
+    toks_b = [list(r.tokens_out) for r in sched.drain()
+              if r.rid == rid_b]
+    # resumed at chunk 3: one dispatch, 16 tokens, 3 prefix-page hits
+    assert sched.stats.prefill_chunks == 5
+    assert sched.stats.prefill_tokens == 80
+    assert sched.stats.prefix_hits >= 3
+    blocking = Scheduler(cfg, params, num_slots=1, max_len=96,
+                         prefill_bucket=64, paged=True)
+    blocking.submit(pb, SamplingParams(max_new_tokens=3))
+    assert [list(r.tokens_out) for r in blocking.drain()] == toks_b
+
+
+def test_chunked_dispatch_traces_once(monkeypatch):
+    """The chunk dispatch takes its start offset as a TRACED scalar:
+    every chunk index of every admission shares ONE compiled graph
+    (trace-count idiom from test_compile_count.py)."""
+    cfg = _chunk_arch()
+    params = _params(cfg)
+    calls = []
+    orig = tfm.prefill_chunk
+
+    def counted(*args, **kwargs):
+        calls.append(True)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(tfm, "prefill_chunk", counted)
+    sched = Scheduler(cfg, params, num_slots=1, max_len=96,
+                      prefill_bucket=64, paged=True,
+                      prefill_chunk_blocks=1)
+    rs = np.random.default_rng(6)
+    for _ in range(2):
+        sched.submit(rs.integers(0, cfg.vocab_size, size=64)
+                     .astype(np.int32),
+                     SamplingParams(max_new_tokens=3))
+    sched.drain()
+    assert sched.stats.prefill_chunks == 8  # 4 chunks x 2 admissions
+    assert len(calls) == 1, len(calls)
+
+
+def test_chunked_requires_paged_and_eligible_config():
+    cfg = _chunk_arch()
+    with pytest.raises(ValueError, match="paged"):
+        Scheduler(cfg, params=None, prefill_chunk_blocks=1)
+    with pytest.raises(ValueError, match=">= 1"):
+        Scheduler(cfg, params=None, paged=True, prefill_chunk_blocks=0)
+    capped = dataclasses.replace(
+        cfg, sla=cfg.sla.replace(col_capacity_factor=2.0))
+    with pytest.raises(ValueError, match="col_capacity_factor"):
+        Scheduler(capped, params=None, paged=True,
+                  prefill_chunk_blocks=1)
+
+
 def test_grow_cache_is_name_keyed():
     """_grow_cache pads exactly the leaves it names: k/v grow along the
     sequence axis with content preserved, pos passes through, and an
