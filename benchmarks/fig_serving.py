@@ -34,6 +34,18 @@ between decode steps). The acceptance metric
 `chunked_reduces_decode_stall` compares the two traces' max
 inter-token gap (`ServeStats.max_decode_gap_s`).
 
+A fifth stage measures disaggregated serving (DESIGN.md
+"Disaggregated serving"): one tick-indexed synthetic arrival + length
+trace is served twice through the `DisaggScheduler` pools — once
+undisturbed, once with a `FaultPlan` that kills a decode worker
+mid-stream so its residents requeue from their retained handoff
+bundles. Per run: per-pool occupancy, TTFT p50/p95, goodput (decode
+tokens of COMPLETED requests over wall time), fault counters, and a
+checksum of every request's greedy tokens. The acceptance booleans pin
+the tentpole claims: the healthy run completes everything, the faulted
+run loses nothing (with the kill actually firing), and the replayed
+trajectories are bitwise identical to the undisturbed run's.
+
 Everything lands in BENCH_serving.json with the acceptance booleans
 recomputed from the stored cells (the fig_decode honesty rule: a
 boolean reads exactly the cells its name points at, enforced by
@@ -75,6 +87,11 @@ STALL_MAX_LEN = 288
 STALL_CHUNK_BLOCKS = 1
 STALL_SHORT_BUDGET = 24
 STALL_LONG_BUDGET = 4
+# disagg stage: 1 prefill worker feeding 2 decode workers; the faulted
+# run kills decode:0 a few ticks in, while residents are mid-stream
+DISAGG_PREFILL_WORKERS = 1
+DISAGG_DECODE_WORKERS = 2
+DISAGG_KILL_AFTER_TICKS = 4
 
 
 def _setup():
@@ -267,6 +284,75 @@ def _run_stall(cfg, params, chunk_blocks):
             "decode_tokens": st.decode_tokens}
 
 
+def _disagg_trace(cfg, seed=5):
+    """Tick-indexed arrivals (deterministic — the disagg control plane
+    is tick-driven, so the trace replays exactly) with mixed prompt
+    lengths and decode budgets."""
+    rs = np.random.default_rng(seed)
+    lens = [int(n) for n in rs.integers(12, PROMPT_LEN + 1, size=N_REQ)]
+    prompts = [rs.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in lens]
+    budgets = [int(b) for b in rs.integers(4, 16, size=N_REQ)]
+    arrive_ticks = [int(t) for t in
+                    np.cumsum(rs.integers(0, 3, size=N_REQ))]
+    return prompts, budgets, arrive_ticks
+
+
+def _run_disagg(cfg, params, prompts, budgets, arrive_ticks,
+                kill: bool):
+    """Serve the trace through the disaggregated pools; per-token
+    decode steps so a kill lands mid-request, not between requests."""
+    from repro.distributed.fault_tolerance import FaultEvent, FaultPlan
+    from repro.serving import DisaggScheduler
+    from repro.serving.api import SamplingParams
+
+    dis = DisaggScheduler(
+        cfg, params, prefill_workers=DISAGG_PREFILL_WORKERS,
+        decode_workers=DISAGG_DECODE_WORKERS, slots_per_worker=SLOTS,
+        max_len=MAX_LEN, prefill_bucket=PROMPT_LEN,
+        decode_step_mode="token", sleep=lambda s: None)
+    # warm the compile caches off the clock, then arm the fault plan
+    # relative to the measured run's first tick (FaultEvent ticks index
+    # the scheduler's own tick counter, which the warmup advanced)
+    dis.submit(prompts[0][:12], SamplingParams(max_new_tokens=2))
+    dis.drain()
+    warm_rids = {r.rid for r in dis._requests}
+    dis.stats = type(dis.stats)()
+    if kill:
+        dis._faults = FaultPlan([FaultEvent(
+            tick=dis._tick_no + DISAGG_KILL_AFTER_TICKS, kind="kill",
+            pool="decode", worker=0)])
+
+    t0 = time.time()
+    i, tick = 0, 0
+    while i < N_REQ or dis.has_work:
+        while i < N_REQ and arrive_ticks[i] <= tick:
+            dis.submit(prompts[i],
+                       SamplingParams(max_new_tokens=budgets[i]))
+            i += 1
+        tick += 1
+        if dis.has_work:
+            dis.tick()
+    wall = time.time() - t0
+    done = [r for r in dis._requests if r.rid not in warm_rids]
+    ttfts = [r.metrics.ttft_s for r in done]
+    goodput = sum(len(r.tokens_out) for r in done) / max(wall, 1e-9)
+    checksum = ";".join(
+        f"{r.rid}:" + ",".join(str(t) for t in r.tokens_out)
+        for r in sorted(done, key=lambda r: r.rid))
+    st = dis.stats
+    return {"submitted": st.submitted, "completed": st.completed,
+            "goodput_tok_s": goodput,
+            "ttft_p50_ms": _pct(ttfts, 0.5) * 1e3,
+            "ttft_p95_ms": _pct(ttfts, 0.95) * 1e3,
+            "prefill_occupancy": st.prefill_occupancy(),
+            "decode_occupancy": dis.decode_occupancy(),
+            "handoffs": st.handoffs, "requeues": st.requeues,
+            "kills": st.kills, "retries": st.retries,
+            "straggler_drains": st.straggler_drains,
+            "tokens_checksum": checksum}
+
+
 def recompute_acceptance(payload: dict) -> dict:
     """Derive the acceptance booleans from EXACTLY the cells their
     names point at (same honesty contract as fig_decode's — see
@@ -293,6 +379,24 @@ def recompute_acceptance(payload: dict) -> dict:
         "chunked_reduces_decode_stall": (
             payload["stall"]["chunked"]["max_decode_gap_ms"]
             < payload["stall"]["blocking"]["max_decode_gap_ms"]),
+        # disagg claims: the healthy pools drain the whole trace...
+        "disagg_completes_all_healthy": (
+            payload["disagg"]["healthy"]["completed"]
+            == payload["disagg"]["healthy"]["submitted"]
+            and payload["disagg"]["healthy"]["submitted"] > 0),
+        # ...a mid-stream decode-worker kill loses NOTHING (and the
+        # kill + requeue actually fired — a faulted run where the
+        # worker was idle at kill time proves nothing)
+        "disagg_requeue_zero_lost": (
+            payload["disagg"]["faulted"]["completed"]
+            == payload["disagg"]["faulted"]["submitted"]
+            and payload["disagg"]["faulted"]["kills"] >= 1
+            and payload["disagg"]["faulted"]["requeues"] >= 1),
+        # ...and the requeued trajectories replay bitwise: every
+        # request's greedy tokens identical across the two runs
+        "disagg_fault_tokens_bitwise_equal": (
+            payload["disagg"]["faulted"]["tokens_checksum"]
+            == payload["disagg"]["healthy"]["tokens_checksum"]),
     }
 
 
@@ -357,6 +461,25 @@ def run(backend: str = "gather"):
                      f"{cell['prefill_chunks']} chunks, "
                      f"{cell['decode_tokens']} decode tok"))
 
+    # disaggregated pools: healthy vs kill-mid-stream trace replay
+    dprompts, dbudgets, dticks = _disagg_trace(cfg)
+    disagg = {}
+    for key, kill in (("healthy", False), ("faulted", True)):
+        cell = _run_disagg(cfg, params, dprompts, dbudgets, dticks,
+                           kill=kill)
+        disagg[key] = cell
+        rows.append((f"fig_serving.disagg.{key}.goodput_tok_s",
+                     cell["goodput_tok_s"],
+                     f"{cell['completed']}/{cell['submitted']} done, "
+                     f"kills={cell['kills']} "
+                     f"requeues={cell['requeues']} "
+                     f"ttft_p95={cell['ttft_p95_ms']:.0f}ms"))
+        rows.append((f"fig_serving.disagg.{key}.occupancy",
+                     cell["decode_occupancy"],
+                     f"decode pool {DISAGG_DECODE_WORKERS}w; prefill "
+                     f"pool {DISAGG_PREFILL_WORKERS}w occ "
+                     f"{cell['prefill_occupancy']:.2f}"))
+
     payload = {
         "config": {"n_req": N_REQ, "slots": SLOTS,
                    "prompt_len": PROMPT_LEN, "max_len": MAX_LEN,
@@ -365,10 +488,14 @@ def run(backend: str = "gather"):
                    "mean_gap_s": MEAN_GAP_S,
                    "stall_short": STALL_SHORT, "stall_long": STALL_LONG,
                    "stall_max_len": STALL_MAX_LEN,
-                   "stall_chunk_blocks": STALL_CHUNK_BLOCKS},
+                   "stall_chunk_blocks": STALL_CHUNK_BLOCKS,
+                   "disagg_prefill_workers": DISAGG_PREFILL_WORKERS,
+                   "disagg_decode_workers": DISAGG_DECODE_WORKERS,
+                   "disagg_kill_after_ticks": DISAGG_KILL_AFTER_TICKS},
         "paths": paths,
         "paged": paged,
         "stall": stall,
+        "disagg": disagg,
     }
     payload["acceptance"] = recompute_acceptance(payload)
     BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")

@@ -11,6 +11,7 @@
 #   scripts/ci.sh --serve         # serving API v2: scheduler parity suite
 #   scripts/ci.sh --paged         # paged KV + CoW prefix sharing suite
 #   scripts/ci.sh --chunked-prefill # chunked admission prefill suite
+#   scripts/ci.sh --disagg        # disaggregated pools + fault injection
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -109,6 +110,32 @@ if [[ "${1:-}" == "--chunked-prefill" ]]; then
     python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --scheduler continuous --paged --prefill-chunk 1 \
         --requests 3 --prompt-len 32 --max-new 4
+    exit 0
+fi
+
+if [[ "${1:-}" == "--disagg" ]]; then
+    # Disaggregated prefill/decode pools (DESIGN.md "Disaggregated
+    # serving"): fast first — fault-tolerance primitive units
+    # (watchdog/retry/FaultPlan; the module is slow-TIERED but cheap,
+    # so run it here explicitly) and the fault-injection parity matrix
+    # (healthy + kill-requeue bitwise parity, straggler drain,
+    # double-fault limbo check, flake backoff); then the slow combined
+    # trace-replay scenario, the benchmark's disagg cells + honesty
+    # guards, and a disagg serve-CLI smoke.
+    echo "=== disagg (fault primitives: watchdog/retry/FaultPlan) ==="
+    "${PYTEST[@]}" -x tests/test_fault_tolerance.py
+    echo "=== disagg (fast: fault-injection parity matrix) ==="
+    "${PYTEST[@]}" -x -m "not slow" tests/test_disagg.py
+    echo "=== disagg (slow: mixed-fault trace replay) ==="
+    "${PYTEST[@]}" -m slow tests/test_disagg.py
+    echo "=== disagg (trace-driven benchmark stage) ==="
+    PYTHONPATH="src:." python benchmarks/fig_serving.py
+    echo "=== disagg (benchmark honesty guards) ==="
+    "${PYTEST[@]}" -x tests/test_benchmarks.py
+    echo "=== disagg (serve CLI smoke) ==="
+    python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --disagg --prefill-workers 1 --decode-workers 2 \
+        --requests 4 --max-new 6 --batch 2 --prompt-len 32
     exit 0
 fi
 

@@ -8,16 +8,86 @@ atomic checkpoint (checkpoint/manager.py) with `latest_step()` resume;
 slower than `threshold x EMA` are flagged with the host id so the
 scheduler can drain/hot-swap the slow host; (c) data corruption ->
 loss/grad-norm NaN guards skip the update and count strikes.
+
+`FaultPlan`/`FaultEvent` are the deterministic injection side of the
+same contract: the disaggregated serving harness (serving/disagg.py)
+consumes a scripted schedule of kill/straggle/flake events so that
+worker loss, drain, and requeue are exercised reproducibly in tests
+instead of waiting for real hardware to fail.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+FAULT_KINDS = ("kill", "straggle", "flake")
+FAULT_POOLS = ("prefill", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scripted fault: at scheduler tick `tick`, do `kind` to
+    worker `worker` of pool `pool`.
+
+    kind == "kill":     the worker dies; its in-flight work must be
+                        requeued (or the loss surfaced loudly).
+    kind == "straggle": the worker's measured tick durations are
+                        multiplied by `factor` from then on, so the
+                        StragglerWatchdog sees a genuinely slow host.
+    kind == "flake":    the worker's next `failures` ticks raise a
+                        transient RuntimeError (absorbed by
+                        run_with_retries).
+    """
+    tick: int
+    kind: str
+    pool: str
+    worker: int
+    factor: float = 1.0
+    failures: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+        if self.pool not in FAULT_POOLS:
+            raise ValueError(f"unknown worker pool {self.pool!r}; "
+                             f"expected one of {FAULT_POOLS}")
+        if self.tick < 0:
+            raise ValueError("fault tick must be >= 0")
+
+
+class FaultPlan:
+    """A deterministic schedule of FaultEvents, popped by tick.
+
+    `due(tick)` returns (and consumes) every event whose tick has
+    arrived, in (tick, pool, worker) order so multi-fault ticks replay
+    identically run over run.
+    """
+
+    def __init__(self, events: Sequence[FaultEvent] = ()):
+        self._pending: List[FaultEvent] = sorted(
+            events, key=lambda e: (e.tick, e.pool, e.worker, e.kind))
+        self.fired: List[FaultEvent] = []
+
+    def due(self, tick: int) -> List[FaultEvent]:
+        ready = [e for e in self._pending if e.tick <= tick]
+        if ready:
+            self._pending = [e for e in self._pending if e.tick > tick]
+            self.fired.extend(ready)
+        return ready
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._pending
+
+    @property
+    def pending(self) -> Tuple[FaultEvent, ...]:
+        return tuple(self._pending)
 
 
 @dataclasses.dataclass
@@ -67,9 +137,13 @@ class NaNGuard:
 
 
 def run_with_retries(step_fn: Callable, max_retries: int = 2,
-                     on_retry: Optional[Callable] = None):
+                     on_retry: Optional[Callable] = None,
+                     sleep: Callable[[float], None] = time.sleep):
     """Execute one step, retrying on transient runtime errors (the
-    single-process analogue of restart-on-collective-timeout)."""
+    single-process analogue of restart-on-collective-timeout).
+
+    `sleep` is injectable so fault-injection tests can record the
+    backoff schedule instead of actually waiting for it."""
     for attempt in range(max_retries + 1):
         try:
             return step_fn()
@@ -78,4 +152,4 @@ def run_with_retries(step_fn: Callable, max_retries: int = 2,
                 raise
             if on_retry is not None:
                 on_retry(attempt, e)
-            time.sleep(min(2.0 ** attempt, 10.0))
+            sleep(min(2.0 ** attempt, 10.0))

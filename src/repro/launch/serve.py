@@ -30,6 +30,11 @@ end-to-end examples):
                             other slots keep decoding (DESIGN.md
                             "Chunked admission prefill"; requires
                             --paged, continuous scheduler)
+  --disagg                  disaggregated prefill/decode worker pools
+                            with handoff + fault-tolerant requeue
+                            (DESIGN.md "Disaggregated serving")
+  --prefill-workers/--decode-workers
+                            pool sizes for --disagg
 """
 from __future__ import annotations
 
@@ -133,6 +138,22 @@ def main(argv=None):
                          "sla.col_capacity_factor to None (printed) — "
                          "chunk classification is row-decomposable "
                          "only uncapped")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: a prefill worker pool "
+                         "runs admission, a decode worker pool runs "
+                         "token generation, with explicit handoff "
+                         "bundles (prefill cache + decode-SLA state) "
+                         "routed to the least-loaded decode worker and "
+                         "fault-tolerant requeue of a lost worker's "
+                         "in-flight requests (DESIGN.md 'Disaggregated "
+                         "serving'). Greedy tokens are bitwise equal to "
+                         "the single-Scheduler run. --batch sets slots "
+                         "PER decode worker; incompatible with --stream "
+                         "and --plan-reuse adaptive")
+    ap.add_argument("--prefill-workers", type=int, default=1,
+                    help="prefill pool size for --disagg")
+    ap.add_argument("--decode-workers", type=int, default=2,
+                    help="decode pool size for --disagg")
     ap.add_argument("--routing-mode", default=None,
                     choices=["threshold", "learned"],
                     help="block-classification router: 'threshold' ranks "
@@ -149,11 +170,22 @@ def main(argv=None):
         args.drift_threshold = parts[0] if len(parts) == 1 else tuple(parts)
     if args.stream and args.scheduler != "continuous":
         ap.error("--stream requires --scheduler continuous")
-    if args.paged and args.scheduler != "continuous":
-        ap.error("--paged requires --scheduler continuous")
-    if args.prefill_chunk is not None and not args.paged:
+    if args.paged and args.scheduler != "continuous" and not args.disagg:
+        ap.error("--paged requires --scheduler continuous or --disagg")
+    if args.prefill_chunk is not None and not args.paged \
+            and not args.disagg:
+        # in-process chunked admission lands through the page-table
+        # scatter; the disaggregated prefill POOL chunks carry-side,
+        # with no pages involved, so --disagg lifts the requirement
         ap.error("--prefill-chunk requires --paged (chunks land "
-                 "through the page-table scatter)")
+                 "through the page-table scatter) or --disagg")
+    if args.disagg and args.stream:
+        ap.error("--disagg prints pool stats, not a token stream; "
+                 "drop --stream")
+    if args.disagg and args.plan_reuse != "off":
+        ap.error("--disagg requires --plan-reuse off: requeue replays "
+                 "a lost worker's prefill, which must be a pure "
+                 "function of the prompt")
 
     from repro.core import backends as backend_registry
     backend_registry.resolve(args.backend)  # unknown names fail here, loudly
@@ -182,6 +214,52 @@ def main(argv=None):
     params = mdl.init(jax.random.PRNGKey(args.seed), cfg)
     rs = np.random.default_rng(args.seed)
     max_len = args.prompt_len + args.max_new + 8
+
+    if args.disagg:
+        from repro.serving.api import SamplingParams
+        from repro.serving.disagg import DisaggScheduler
+
+        ds = DisaggScheduler(cfg, params,
+                             prefill_workers=args.prefill_workers,
+                             decode_workers=args.decode_workers,
+                             slots_per_worker=args.batch,
+                             max_len=max_len, backend=args.backend,
+                             decode_sla=args.decode_sla or None,
+                             paged=args.paged or None,
+                             pool_pages=args.pool_pages,
+                             prefill_chunk_blocks=args.prefill_chunk)
+        t0 = time.time()
+        for i in range(args.requests):
+            ds.submit(
+                rs.integers(0, cfg.vocab_size,
+                            size=args.prompt_len).astype(np.int32),
+                SamplingParams(max_new_tokens=args.max_new))
+        done = ds.drain()
+        wall = time.time() - t0
+        st = ds.stats
+        print(f"{st.completed}/{st.submitted} requests in {wall:.1f}s "
+              f"over {st.ticks} ticks | prefill pool "
+              f"{args.prefill_workers}w occ "
+              f"{st.prefill_occupancy():.2f} "
+              f"({st.prefill_tokens} tok, {st.prefill_chunks} chunks) "
+              f"| decode pool {args.decode_workers}w occ "
+              f"{ds.decode_occupancy():.2f}")
+        print(f"faults: {st.kills} kills, {st.requeues} requeues, "
+              f"{st.straggler_drains} straggler drains, "
+              f"{st.retries} retries | {st.handoffs} handoffs")
+        for row in ds.pool_stats()["decode"]:
+            print(f"  {row['worker']}: admitted {row['admitted']}, "
+                  f"occupancy {row['occupancy']:.2f}, "
+                  f"{row['decode_tokens']} decode tokens"
+                  + (" [draining]" if row["draining"] else "")
+                  + ("" if row["alive"] else " [dead]"))
+        metrics = [r.metrics for r in done]
+        from repro.serving.api import percentile as pct
+        ttfts = [m.ttft_s for m in metrics if m.ttft_s is not None]
+        if ttfts:
+            print(f"per-request: TTFT p50 {pct(ttfts, 0.5)*1e3:.0f}ms "
+                  f"/ p95 {pct(ttfts, 0.95)*1e3:.0f}ms")
+        return done
 
     if args.scheduler == "continuous" and args.stream:
         # drive the v2 API directly so events stream as they happen

@@ -1,11 +1,16 @@
-"""Serving layer: v2 continuous-batching API + the v1 static engine."""
-from repro.serving.api import (RequestMetrics, RequestState, SamplingParams,
-                               Scheduler, ServedRequest, ServeStats,
-                               StreamEvent)
+"""Serving layer: v2 continuous-batching API, the disaggregated
+prefill/decode worker pools, and the v1 static engine."""
+from repro.serving.api import (PrefillEngine, RequestMetrics,
+                               RequestState, SamplingParams, Scheduler,
+                               ServedRequest, ServeStats, StreamEvent)
+from repro.serving.disagg import (DecodeWorker, DisaggScheduler,
+                                  DisaggStats, HandoffBundle,
+                                  PrefillWorker, least_loaded)
 from repro.serving.engine import Request, ServingEngine
 
 __all__ = [
-    "Request", "RequestMetrics", "RequestState", "SamplingParams",
-    "Scheduler", "ServedRequest", "ServeStats", "ServingEngine",
-    "StreamEvent",
+    "DecodeWorker", "DisaggScheduler", "DisaggStats", "HandoffBundle",
+    "PrefillEngine", "PrefillWorker", "Request", "RequestMetrics",
+    "RequestState", "SamplingParams", "Scheduler", "ServedRequest",
+    "ServeStats", "ServingEngine", "StreamEvent", "least_loaded",
 ]

@@ -299,6 +299,136 @@ def check_serving_family(cfg: ArchConfig, mdl, plan_reuse: str,
 
 
 # ---------------------------------------------------------------------------
+# the prefill engine (worker-reusable prefill compute)
+# ---------------------------------------------------------------------------
+class PrefillEngine:
+    """The worker-reusable prefill half of the scheduler (DESIGN.md
+    "Disaggregated serving"): the jitted (1, bucket) prefill closures
+    (fresh / plan-build / drift-gated reuse), the chunked-prefill
+    chunk / finalize dispatches, the zero-carry prototypes per bucket,
+    and the LRU of chunk-boundary carry snapshots.
+
+    The Scheduler owns one for in-process admissions; a disaggregated
+    prefill worker pool (serving/disagg.py) shares ONE across workers,
+    so jit caches and carry snapshots amortize across the pool and a
+    requeued request re-prefills bitwise-identically on any worker —
+    prefill here is a pure function of (padded prompt bytes, bucket)
+    whenever plan_reuse is off."""
+
+    def __init__(self, cfg: ArchConfig, params, mdl, *, backend: str,
+                 compute_dtype, decode_sla: bool, max_len: int,
+                 drift_threshold, plan_reuse: str = "off",
+                 chunk_tokens: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.mdl = mdl
+        self.compute_dtype = compute_dtype
+        self.decode_sla = decode_sla
+        self.max_len = max_len
+        self.plan_reuse = plan_reuse
+        self.chunk_tokens = chunk_tokens
+        dkw = {"decode_max_len": max_len} if decode_sla else {}
+        thr = drift_threshold
+
+        @jax.jit
+        def _prefill(params, tokens):
+            return mdl.prefill(params, cfg, tokens, backend=backend,
+                               compute_dtype=compute_dtype, **dkw)
+
+        @jax.jit
+        def _prefill_plan(params, tokens):
+            return mdl.prefill(params, cfg, tokens, backend=backend,
+                               compute_dtype=compute_dtype,
+                               return_plans=True, **dkw)
+
+        @jax.jit
+        def _prefill_reuse(params, tokens, plans):
+            return mdl.prefill(params, cfg, tokens, backend=backend,
+                               compute_dtype=compute_dtype, plans=plans,
+                               drift_threshold=thr, return_plans=True,
+                               **dkw)
+
+        self._prefill = _prefill
+        self._prefill_plan = _prefill_plan
+        self._prefill_reuse = _prefill_reuse
+
+        if chunk_tokens:
+            dmx = max_len if decode_sla else None
+
+            # `start` is a TRACED int32, so one compiled graph covers
+            # every chunk index of a given (bucket, chunk) shape pair
+            @jax.jit
+            def _chunk(params, tokens, carry, start):
+                return mdl.prefill_chunk(params, cfg, tokens, carry,
+                                         start,
+                                         compute_dtype=compute_dtype,
+                                         backend=backend,
+                                         decode_max_len=dmx)
+
+            @jax.jit
+            def _finalize(carry):
+                return mdl.finalize_chunked_prefill(cfg, carry,
+                                                    decode_max_len=dmx)
+
+            self._chunk_jit = _chunk
+            self._finalize_jit = _finalize
+
+        self._carry_protos: dict = {}
+        self._carry_snaps = collections.OrderedDict()
+        self._carry_cap = 16
+
+    def run(self, toks: jnp.ndarray, plans, stats: ServeStats,
+            num_layers: int):
+        """(1, bucket) prefill. With plan_reuse off, `plans` passes
+        through untouched; otherwise the shared drift-gated reuse path
+        runs and the updated plan stack comes back. Returns
+        (last_hidden, cache, plans)."""
+        if self.plan_reuse == "off":
+            last_hidden, cache = self._prefill(self.params, toks)
+            return last_hidden, cache, plans
+        return prefill_with_plan_reuse(
+            self._prefill_plan, self._prefill_reuse, self.params, toks,
+            plans, stats, num_layers)
+
+    def logits(self, last_hidden) -> np.ndarray:
+        """(1, vocab) first-token logits row, on the host."""
+        return np.asarray(logits_from_hidden(self.params, last_hidden))
+
+    # -- chunked prefill (DESIGN.md "Chunked admission prefill") -----------
+    def chunk(self, toks_span: jnp.ndarray, carry, start):
+        """Run ONE prefill chunk; returns (carry, last_hidden)."""
+        return self._chunk_jit(self.params, toks_span, carry, start)
+
+    def finalize(self, carry):
+        """Finalize a completed carry into blocking prefill's cache."""
+        return self._finalize_jit(carry)
+
+    def carry_proto(self, bucket: int):
+        """Zero chunked-prefill carry for `bucket` (cached; the arrays
+        are immutable, so every job can start from the same one)."""
+        proto = self._carry_protos.get(bucket)
+        if proto is None:
+            proto = self.mdl.make_prefill_carry(
+                self.cfg, bucket, compute_dtype=self.compute_dtype,
+                decode_sla=self.decode_sla)
+            self._carry_protos[bucket] = proto
+        return proto
+
+    def carry_get(self, key):
+        """LRU lookup of a chunk-boundary carry snapshot (touches)."""
+        snap = self._carry_snaps.get(key)
+        if snap is not None:
+            self._carry_snaps.move_to_end(key)
+        return snap
+
+    def carry_put(self, key, carry):
+        self._carry_snaps[key] = carry
+        self._carry_snaps.move_to_end(key)
+        while len(self._carry_snaps) > self._carry_cap:
+            self._carry_snaps.popitem(last=False)
+
+
+# ---------------------------------------------------------------------------
 # the scheduler
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -430,17 +560,13 @@ class Scheduler:
         self._plans = None  # (1, bucket) plan stack for plan_reuse
         self._stat_base = [None] * num_slots  # decode-SLA counter bases
         # chunked-admission state (DESIGN.md "Chunked admission
-        # prefill"): one optional in-flight _PrefillJob per slot, a
-        # zero-carry prototype per bucket size, and an LRU of carries
-        # saved at every chunk boundary so a shared padded prefix
-        # resumes past its chunks instead of recomputing them
+        # prefill"): one optional in-flight _PrefillJob per slot; the
+        # carry prototypes and boundary-snapshot LRU live on the
+        # PrefillEngine below
         self.prefill_chunk_blocks = prefill_chunk_blocks
         self._chunk_tokens = ((prefill_chunk_blocks or 0) * self.block)
         self._job_by_slot: List[Optional[_PrefillJob]] = \
             [None] * num_slots
-        self._carry_protos: dict = {}
-        self._carry_snaps = collections.OrderedDict()
-        self._carry_cap = 16
         self._last_token_t: Optional[float] = None
 
         if paged:
@@ -480,26 +606,15 @@ class Scheduler:
             self._snapshots = collections.OrderedDict()
             self._snapshot_cap = 32
 
+        # the prefill half lives in a worker-reusable engine (also the
+        # unit a disaggregated prefill pool shares; serving/disagg.py)
+        self._pf = PrefillEngine(
+            cfg, params, self.mdl, backend=backend,
+            compute_dtype=compute_dtype, decode_sla=decode_sla,
+            max_len=self.max_len, drift_threshold=self.drift_threshold,
+            plan_reuse=plan_reuse, chunk_tokens=self._chunk_tokens)
+
         mdl, backend_, thr = self.mdl, backend, self.drift_threshold
-        dkw = {"decode_max_len": self.max_len} if decode_sla else {}
-
-        @jax.jit
-        def _prefill(params, tokens):
-            return mdl.prefill(params, cfg, tokens, backend=backend_,
-                               compute_dtype=compute_dtype, **dkw)
-
-        @jax.jit
-        def _prefill_plan(params, tokens):
-            return mdl.prefill(params, cfg, tokens, backend=backend_,
-                               compute_dtype=compute_dtype,
-                               return_plans=True, **dkw)
-
-        @jax.jit
-        def _prefill_reuse(params, tokens, plans):
-            return mdl.prefill(params, cfg, tokens, backend=backend_,
-                               compute_dtype=compute_dtype, plans=plans,
-                               drift_threshold=thr, return_plans=True,
-                               **dkw)
 
         if decode_sla:
             def _one(params, token, cache):
@@ -540,27 +655,6 @@ class Scheduler:
                 single = dict(single, k=jnp.pad(single["k"], pad),
                               v=jnp.pad(single["v"], pad))
             return mdl.insert_slot(live, single, slot)
-
-        if self._chunk_tokens:
-            dmx = self.max_len if decode_sla else None
-
-            # `start` is a TRACED int32, so one compiled graph covers
-            # every chunk index of a given (bucket, chunk) shape pair
-            @jax.jit
-            def _chunk(params, tokens, carry, start):
-                return mdl.prefill_chunk(params, cfg, tokens, carry,
-                                         start,
-                                         compute_dtype=compute_dtype,
-                                         backend=backend_,
-                                         decode_max_len=dmx)
-
-            @jax.jit
-            def _finalize(carry):
-                return mdl.finalize_chunked_prefill(cfg, carry,
-                                                    decode_max_len=dmx)
-
-            self._chunk = _chunk
-            self._finalize = _finalize
 
         # masked decode pair for MIXED drain ticks (some active slots
         # need per-token host control, the rest are pure-greedy): each
@@ -605,9 +699,6 @@ class Scheduler:
 
             return jax.lax.fori_loop(0, nsteps, body, (token, cache, buf))
 
-        self._prefill = _prefill
-        self._prefill_plan = _prefill_plan
-        self._prefill_reuse = _prefill_reuse
         self._decode = _decode
         self._decode_multi = _decode_multi
         self._decode_mask = _decode_mask
@@ -656,6 +747,74 @@ class Scheduler:
         self._queue.append(r)
         self._requests.append(r)
         return r.rid
+
+    def free_slots(self) -> List[int]:
+        """Slots with neither a resident request nor an in-flight
+        chunked-prefill job — the ones an external admission may take."""
+        return [j for j in range(self.num_slots)
+                if self._slots[j] is None and self._job_by_slot[j] is None]
+
+    def admit_external(self, r: ServedRequest, slot: int, cache, logits,
+                       toks: np.ndarray, bucket: int, *, prefilled: int,
+                       plan_built: bool = True,
+                       start_emitted: bool = True) -> List[StreamEvent]:
+        """Admit an externally-prefilled request into `slot` — the
+        disaggregated handoff path (serving/disagg.py): a prefill
+        worker ran the (1, bucket) prefill and hands over the bundle
+        (the batch-1 prefill cache, the (1, vocab) first-token logits
+        row, and the left-padded prompt). Runs blocking admission's
+        tail verbatim — paged: page claim -> page-table scatter ->
+        full-prompt snapshot; unpaged: `insert_slot` — so the slot's
+        cache leaves and every subsequent greedy token are bitwise what
+        self-admission of the same prompt at the same bucket would have
+        produced. Re-admitting the SAME bundle after a worker loss
+        replays the same trajectory (requeue parity).
+
+        `prefilled` is the prompt-token count the prefill actually
+        dispatched (0 for a replayed bundle — nothing was recomputed);
+        `plan_built` gates decode-plan-build accounting the same way."""
+        if self._slots[slot] is not None \
+                or self._job_by_slot[slot] is not None:
+            raise ValueError(
+                f"slot {slot} is occupied; admit_external needs a slot "
+                f"from free_slots()")
+        r.state = RequestState.PREFILLING
+        r.slot = slot
+        t0 = time.time()
+        if r.metrics.admit_t == 0.0:
+            r.metrics.admit_t = t0
+        # the handoff bucket raises this scheduler's shared floor
+        # exactly like a self-admitted long prompt would
+        if self._bucket is None or bucket > self._bucket:
+            self._bucket = bucket
+            self._plans = None
+        if bucket + r.sampling.max_new_tokens > self.max_len:
+            r.state = RequestState.QUEUED
+            r.slot = None
+            raise ValueError(
+                f"max_len={self.max_len} cannot hold handoff request "
+                f"{r.rid}: bucket {bucket} plus "
+                f"{r.sampling.max_new_tokens} new tokens does not fit; "
+                f"raise max_len to >= "
+                f"{bucket + r.sampling.max_new_tokens}")
+        if self.paged:
+            padded = np.asarray(toks[0])
+            keys = self._page_keys(padded)
+            pids = [self._claim_page(key) for key in keys]
+            self._live = self._admit_paged_jit(
+                self._live, cache, slot, jnp.asarray(pids, jnp.int32))
+            self._set_slot_pages(slot, pids, bucket=bucket)
+            self._store_snapshot((bucket, padded.tobytes()), cache,
+                                 logits)
+            self._sync_page_stats()
+        else:
+            self._live = self._admit_jit(self._live, cache, slot)
+        events: List[StreamEvent] = []
+        self._finish_admission(r, slot, logits, t0, events,
+                               prefilled=prefilled,
+                               plan_built=plan_built,
+                               start_emitted=start_emitted)
+        return events
 
     @property
     def has_work(self) -> bool:
@@ -966,11 +1125,8 @@ class Scheduler:
 
     def _run_prefill(self, toks: jnp.ndarray):
         """(1, bucket) prefill, through the plan-reuse path if enabled."""
-        if self.plan_reuse == "off":
-            return self._prefill(self.params, toks)
-        last_hidden, cache, self._plans = prefill_with_plan_reuse(
-            self._prefill_plan, self._prefill_reuse, self.params, toks,
-            self._plans, self.stats, self.cfg.num_layers)
+        last_hidden, cache, self._plans = self._pf.run(
+            toks, self._plans, self.stats, self.cfg.num_layers)
         return last_hidden, cache
 
     # -- paged KV internals (DESIGN.md "Paged KV & prefix caching") --------
@@ -1083,23 +1239,6 @@ class Scheduler:
         return logits
 
     # -- chunked admission (DESIGN.md "Chunked admission prefill") ---------
-    def _carry_proto(self, bucket: int):
-        """Zero chunked-prefill carry for `bucket` (cached; the arrays
-        are immutable, so every job can start from the same one)."""
-        proto = self._carry_protos.get(bucket)
-        if proto is None:
-            proto = self.mdl.make_prefill_carry(
-                self.cfg, bucket, compute_dtype=self.compute_dtype,
-                decode_sla=self.decode_sla)
-            self._carry_protos[bucket] = proto
-        return proto
-
-    def _carry_put(self, key, carry):
-        self._carry_snaps[key] = carry
-        self._carry_snaps.move_to_end(key)
-        while len(self._carry_snaps) > self._carry_cap:
-            self._carry_snaps.popitem(last=False)
-
     def _claim_job_pages(self, job: _PrefillJob, lo: int, hi: int):
         """Intern-or-alloc the pages covering padded tokens [lo, hi) —
         one pool ref each, held by the job until `_set_slot_pages`
@@ -1126,13 +1265,13 @@ class Scheduler:
         claimed by intern lookup instead of recomputation."""
         bucket, ct = self._bucket, self._chunk_tokens
         job = _PrefillJob(r=r, slot=slot, toks=toks, keys=keys,
-                          bucket=bucket, carry=self._carry_proto(bucket),
+                          bucket=bucket,
+                          carry=self._pf.carry_proto(bucket),
                           num_chunks=-(-bucket // ct), t0=t0)
         for c in range(job.num_chunks - 1, 0, -1):
             ckey = (bucket, toks[0, :c * ct].tobytes())
-            snap = self._carry_snaps.get(ckey)
+            snap = self._pf.carry_get(ckey)
             if snap is not None:
-                self._carry_snaps.move_to_end(ckey)
                 job.carry = snap
                 job.next_chunk = c
                 self._claim_job_pages(job, 0, c * ct)
@@ -1153,9 +1292,8 @@ class Scheduler:
         lo = job.next_chunk * ct
         hi = min(lo + ct, job.bucket)
         t0 = time.time()
-        carry, last_hidden = self._chunk(
-            self.params, jnp.asarray(job.toks[:, lo:hi]), job.carry,
-            jnp.int32(lo))
+        carry, last_hidden = self._pf.chunk(
+            jnp.asarray(job.toks[:, lo:hi]), job.carry, jnp.int32(lo))
         carry = jax.block_until_ready(carry)
         self.stats.prefill_s += time.time() - t0
         self.stats.prefill_chunks += 1
@@ -1164,8 +1302,8 @@ class Scheduler:
         job.dispatched += hi - lo
         self._claim_job_pages(job, lo, hi)
         if hi < job.bucket:  # full-prompt resume is the snapshot's job
-            self._carry_put((job.bucket, job.toks[0, :hi].tobytes()),
-                            carry)
+            self._pf.carry_put((job.bucket, job.toks[0, :hi].tobytes()),
+                               carry)
         job.next_chunk += 1
         if job.next_chunk >= job.num_chunks:
             self._complete_job(slot, job, events)
@@ -1178,7 +1316,7 @@ class Scheduler:
         scatter it into `slot` through the page table, store the
         full-prompt snapshot, emit the first token."""
         t0 = time.time()
-        cache = self._finalize(job.carry)
+        cache = self._pf.finalize(job.carry)
         logits = np.asarray(
             logits_from_hidden(self.params, job.last_hidden))
         self._live = self._admit_paged_jit(

@@ -174,6 +174,48 @@ class PagePool:
             return True
         return False
 
+    # -- invariants ---------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Assert every structural invariant the pool is built on; the
+        property-test suite (tests/test_paged.py) calls this after
+        every randomized operation.  Raises AssertionError with the
+        violated condition spelled out.
+
+        1. refcounts are never negative;
+        2. the zero page is permanently pinned: refs >= 1, never on
+           the free list, never interned;
+        3. the free list is exactly the refcount-0 pages, each once;
+        4. the intern index is a bijection (key <-> pid both ways) and
+           every interned page holds at least the index's own ref;
+        5. every LRU eviction candidate is index-only (refs == 1 and
+           interned) or stale (already evicted/re-referenced — those
+           are skipped lazily by _evict_one)."""
+        assert all(r >= 0 for r in self._refs), \
+            f"negative refcount: {self._refs}"
+        assert self._refs[ZERO_PAGE] >= 1, "zero page lost its pin"
+        assert ZERO_PAGE not in self._free, "zero page on the free list"
+        assert ZERO_PAGE not in self._by_pid, "zero page interned"
+        free_set = set(self._free)
+        assert len(free_set) == len(self._free), \
+            f"duplicate pids on the free list: {sorted(self._free)}"
+        zero_ref = {pid for pid in range(self.num_pages)
+                    if self._refs[pid] == 0}
+        assert free_set == zero_ref, \
+            (f"free list {sorted(free_set)} != refcount-0 pages "
+             f"{sorted(zero_ref)}")
+        assert len(self._index) == len(self._by_pid), \
+            "intern index and reverse map disagree in size"
+        for key, pid in self._index.items():
+            assert self._by_pid.get(pid) == key, \
+                f"intern bijection broken for pid {pid}"
+            assert self._refs[pid] >= 1, \
+                f"interned page {pid} has no reference"
+        for key in self._lru:
+            pid = self._index.get(key)
+            if pid is not None:  # stale entries are legal (lazy purge)
+                assert self._refs[pid] >= 1, \
+                    f"LRU candidate {pid} unreferenced"
+
     # -- copy-on-write ------------------------------------------------------
     def ensure_private(self, pid: int) -> Tuple[int, Optional[int]]:
         """Make `pid` exclusively owned by the caller before a write.

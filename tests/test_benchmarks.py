@@ -106,6 +106,35 @@ def test_serving_acceptance_matches_recompute():
     assert acc["chunked_reduces_decode_stall"] == (
         payload["stall"]["chunked"]["max_decode_gap_ms"]
         < payload["stall"]["blocking"]["max_decode_gap_ms"])
+    assert acc["disagg_fault_tokens_bitwise_equal"] == (
+        payload["disagg"]["faulted"]["tokens_checksum"]
+        == payload["disagg"]["healthy"]["tokens_checksum"])
+    assert acc["disagg_requeue_zero_lost"] == (
+        payload["disagg"]["faulted"]["completed"]
+        == payload["disagg"]["faulted"]["submitted"]
+        and payload["disagg"]["faulted"]["kills"] >= 1
+        and payload["disagg"]["faulted"]["requeues"] >= 1)
+
+
+def _synthetic_serving_payload():
+    """Hand-built cells where every headline claim HOLDS — the honesty
+    tests then flip individual cells and watch the booleans follow."""
+    return {
+        "paths": {"static": {"occupancy": 0.5},
+                  "continuous": {"occupancy": 0.9}},
+        "paged": {"shared_prefix": {"page_allocs": 10},
+                  "unique_prompts": {"page_allocs": 20}},
+        "stall": {"blocking": {"max_decode_gap_ms": 5.0},
+                  "chunked": {"max_decode_gap_ms": 2.0}},
+        "disagg": {
+            "healthy": {"submitted": 10, "completed": 10,
+                        "kills": 0, "requeues": 0,
+                        "tokens_checksum": "0:1,2,3;1:4,5"},
+            "faulted": {"submitted": 10, "completed": 10,
+                        "kills": 1, "requeues": 2,
+                        "tokens_checksum": "0:1,2,3;1:4,5"},
+        },
+    }
 
 
 def test_serving_recompute_is_honest_on_synthetic_stall_cells():
@@ -113,17 +142,51 @@ def test_serving_recompute_is_honest_on_synthetic_stall_cells():
     LOSES: the boolean must report that, not the headline claim."""
     from benchmarks.fig_serving import recompute_acceptance
 
-    payload = {
-        "paths": {"static": {"occupancy": 0.5},
-                  "continuous": {"occupancy": 0.9}},
-        "paged": {"shared_prefix": {"page_allocs": 10},
-                  "unique_prompts": {"page_allocs": 20}},
-        "stall": {"blocking": {"max_decode_gap_ms": 5.0},
-                  "chunked": {"max_decode_gap_ms": 9.0}},
-    }
+    payload = _synthetic_serving_payload()
+    payload["stall"]["chunked"]["max_decode_gap_ms"] = 9.0
     acc = recompute_acceptance(payload)
     assert acc["chunked_reduces_decode_stall"] is False  # 9 > 5
     assert acc["continuous_beats_static_occupancy"] is True
     payload["stall"]["chunked"]["max_decode_gap_ms"] = 2.0
     assert recompute_acceptance(payload)[
         "chunked_reduces_decode_stall"] is True
+
+
+def test_serving_recompute_is_honest_on_synthetic_disagg_cells():
+    """The disagg booleans read exactly their named cells: mislabel a
+    cell and the matching boolean — and ONLY it — must flip."""
+    from benchmarks.fig_serving import recompute_acceptance
+
+    base = _synthetic_serving_payload()
+    assert recompute_acceptance(base)["disagg_completes_all_healthy"]
+    assert recompute_acceptance(base)["disagg_requeue_zero_lost"]
+    assert recompute_acceptance(base)["disagg_fault_tokens_bitwise_equal"]
+
+    # a lost request in the faulted run
+    p = _synthetic_serving_payload()
+    p["disagg"]["faulted"]["completed"] = 9
+    acc = recompute_acceptance(p)
+    assert acc["disagg_requeue_zero_lost"] is False
+    assert acc["disagg_completes_all_healthy"] is True
+
+    # the kill never fired (idle worker): zero-lost proves nothing
+    p = _synthetic_serving_payload()
+    p["disagg"]["faulted"]["kills"] = 0
+    assert recompute_acceptance(p)["disagg_requeue_zero_lost"] is False
+    p = _synthetic_serving_payload()
+    p["disagg"]["faulted"]["requeues"] = 0
+    assert recompute_acceptance(p)["disagg_requeue_zero_lost"] is False
+
+    # a single diverging token breaks bitwise equality
+    p = _synthetic_serving_payload()
+    p["disagg"]["faulted"]["tokens_checksum"] = "0:1,2,3;1:4,6"
+    acc = recompute_acceptance(p)
+    assert acc["disagg_fault_tokens_bitwise_equal"] is False
+    assert acc["disagg_requeue_zero_lost"] is True
+
+    # an incomplete healthy run
+    p = _synthetic_serving_payload()
+    p["disagg"]["healthy"]["completed"] = 0
+    p["disagg"]["healthy"]["submitted"] = 0
+    assert recompute_acceptance(p)[
+        "disagg_completes_all_healthy"] is False

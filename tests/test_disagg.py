@@ -1,0 +1,424 @@
+"""Disaggregated prefill/decode pools (ISSUE 9): fault-injection parity.
+
+Pillars:
+  * bitwise token parity — the disaggregated pools (1 prefill worker,
+    2 decode workers, least-loaded routing, explicit HandoffBundle
+    scatter) produce per-request greedy tokens bitwise equal to a
+    single-Scheduler run, for gather and kernel backends, decode-SLA
+    on and off;
+  * requeue determinism — killing a decode worker mid-stream requeues
+    its in-flight requests from their retained bundles, and the
+    replayed trajectories are STILL bitwise equal to the undisturbed
+    baseline (prefill is a pure function of (padded prompt, bucket):
+    plan_reuse is pinned off);
+  * straggler drain — a flagged worker finishes its residents, takes
+    no new admissions, and zero requests are lost;
+  * loud double-fault — a request whose requeue budget is exhausted is
+    returned to the QUEUE (state QUEUED, no slot, no partial tokens —
+    the PR 5 no-half-admitted-limbo invariant) and the loss raises;
+  * flake absorption — injected transient faults are retried under the
+    exact min(2**attempt, 10) backoff with the injected sleep;
+  * the slow trace-replay tier: paged + chunked prefill + decode-SLA
+    with kill + straggle + flake mixed into one staggered trace, still
+    bitwise equal to the baseline.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.distributed.fault_tolerance import (FaultEvent, FaultPlan,
+                                               StragglerWatchdog)
+from repro.models import transformer as tfm
+from repro.serving import DisaggScheduler, least_loaded
+from repro.serving.api import (RequestState, SamplingParams, Scheduler)
+
+import jax
+
+LENS = (32, 20, 24, 16)
+BUDGETS = (6, 9, 4, 7)
+BUCKET = 32
+
+
+def _arch(decode=False, kh=1.0, kl=0.0, chunk=False):
+    cfg = get_arch("qwen3-1.7b").smoke()
+    sla = cfg.sla.replace(kh_frac=kh, kl_frac=kl)
+    if decode:
+        sla = sla.replace(decode_mode="sla")
+    if chunk:
+        # chunk-eligible: per-row critical sets only (the column-
+        # capacity demotion pass couples rows across chunks)
+        sla = sla.replace(col_capacity_factor=None)
+    return dataclasses.replace(cfg, sla=sla)
+
+
+def _params(cfg, proj_scale=0.3):
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    params["layers"]["sla_proj"] = jax.random.normal(
+        jax.random.PRNGKey(7), params["layers"]["sla_proj"].shape) \
+        * proj_scale
+    return params
+
+
+def _prompts(cfg, lens=LENS, seed=0):
+    rs = np.random.default_rng(seed)
+    return [rs.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+            for n in lens]
+
+
+def _baseline_tokens(cfg, params, prompts, budgets, *, backend,
+                     decode_sla, max_len=96, **kw):
+    """Greedy tokens from one plain Scheduler, keyed by rid."""
+    sched = Scheduler(cfg, params, num_slots=2, max_len=max_len,
+                      backend=backend, decode_sla=decode_sla,
+                      prefill_bucket=BUCKET, plan_reuse="off", **kw)
+    for p, b in zip(prompts, budgets):
+        sched.submit(p, SamplingParams(max_new_tokens=b))
+    return {r.rid: list(r.tokens_out) for r in sched.drain()}
+
+
+def _disagg_tokens(dis):
+    return {r.rid: list(r.tokens_out) for r in dis._requests}
+
+
+class TickClock:
+    """Deterministic virtual clock: every call advances 0.5s, so each
+    measured decode tick spans exactly 0.5 virtual seconds."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 0.5
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# routing unit
+# ---------------------------------------------------------------------------
+def test_least_loaded_picks_min_load_then_wid():
+    a = SimpleNamespace(wid=0, load=2)
+    b = SimpleNamespace(wid=1, load=1)
+    c = SimpleNamespace(wid=2, load=1)
+    assert least_loaded([a, b, c]) is b  # ties break toward lower wid
+    assert least_loaded([a]) is a
+    assert least_loaded([]) is None
+
+
+def test_submit_too_long_raises_loudly():
+    cfg = _arch()
+    dis = DisaggScheduler(cfg, _params(cfg), max_len=48,
+                          prefill_bucket=BUCKET)
+    with pytest.raises(ValueError, match="max_len"):
+        dis.submit(np.arange(32, dtype=np.int32),
+                   SamplingParams(max_new_tokens=32))
+    with pytest.raises(ValueError, match="empty prompt"):
+        dis.submit(np.zeros((0,), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: healthy AND kill-mid-stream requeue, full matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend,decode_sla", [
+    ("gather", False), ("gather", True),
+    ("kernel", False), ("kernel", True),
+])
+def test_disagg_parity_healthy_and_kill_requeue(backend, decode_sla):
+    """The acceptance bar: per-request greedy tokens from the
+    disaggregated pools are bitwise equal to a single-Scheduler run —
+    both undisturbed AND when a decode worker is killed mid-stream and
+    its residents replay from their retained handoff bundles."""
+    cfg = _arch(decode=decode_sla)
+    params = _params(cfg)
+    prompts = _prompts(cfg)
+    want = _baseline_tokens(cfg, params, prompts, BUDGETS,
+                            backend=backend, decode_sla=decode_sla)
+
+    # healthy run: rolled decode drains, least-loaded routing
+    dis = DisaggScheduler(cfg, params, prefill_workers=1,
+                          decode_workers=2, slots_per_worker=2,
+                          max_len=96, backend=backend,
+                          decode_sla=decode_sla, prefill_bucket=BUCKET)
+    for p, b in zip(prompts, BUDGETS):
+        dis.submit(p, SamplingParams(max_new_tokens=b))
+    dis.drain()
+    assert _disagg_tokens(dis) == want
+    assert dis.stats.completed == dis.stats.submitted == len(prompts)
+    assert dis.stats.handoffs == len(prompts)
+    assert dis.stats.requeues == 0
+
+    # faulted run: kill decode:0 while its residents are mid-stream
+    # (token-step mode so the kill lands inside a request, not between)
+    plan = FaultPlan([FaultEvent(tick=3, kind="kill", pool="decode",
+                                 worker=0)])
+    dis = DisaggScheduler(cfg, params, prefill_workers=1,
+                          decode_workers=2, slots_per_worker=2,
+                          max_len=96, backend=backend,
+                          decode_sla=decode_sla, prefill_bucket=BUCKET,
+                          decode_step_mode="token", fault_plan=plan,
+                          sleep=lambda s: None)
+    for p, b in zip(prompts, BUDGETS):
+        dis.submit(p, SamplingParams(max_new_tokens=b))
+    dis.drain()
+    assert _disagg_tokens(dis) == want  # replay is bitwise faithful
+    assert dis.stats.kills == 1
+    assert dis.stats.requeues >= 1
+    assert dis.stats.completed == len(prompts)
+    dead = dis.pool_stats()["decode"][0]
+    assert not dead["alive"]
+
+
+def test_kill_prefill_worker_reprefills_from_scratch():
+    """A killed prefill worker has no bundle to replay: its in-flight
+    request requeues from scratch, re-prefills on a surviving worker
+    (mid-chunk state abandoned), and still matches the baseline."""
+    cfg = _arch(chunk=True, kh=0.25)
+    params = _params(cfg)
+    prompts = _prompts(cfg, lens=(32,))
+    want = _baseline_tokens(cfg, params, prompts, (6,),
+                            backend="gather", decode_sla=False)
+
+    # tick 1 assigns and runs chunk 1 of 2 on prefill:0; the tick-2
+    # kill fires before chunk 2, abandoning the carry mid-prompt
+    plan = FaultPlan([FaultEvent(tick=2, kind="kill", pool="prefill",
+                                 worker=0)])
+    dis = DisaggScheduler(cfg, params, prefill_workers=2,
+                          decode_workers=1, slots_per_worker=2,
+                          max_len=96, backend="gather",
+                          decode_sla=False, prefill_bucket=BUCKET,
+                          prefill_chunk_blocks=1,  # 16-token chunks
+                          fault_plan=plan, sleep=lambda s: None)
+    dis.submit(prompts[0], SamplingParams(max_new_tokens=6))
+    dis.drain()
+    assert _disagg_tokens(dis) == want
+    assert dis.stats.kills == 1 and dis.stats.requeues == 1
+    assert not dis.pool_stats()["prefill"][0]["alive"]
+    assert dis.stats.completed == 1
+
+
+# ---------------------------------------------------------------------------
+# straggler drain: zero lost requests, no new admissions
+# ---------------------------------------------------------------------------
+def test_straggler_drain_loses_nothing():
+    cfg = _arch()
+    params = _params(cfg)
+    prompts = _prompts(cfg)
+    want = _baseline_tokens(cfg, params, prompts, BUDGETS,
+                            backend="gather", decode_sla=False)
+
+    # decode:0 straggles 10x from tick 2; the shared watchdog (EMA
+    # seeded by two healthy 0.5s warmup ticks) must flag and DRAIN it
+    plan = FaultPlan([FaultEvent(tick=2, kind="straggle", pool="decode",
+                                 worker=0, factor=10.0)])
+    dis = DisaggScheduler(
+        cfg, params, prefill_workers=1, decode_workers=2,
+        slots_per_worker=2, max_len=96, backend="gather",
+        decode_sla=False, prefill_bucket=BUCKET,
+        decode_step_mode="token", fault_plan=plan,
+        watchdog=StragglerWatchdog(threshold=2.0, warmup=2),
+        clock=TickClock(), sleep=lambda s: None)
+    for p, b in zip(prompts, BUDGETS):
+        dis.submit(p, SamplingParams(max_new_tokens=b))
+
+    admitted_at_drain = None
+    while dis.has_work:
+        dis.tick()
+        w0 = dis._decode_pool[0]
+        if w0.draining and admitted_at_drain is None:
+            admitted_at_drain = w0.admitted
+    assert admitted_at_drain is not None, "straggler never drained"
+    assert dis.stats.straggler_drains == 1
+    # the drained worker finished its residents but took nothing new
+    assert dis._decode_pool[0].admitted == admitted_at_drain
+    assert dis._decode_pool[0].alive  # drained, not killed
+    assert dis.stats.completed == len(prompts)  # zero lost
+    assert _disagg_tokens(dis) == want
+
+
+# ---------------------------------------------------------------------------
+# double fault: loud failure, no half-admitted limbo
+# ---------------------------------------------------------------------------
+def test_double_fault_during_requeue_raises_and_leaves_no_limbo():
+    cfg = _arch()
+    params = _params(cfg)
+    prompts = _prompts(cfg, lens=(32,))
+
+    plan = FaultPlan([
+        FaultEvent(tick=3, kind="kill", pool="decode", worker=0),
+        FaultEvent(tick=6, kind="kill", pool="decode", worker=1),
+    ])
+    dis = DisaggScheduler(cfg, params, prefill_workers=1,
+                          decode_workers=2, slots_per_worker=2,
+                          max_len=96, backend="gather",
+                          decode_sla=False, prefill_bucket=BUCKET,
+                          decode_step_mode="token", fault_plan=plan,
+                          max_requeues=1, sleep=lambda s: None)
+    rid = dis.submit(prompts[0], SamplingParams(max_new_tokens=16))
+    with pytest.raises(RuntimeError, match="max_requeues"):
+        dis.drain()
+
+    (r,) = dis._requests
+    assert r.rid == rid
+    # the PR 5 invariant: back in the QUEUE, not half-admitted
+    assert r.state == RequestState.QUEUED
+    assert r.slot is None
+    assert r.tokens_out == []
+    assert r.metrics.decode_tokens == 0
+    assert list(dis._queue) == [r]
+    assert rid not in dis._owner and rid not in dis._bundles
+    assert dis.stats.kills == 2 and dis.stats.requeues == 1
+    # and with every decode worker dead, further progress is loud too
+    with pytest.raises(RuntimeError, match="prefill worker|decode"):
+        dis.drain()
+
+
+def test_all_prefill_dead_with_queue_raises():
+    cfg = _arch()
+    plan = FaultPlan([FaultEvent(tick=1, kind="kill", pool="prefill",
+                                 worker=0)])
+    dis = DisaggScheduler(cfg, _params(cfg), prefill_workers=1,
+                          decode_workers=1, max_len=96,
+                          prefill_bucket=BUCKET, fault_plan=plan)
+    dis.submit(_prompts(cfg, lens=(20,))[0],
+               SamplingParams(max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="prefill worker"):
+        dis.drain()
+
+
+def test_fault_plan_naming_missing_worker_raises():
+    cfg = _arch()
+    plan = FaultPlan([FaultEvent(tick=1, kind="kill", pool="decode",
+                                 worker=9)])
+    dis = DisaggScheduler(cfg, _params(cfg), decode_workers=2,
+                          max_len=96, prefill_bucket=BUCKET,
+                          fault_plan=plan)
+    dis.submit(_prompts(cfg, lens=(16,))[0],
+               SamplingParams(max_new_tokens=2))
+    with pytest.raises(ValueError, match="has 2 workers"):
+        dis.drain()
+
+
+# ---------------------------------------------------------------------------
+# flake absorption: retry contract with recorded backoff
+# ---------------------------------------------------------------------------
+def test_flake_retries_with_recorded_backoff():
+    cfg = _arch()
+    params = _params(cfg)
+    prompts = _prompts(cfg)
+    want = _baseline_tokens(cfg, params, prompts, BUDGETS,
+                            backend="gather", decode_sla=False)
+
+    sleeps = []
+    plan = FaultPlan([FaultEvent(tick=2, kind="flake", pool="decode",
+                                 worker=0, failures=2)])
+    dis = DisaggScheduler(cfg, params, prefill_workers=1,
+                          decode_workers=2, slots_per_worker=2,
+                          max_len=96, backend="gather",
+                          decode_sla=False, prefill_bucket=BUCKET,
+                          decode_step_mode="token", fault_plan=plan,
+                          max_retries=3, sleep=sleeps.append)
+    for p, b in zip(prompts, BUDGETS):
+        dis.submit(p, SamplingParams(max_new_tokens=b))
+    dis.drain()
+    assert sleeps == [1.0, 2.0]  # min(2**attempt, 10) for attempts 0, 1
+    assert dis.stats.retries == 2
+    assert dis.stats.kills == 0 and dis.stats.requeues == 0
+    assert dis.stats.completed == len(prompts)
+    assert _disagg_tokens(dis) == want
+
+
+def test_flake_beyond_retry_budget_raises():
+    cfg = _arch()
+    plan = FaultPlan([FaultEvent(tick=1, kind="flake", pool="prefill",
+                                 worker=0, failures=5)])
+    dis = DisaggScheduler(cfg, _params(cfg), max_len=96,
+                          prefill_bucket=BUCKET, fault_plan=plan,
+                          max_retries=2, sleep=lambda s: None)
+    dis.submit(_prompts(cfg, lens=(16,))[0],
+               SamplingParams(max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="injected transient fault"):
+        dis.drain()
+
+
+# ---------------------------------------------------------------------------
+# streaming surface
+# ---------------------------------------------------------------------------
+def test_stream_events_well_formed_across_requeue():
+    """Event stream stays well-formed under a kill: exactly one start
+    per rid (a requeued request does NOT re-emit start), exactly one
+    finish, token indices dense from 0 after the replay."""
+    cfg = _arch()
+    params = _params(cfg)
+    prompts = _prompts(cfg, lens=(32, 20))
+    plan = FaultPlan([FaultEvent(tick=3, kind="kill", pool="decode",
+                                 worker=0)])
+    dis = DisaggScheduler(cfg, params, prefill_workers=1,
+                          decode_workers=2, slots_per_worker=2,
+                          max_len=96, backend="gather",
+                          prefill_bucket=BUCKET,
+                          decode_step_mode="token", fault_plan=plan,
+                          sleep=lambda s: None)
+    for p in prompts:
+        dis.submit(p, SamplingParams(max_new_tokens=6))
+    events = list(dis.stream())
+    assert dis.stats.kills == 1 and dis.stats.requeues >= 1
+    for rid in (0, 1):
+        evs = [e for e in events if e.rid == rid]
+        kinds = [e.kind for e in evs]
+        assert kinds.count("start") == 1
+        assert kinds.count("finish") == 1
+        assert kinds[0] == "start" and kinds[-1] == "finish"
+
+
+# ---------------------------------------------------------------------------
+# slow tier: the combined trace-replay scenario
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_trace_replay_mixed_faults_paged_chunked_decode_sla():
+    """Everything at once: paged decode workers, chunked prefill,
+    decode-SLA, staggered arrivals, and a fault trace mixing flake,
+    straggle, and kill — the drained tokens are STILL bitwise equal to
+    an undisturbed single-Scheduler run, with zero requests lost."""
+    cfg = _arch(decode=True, kh=0.25, chunk=True)
+    params = _params(cfg)
+    lens = (32, 20, 24, 16, 28, 32, 18, 24)
+    budgets = (6, 9, 4, 7, 5, 8, 6, 4)
+    prompts = _prompts(cfg, lens=lens, seed=3)
+    want = _baseline_tokens(cfg, params, prompts, budgets,
+                            backend="gather", decode_sla=True,
+                            max_len=128, paged=True)
+
+    plan = FaultPlan([
+        FaultEvent(tick=2, kind="flake", pool="decode", worker=1,
+                   failures=1),
+        FaultEvent(tick=4, kind="straggle", pool="decode", worker=2,
+                   factor=10.0),
+        FaultEvent(tick=6, kind="kill", pool="decode", worker=0),
+    ])
+    dis = DisaggScheduler(
+        cfg, params, prefill_workers=2, decode_workers=3,
+        slots_per_worker=2, max_len=128, backend="gather",
+        decode_sla=True, prefill_bucket=BUCKET, paged=True,
+        prefill_chunk_blocks=1, decode_step_mode="token",
+        fault_plan=plan,
+        watchdog=StragglerWatchdog(threshold=2.0, warmup=3),
+        clock=TickClock(), sleep=lambda s: None, max_requeues=2)
+    # staggered arrivals: half up front, the rest mid-flight
+    for p, b in zip(prompts[:4], budgets[:4]):
+        dis.submit(p, SamplingParams(max_new_tokens=b))
+    for _ in range(3):
+        dis.tick()
+    for p, b in zip(prompts[4:], budgets[4:]):
+        dis.submit(p, SamplingParams(max_new_tokens=b))
+    dis.drain()
+
+    assert _disagg_tokens(dis) == want
+    assert dis.stats.completed == dis.stats.submitted == len(prompts)
+    assert dis.stats.kills == 1
+    assert dis.stats.requeues >= 1
+    assert dis.stats.retries >= 1
+    assert dis.stats.straggler_drains == 1
+    assert 0.0 < dis.decode_occupancy() <= 1.0
+    assert 0.0 < dis.stats.prefill_occupancy() <= 1.0

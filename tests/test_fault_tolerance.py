@@ -1,8 +1,16 @@
-"""Straggler watchdog, NaN guard, retry wrapper."""
+"""Straggler watchdog, NaN guard, retry wrapper, fault plan.
+
+Direct unit coverage for the primitives the disaggregated serving
+harness (tests/test_disagg.py) composes: watchdog EMA/warmup edge
+cases, NaNGuard strike reset, the injectable-sleep retry contract with
+its exact backoff schedule and `on_retry` callback, and FaultPlan's
+deterministic due-event popping."""
 import jax.numpy as jnp
 import pytest
 
-from repro.distributed.fault_tolerance import (NaNGuard, StragglerWatchdog,
+from repro.distributed.fault_tolerance import (FaultEvent, FaultPlan,
+                                               NaNGuard,
+                                               StragglerWatchdog,
                                                run_with_retries)
 
 
@@ -60,3 +68,155 @@ def test_run_with_retries_exhausts():
 
     with pytest.raises(RuntimeError):
         run_with_retries(always_fails, max_retries=1)
+
+
+# -- watchdog EMA / warmup edges ---------------------------------------------
+def test_watchdog_warmup_absorbs_spikes():
+    """Steps <= warmup NEVER flag, however slow — they seed the EMA."""
+    wd = StragglerWatchdog(threshold=2.0, warmup=3)
+    assert not wd.record(100.0)  # first sets ema directly
+    assert not wd.record(100.0)
+    assert not wd.record(100.0)
+    assert wd.flagged == []
+    # step 4 compares against the (spiky) warmup EMA: 100s is normal now
+    assert not wd.record(100.0)
+    assert wd.record(250.0)
+
+
+def test_watchdog_first_record_seeds_ema_exactly():
+    wd = StragglerWatchdog(threshold=2.0, warmup=5, decay=0.9)
+    wd.record(4.0)
+    assert wd.ema == 4.0  # ema==0 branch: seed, don't decay toward 0
+    wd.record(2.0)
+    assert wd.ema == pytest.approx(0.9 * 4.0 + 0.1 * 2.0)
+
+
+def test_watchdog_straggler_step_leaves_ema_untouched():
+    wd = StragglerWatchdog(threshold=2.0, warmup=2, decay=0.5)
+    wd.record(1.0)
+    wd.record(1.0)
+    ema_before = wd.ema
+    assert wd.record(10.0)  # flagged
+    assert wd.ema == ema_before  # NOT decayed toward the straggler
+    assert not wd.record(0.5)  # healthy step still updates
+    assert wd.ema == pytest.approx(0.5 * ema_before + 0.5 * 0.5)
+
+
+def test_watchdog_flag_record_contents():
+    wd = StragglerWatchdog(threshold=2.0, warmup=1)
+    wd.record(1.0)
+    assert wd.record(9.0, host_id=3)
+    (flag,) = wd.flagged
+    assert flag["step"] == 2 and flag["host"] == 3
+    assert flag["seconds"] == 9.0 and flag["ema"] == 1.0
+
+
+def test_watchdog_boundary_is_strictly_greater():
+    """seconds == threshold * ema is NOT a straggler (strict >)."""
+    wd = StragglerWatchdog(threshold=2.0, warmup=1, decay=1.0)
+    wd.record(1.0)
+    assert not wd.record(2.0)  # exactly 2x: healthy
+    assert wd.record(2.0 + 1e-9)
+
+
+# -- NaNGuard strike reset ---------------------------------------------------
+def test_nan_guard_single_strike_raises_immediately():
+    g = NaNGuard(max_strikes=1)
+    with pytest.raises(FloatingPointError):
+        g.check(jnp.float32(float("nan")))
+
+
+def test_nan_guard_interleaved_never_accumulates():
+    g = NaNGuard(max_strikes=2)
+    for _ in range(5):  # nan, healthy, nan, healthy... never 2 in a row
+        assert not g.check(jnp.float32(float("inf")))
+        assert g.check(jnp.float32(1.0))
+        assert g.strikes == 0
+
+
+# -- retry contract: injectable sleep, on_retry, backoff ---------------------
+def test_run_with_retries_injected_sleep_backoff_schedule():
+    """The backoff is min(2^attempt, 10): 1, 2, 4, 8, 10, 10, ..."""
+    sleeps = []
+
+    def always_fails():
+        raise RuntimeError("transient")
+
+    with pytest.raises(RuntimeError):
+        run_with_retries(always_fails, max_retries=6,
+                         sleep=sleeps.append)
+    assert sleeps == [1.0, 2.0, 4.0, 8.0, 10.0, 10.0]
+
+
+def test_run_with_retries_on_retry_sees_attempt_and_exception():
+    seen = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError(f"boom {calls['n']}")
+        return "ok"
+
+    out = run_with_retries(flaky, max_retries=3,
+                           on_retry=lambda a, e: seen.append((a, str(e))),
+                           sleep=lambda s: None)
+    assert out == "ok"
+    assert seen == [(0, "boom 1"), (1, "boom 2")]
+
+
+def test_run_with_retries_no_sleep_after_final_failure():
+    sleeps = []
+
+    def always_fails():
+        raise RuntimeError("dead")
+
+    with pytest.raises(RuntimeError):
+        run_with_retries(always_fails, max_retries=2,
+                         sleep=sleeps.append)
+    assert len(sleeps) == 2  # attempts 0 and 1 back off; attempt 2 raises
+
+
+def test_run_with_retries_does_not_catch_unrelated_errors():
+    sleeps = []
+
+    def typo():
+        raise ValueError("not a runtime fault")
+
+    with pytest.raises(ValueError):
+        run_with_retries(typo, max_retries=5, sleep=sleeps.append)
+    assert sleeps == []  # no retry path for non-transient errors
+
+
+# -- FaultPlan ---------------------------------------------------------------
+def test_fault_plan_pops_due_events_once_in_order():
+    plan = FaultPlan([
+        FaultEvent(tick=5, kind="kill", pool="decode", worker=1),
+        FaultEvent(tick=2, kind="straggle", pool="decode", worker=0,
+                   factor=4.0),
+        FaultEvent(tick=5, kind="flake", pool="prefill", worker=0),
+    ])
+    assert plan.due(1) == []
+    due2 = plan.due(2)
+    assert [e.kind for e in due2] == ["straggle"]
+    assert plan.due(2) == []  # consumed
+    due5 = plan.due(5)  # multi-fault tick: (pool, worker) order
+    assert [(e.pool, e.worker) for e in due5] == [("decode", 1),
+                                                 ("prefill", 0)]
+    assert plan.exhausted
+    assert len(plan.fired) == 3
+
+
+def test_fault_plan_late_due_catches_skipped_ticks():
+    plan = FaultPlan([FaultEvent(tick=3, kind="kill", pool="decode",
+                                 worker=0)])
+    assert [e.tick for e in plan.due(10)] == [3]
+
+
+def test_fault_event_validates_kind_and_pool():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(tick=1, kind="explode", pool="decode", worker=0)
+    with pytest.raises(ValueError, match="unknown worker pool"):
+        FaultEvent(tick=1, kind="kill", pool="gpu", worker=0)
+    with pytest.raises(ValueError, match="tick must be >= 0"):
+        FaultEvent(tick=-1, kind="kill", pool="decode", worker=0)

@@ -441,3 +441,175 @@ def test_paged_config_knobs_validate():
     with pytest.raises(ValueError, match="block"):
         SLAConfig(paged=True, block_q=32, block_kv=64).validate()
     SLAConfig(paged=True, page_pool_size=8).validate()
+
+
+# -- PagePool property tests (ISSUE 9 satellite) -----------------------------
+# Randomized alloc/release/retain/intern/lookup/ensure_private/evict
+# sequences, with PagePool.check_invariants() asserted after EVERY
+# operation plus a host-side reference model of caller-held refs. Runs
+# under real hypothesis when installed, else the deterministic
+# fixed-sample sweep from _hypothesis_compat.
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+
+def _random_pool_ops(seed: int, num_ops: int = 80):
+    """Drive one randomized operation sequence, cross-checking the pool
+    against a reference model: `held` maps pid -> number of refs THIS
+    test owns (the index's own refs are the pool's business)."""
+    import random
+
+    rnd = random.Random(seed)
+    pool = PagePool(rnd.randint(3, 12))
+    held: dict = {}
+    interned_keys: list = []
+    next_key = [0]
+
+    def fresh_key() -> bytes:
+        next_key[0] += 1
+        return b"prefix-%d" % next_key[0]
+
+    def model_refs(pid: int) -> int:
+        """What the pool's refcount MUST be for a page this test can
+        see: caller refs + the index's own ref if it is interned."""
+        return held.get(pid, 0) + (1 if pid in pool._by_pid else 0)
+
+    for _ in range(num_ops):
+        op = rnd.choice(["alloc", "alloc", "release", "retain",
+                         "intern", "lookup", "ensure_private"])
+        if op == "alloc":
+            try:
+                pid = pool.alloc()
+                assert pid != ZERO_PAGE, "alloc handed out the zero page"
+                assert held.get(pid, 0) == 0, \
+                    f"alloc returned page {pid} this test still holds"
+                held[pid] = 1
+            except PagePoolExhausted:
+                # legal exactly when nothing is free or evictable
+                assert pool.free_pages() == 0
+        elif op == "release" and held:
+            pid = rnd.choice(sorted(held))
+            pool.release(pid)
+            held[pid] -= 1
+            if held[pid] == 0:
+                del held[pid]
+        elif op == "retain" and held:
+            pid = rnd.choice(sorted(held))
+            pool.retain(pid)
+            held[pid] += 1
+        elif op == "intern" and held:
+            pid = rnd.choice(sorted(held))
+            if pid not in pool._by_pid:
+                key = fresh_key()
+                pool.intern(key, pid)
+                interned_keys.append(key)
+        elif op == "lookup" and interned_keys:
+            key = rnd.choice(interned_keys)
+            pid = pool.lookup(key)
+            if pid is not None:  # may have been LRU-evicted
+                held[pid] = held.get(pid, 0) + 1
+        elif op == "ensure_private" and held:
+            pid = rnd.choice(sorted(held))
+            try:
+                new, src = pool.ensure_private(pid)
+            except PagePoolExhausted:
+                # the internal alloc() failed BEFORE the old ref was
+                # released: caller state must be untouched
+                assert pool.free_pages() == 0
+                pool.check_invariants()
+                continue
+            if src is None:
+                assert new == pid and pool.refs(pid) == 1
+            else:
+                # our ref moved from pid to the private copy
+                assert src == pid
+                held[pid] -= 1
+                if held[pid] == 0:
+                    del held[pid]
+                held[new] = held.get(new, 0) + 1
+                assert pool.refs(new) >= 1
+        pool.check_invariants()
+        assert pool.refs(ZERO_PAGE) >= 1
+        for pid in held:
+            assert pool.refs(pid) == model_refs(pid), \
+                (f"page {pid}: pool says {pool.refs(pid)}, model says "
+                 f"{model_refs(pid)}")
+    # teardown: hand every ref back; the pool must survive and the
+    # invariants must still hold (interned pages become LRU candidates)
+    for pid, n in list(held.items()):
+        for _ in range(n):
+            pool.release(pid)
+        pool.check_invariants()
+    return pool
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=100_000))
+def test_pool_random_ops_preserve_invariants(seed):
+    _random_pool_ops(seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=100_000))
+def test_pool_eviction_only_reclaims_index_only_pages(seed):
+    """Under pressure, alloc may evict — but NEVER a page a caller
+    still references: drive a pool to exhaustion repeatedly and check
+    evictions only ever happened when the victim's sole ref was the
+    intern index's."""
+    import random
+
+    rnd = random.Random(seed)
+    pool = PagePool(rnd.randint(4, 8))
+    held = []
+    for step in range(60):
+        if rnd.random() < 0.6:
+            try:
+                pid = pool.alloc()
+                assert pid not in held, \
+                    f"evicted page {pid} still caller-referenced"
+                if rnd.random() < 0.5:
+                    pool.intern(b"k%d" % step, pid)
+                held.append(pid)
+            except PagePoolExhausted:
+                assert pool.free_pages() == 0
+        elif held:
+            pid = held.pop(rnd.randrange(len(held)))
+            pool.release(pid)
+        pool.check_invariants()
+
+
+def test_pool_zero_page_never_freed_or_allocated():
+    """Page 0's pin survives any release storm, and ensure_private on
+    it always yields a copy (fresh decode pages must start zeroed)."""
+    pool = PagePool(5)  # zero page + 4: keep one free for the CoW copy
+    pool.release(ZERO_PAGE)  # documented no-op
+    pool.release(ZERO_PAGE)
+    assert pool.refs(ZERO_PAGE) == 1
+    seen = {pool.alloc() for _ in range(3)}
+    assert ZERO_PAGE not in seen
+    new, src = pool.ensure_private(ZERO_PAGE)
+    assert new != ZERO_PAGE and src == ZERO_PAGE
+    assert pool.refs(ZERO_PAGE) == 1  # pin survives the release inside CoW
+    pool.release(new)
+    for pid in seen:
+        pool.release(pid)
+    pool.check_invariants()
+    assert pool.free_pages() == pool.num_pages - 1
+
+
+def test_pool_intern_bijection_after_eviction_and_reuse():
+    """key<->pid stays a bijection across evict + re-intern cycles."""
+    pool = PagePool(4)  # zero page + 3
+    pids = [pool.alloc() for _ in range(3)]
+    for i, pid in enumerate(pids):
+        pool.intern(b"key%d" % i, pid)
+        pool.release(pid)  # index-only -> LRU candidate
+    pool.check_invariants()
+    fresh = pool.alloc()  # must evict the LRU (key0's page)
+    assert pool.lookup(b"key0") is None
+    pool.check_invariants()
+    pool.intern(b"key0b", fresh)
+    pool.check_invariants()
+    assert pool.lookup(b"key0b") == fresh
+    pool.release(fresh)
+    pool.release(fresh)
+    pool.check_invariants()
