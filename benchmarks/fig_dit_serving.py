@@ -1,0 +1,196 @@
+"""Streaming DiT service: batched-vs-sequential parity + plan-cache
+economics (DESIGN.md "Streaming DiT service").
+
+Two stages, one JSON artifact (BENCH_dit_serving.json):
+
+  * parity — a multi-user mixed-timestep trace (heterogeneous
+    num_steps AND t_start, so slots genuinely sit at different t inside
+    one batched forward) is served through the `DiffusionScheduler`
+    (plan cache off), then each request is re-run sequentially through
+    `dit.sample(..., t_start=...)` at batch 1. Per backend (reference
+    and gather, f32) the cells store a sha256 over every request's
+    final latent bytes; the acceptance boolean
+    `dit_batched_bitwise_equal_sequential` is checksum equality on BOTH
+    backends — bitwise, not allclose.
+  * plan_cache — a shared-config trace (same seq_len/t_start/steps
+    across users) served twice, cache off vs on. Off: every admission
+    plans all L layers from scratch (`plan_builds` counts them). On:
+    the first admission misses and populates the per-(layer,
+    timestep-bucket) cache; later admissions hit and *validate* the
+    cached stack through the drift machinery instead of planning. The
+    acceptance boolean `plan_cache_cuts_plan_builds` pins the
+    amortization claim: plan builds with the cache strictly below
+    per-request planning, with at least one real cache hit.
+
+Acceptance booleans are recomputed from EXACTLY the cells their names
+point at (`recompute_acceptance`; the fig_decode honesty rule —
+tests/test_benchmarks.py pins the recompute and flips synthetic cells).
+"""
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_dit_serving.json"
+
+ARCH = "lightningdit_1b"
+SEQ_LEN = 32
+SLOTS = 2
+BACKENDS = ("reference", "gather")
+# (num_steps, t_start) per request — mixed on purpose: different step
+# counts AND start times put every slot at its own t each tick
+PARITY_TRACE = ((4, 1.0), (3, 1.0), (5, 0.75), (2, 0.5), (4, 1.0))
+PARITY_THRESHOLD = 0.2
+# shared-config trace for the cache stage: same bucket at admission
+CACHE_REQS = 6
+CACHE_STEPS = 4
+CACHE_THRESHOLD = 0.3
+T_BUCKETS = 8
+
+
+def _setup():
+    from repro.configs import get_arch
+    from repro.models import dit
+
+    cfg = get_arch(ARCH).smoke()
+    params = dit.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _latent(cfg, i):
+    return np.asarray(jax.random.normal(
+        jax.random.PRNGKey(i + 1), (SEQ_LEN, cfg.patch_dim),
+        jnp.float32))
+
+
+def _checksum(latents) -> str:
+    """sha256 over the raw f32 bytes of every request's final latent,
+    in rid order — bitwise equality, nothing weaker."""
+    h = hashlib.sha256()
+    for lat in latents:
+        h.update(np.ascontiguousarray(np.asarray(lat, np.float32))
+                 .tobytes())
+    return h.hexdigest()
+
+
+def _run_parity(cfg, params, backend):
+    from repro.models import dit
+    from repro.serving.diffusion import DenoiseParams, DiffusionScheduler
+
+    sched = DiffusionScheduler(
+        cfg, params, num_slots=SLOTS, seq_len=SEQ_LEN, backend=backend,
+        compute_dtype=jnp.float32, refresh_mode="adaptive",
+        drift_threshold=PARITY_THRESHOLD)
+    for i, (steps, t0) in enumerate(PARITY_TRACE):
+        sched.submit(_latent(cfg, i),
+                     DenoiseParams(num_steps=steps, t_start=t0))
+    done = sched.drain()
+    batched = [r.result for r in sorted(done, key=lambda r: r.rid)]
+    sequential = []
+    for i, (steps, t0) in enumerate(PARITY_TRACE):
+        out = dit.sample(params, cfg, jnp.asarray(_latent(cfg, i)[None]),
+                         num_steps=steps, compute_dtype=jnp.float32,
+                         backend=backend, refresh_mode="adaptive",
+                         drift_threshold=PARITY_THRESHOLD, t_start=t0)
+        sequential.append(np.asarray(out[0]))
+    return {"batched_checksum": _checksum(batched),
+            "sequential_checksum": _checksum(sequential),
+            "requests": len(done),
+            "denoise_steps": sched.stats.denoise_steps,
+            "occupancy": sched.stats.occupancy()}
+
+
+def _run_cache(cfg, params, cache: bool):
+    from repro.serving.diffusion import DenoiseParams, DiffusionScheduler
+
+    sched = DiffusionScheduler(
+        cfg, params, num_slots=SLOTS, seq_len=SEQ_LEN, backend="gather",
+        compute_dtype=jnp.float32, refresh_mode="adaptive",
+        drift_threshold=CACHE_THRESHOLD, plan_cache=cache,
+        t_buckets=T_BUCKETS)
+    for i in range(CACHE_REQS):
+        sched.submit(_latent(cfg, i),
+                     DenoiseParams(num_steps=CACHE_STEPS))
+    done = sched.drain()
+    st = sched.stats
+    cell = {"requests": len(done), "plan_builds": st.plan_builds,
+            "plan_replans": st.plan_replans,
+            "plan_reuses": st.plan_reuses}
+    if cache:
+        cell.update(hits=st.plan_cache_hits, misses=st.plan_cache_misses,
+                    invalidations=st.plan_cache_invalidations,
+                    evictions=st.plan_cache_evictions,
+                    entries=len(sched.cache))
+    return cell
+
+
+def recompute_acceptance(payload: dict) -> dict:
+    """Derive the acceptance booleans from EXACTLY the cells their
+    names point at (fig_decode honesty contract)."""
+    parity, cache = payload["parity"], payload["plan_cache"]
+    return {
+        # the tentpole claim: every request's final latent out of the
+        # mixed-timestep batched scheduler is bitwise what its own
+        # sequential dit.sample run produces — on BOTH backends
+        "dit_batched_bitwise_equal_sequential": all(
+            parity[b]["batched_checksum"]
+            == parity[b]["sequential_checksum"]
+            for b in payload["config"]["backends"]),
+        # the amortization claim: cross-request plan reuse cuts plan
+        # builds vs per-request planning on a shared-config trace, and
+        # the cut came from REAL cache hits, not a shorter trace
+        "plan_cache_cuts_plan_builds": (
+            cache["cache"]["plan_builds"]
+            < cache["no_cache"]["plan_builds"]
+            and cache["cache"]["hits"] >= 1),
+    }
+
+
+def run(backend: str = "gather"):
+    cfg, params = _setup()
+    rows = []
+    parity = {}
+    for b in BACKENDS:
+        parity[b] = _run_parity(cfg, params, b)
+        ok = (parity[b]["batched_checksum"]
+              == parity[b]["sequential_checksum"])
+        rows.append((f"fig_dit_serving.parity.{b}", 0.0,
+                     "bitwise" if ok else "MISMATCH"))
+    cache = {"no_cache": _run_cache(cfg, params, False),
+             "cache": _run_cache(cfg, params, True)}
+    rows.append(("fig_dit_serving.plan_builds.no_cache",
+                 float(cache["no_cache"]["plan_builds"]),
+                 f"{CACHE_REQS} reqs, per-request planning"))
+    rows.append(("fig_dit_serving.plan_builds.cache",
+                 float(cache["cache"]["plan_builds"]),
+                 f"{cache['cache']['hits']} hits / "
+                 f"{cache['cache']['misses']} misses, "
+                 f"{cache['cache']['invalidations']} invalidations"))
+    payload = {
+        "config": {"arch": ARCH, "seq_len": SEQ_LEN, "slots": SLOTS,
+                   "backends": list(BACKENDS),
+                   "parity_trace": [list(x) for x in PARITY_TRACE],
+                   "parity_threshold": PARITY_THRESHOLD,
+                   "cache_reqs": CACHE_REQS,
+                   "cache_steps": CACHE_STEPS,
+                   "cache_threshold": CACHE_THRESHOLD,
+                   "t_buckets": T_BUCKETS},
+        "parity": parity,
+        "plan_cache": cache,
+    }
+    payload["acceptance"] = recompute_acceptance(payload)
+    BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    for key, ok in payload["acceptance"].items():
+        rows.append((f"fig_dit_serving.accept.{key}", 0.0,
+                     "PASS" if ok else "FAIL"))
+    rows.append(("fig_dit_serving.json", 0.0, BENCH_PATH.name))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -19,6 +19,7 @@ MODULES = [
     "fig_decode",
     "fig_routing",
     "fig_serving",
+    "fig_dit_serving",
 ]
 
 

@@ -12,6 +12,7 @@
 #   scripts/ci.sh --paged         # paged KV + CoW prefix sharing suite
 #   scripts/ci.sh --chunked-prefill # chunked admission prefill suite
 #   scripts/ci.sh --disagg        # disaggregated pools + fault injection
+#   scripts/ci.sh --dit-serve     # streaming DiT service + plan cache
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -136,6 +137,30 @@ if [[ "${1:-}" == "--disagg" ]]; then
     python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --disagg --prefill-workers 1 --decode-workers 2 \
         --requests 4 --max-new 6 --batch 2 --prompt-len 32
+    exit 0
+fi
+
+if [[ "${1:-}" == "--dit-serve" ]]; then
+    # Streaming DiT denoise service (DESIGN.md "Streaming DiT
+    # service"): fast first — plan-cache units (counters, LRU bound,
+    # serialization round-trip, compat key), the per-sample refresh
+    # lemma, the gather-backend bitwise batched-vs-sequential parity,
+    # drift-cache parity, and both paper DiT registry smokes; then the
+    # slow reference-backend + fixed-mode parity traces, the
+    # parity/plan-cache benchmark regenerating BENCH_dit_serving.json,
+    # its honesty guards, and a dit serve-CLI smoke with --stats-json.
+    echo "=== dit serve (fast: cache units + gather parity + smokes) ==="
+    "${PYTEST[@]}" -x -m "not slow" tests/test_dit_serving.py
+    echo "=== dit serve (slow: reference/fixed parity traces) ==="
+    "${PYTEST[@]}" -m slow tests/test_dit_serving.py
+    echo "=== dit serve (parity + plan-cache benchmark) ==="
+    PYTHONPATH="src:." python benchmarks/fig_dit_serving.py
+    echo "=== dit serve (benchmark honesty guards) ==="
+    "${PYTEST[@]}" -x tests/test_benchmarks.py
+    echo "=== dit serve (serve CLI smoke, stats json) ==="
+    python -m repro.launch.serve --arch lightningdit_1b --smoke \
+        --workload dit --requests 3 --num-steps 3 --seq-len 32 \
+        --batch 2 --plan-cache --stats-json /tmp/dit_stats.json
     exit 0
 fi
 

@@ -366,3 +366,98 @@ def refresh_plan(
         lambda ops: ops[1],
         (mc_fresh, plan))
     return new_plan, retention, replanned
+
+
+def refresh_plan_per_sample(
+    plan: SLAPlan, q: jax.Array, k: jax.Array, cfg: SLAConfig,
+    thresholds, scale: Optional[float] = None,
+    routing: Optional[dict] = None,
+) -> Tuple[SLAPlan, jax.Array, jax.Array]:
+    """Per-sample drift-gated re-plan: each batch row decides alone.
+
+    `refresh_plan` min-reduces retention over batch AND heads, coupling
+    the refresh decision across every row of the batch — correct for a
+    single request, wrong for a serving batch where each slot holds an
+    unrelated request at its own timestep. Here retention is reduced
+    over heads only, giving a (B,) decision vector; replanned rows take
+    the freshly classified structure, kept rows carry their old leaves
+    bitwise-unchanged via a per-row select. Because every structure in
+    `plan_from_mask` is per-(batch, head) independent, a row's refresh
+    here is bitwise-identical to `refresh_plan` on that row alone — the
+    DiffusionScheduler's batched-vs-sequential parity rests on this.
+
+    `thresholds`: (B,) float drift thresholds (broadcast from a scalar).
+    Per-row schedule override: 0.0 forces that row's re-plan, >= 1.0
+    pins blind reuse — the fixed refresh interval is expressed as a
+    0/1 threshold vector, so one traced step covers both modes.
+
+    Unlike `refresh_plan`'s `lax.cond`, the rebuild always runs (the
+    select needs fresh leaves for any subset of rows) — the extra cost
+    is the LUT argsorts, O(T log T) in blocks, dwarfed by attention.
+
+    Returns (plan', retention (B,), replanned (B,) bool).
+    """
+    r, mc_fresh, pc = _retention_and_fresh_mc(plan, q, k, cfg, scale,
+                                              routing)
+    retention = jnp.min(r, axis=-1)  # (B,) — min over heads only
+    thr = jnp.broadcast_to(jnp.asarray(thresholds, jnp.float32),
+                           retention.shape)
+    replanned = jnp.logical_and((1.0 - retention) >= thr, thr < 1.0)
+    fresh = plan_from_mask(mc_fresh, cfg, pc=pc)
+
+    def sel(new_leaf, old_leaf):
+        m = replanned.reshape(
+            replanned.shape + (1,) * (new_leaf.ndim - replanned.ndim))
+        return jnp.where(m, new_leaf, old_leaf)
+
+    new_plan = jax.tree_util.tree_map(sel, fresh, plan)
+    return new_plan, retention, replanned
+
+
+# ---------------------------------------------------------------------------
+# plan serialization + config compatibility (serving/plan_cache.py)
+# ---------------------------------------------------------------------------
+_PLAN_WIRE_VERSION = 1
+_PLAN_LEAVES = ("mc", "lut", "counts", "col_lut", "col_counts", "marginal")
+
+
+def plan_compat_key(cfg: SLAConfig, heads: int, tm: int, tn: int) -> tuple:
+    """Hashable key under which two SLAPlans are interchangeable.
+
+    Two plans built under configs that agree on every field this key
+    names produce the same leaf shapes/dtypes AND the same
+    classification semantics, so a cached plan may be handed to a
+    request that never saw the original (q, k). Fields that only affect
+    execution (phi, proj_init, decode_*) are deliberately absent —
+    changing them must NOT invalidate cached structure."""
+    return (
+        "sla-plan-v%d" % _PLAN_WIRE_VERSION,
+        cfg.block_q, cfg.block_kv, cfg.kh_frac, cfg.kl_frac, cfg.mode,
+        bool(cfg.causal), bool(cfg.force_diagonal), cfg.fixed_budget,
+        cfg.col_capacity_factor, cfg.routing_mode, cfg.window,
+        int(heads), int(tm), int(tn),
+    )
+
+
+def serialize_plan(plan: SLAPlan) -> dict:
+    """SLAPlan -> device-free dict of numpy leaves (+ wire version).
+
+    The inverse of `deserialize_plan`; round-trips bitwise. Host numpy
+    (not bytes) so a cache entry costs one device->host copy and no
+    codec, yet holds no device memory."""
+    import numpy as np
+    out = {"__version__": _PLAN_WIRE_VERSION}
+    for name in _PLAN_LEAVES:
+        out[name] = np.asarray(getattr(plan, name))
+    return out
+
+
+def deserialize_plan(data: dict) -> SLAPlan:
+    """Dict from `serialize_plan` -> SLAPlan with device arrays."""
+    v = data.get("__version__")
+    if v != _PLAN_WIRE_VERSION:
+        raise ValueError(
+            f"serialized SLAPlan wire version {v!r} != "
+            f"{_PLAN_WIRE_VERSION} — refusing to guess leaf layout")
+    return SLAPlan(**{name: jnp.asarray(data[name])
+                      for name in _PLAN_LEAVES})

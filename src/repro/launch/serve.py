@@ -35,11 +35,25 @@ end-to-end examples):
                             (DESIGN.md "Disaggregated serving")
   --prefill-workers/--decode-workers
                             pool sizes for --disagg
+  --workload                'lm' (default) or 'dit': the streaming DiT
+                            denoise service — continuous batching of
+                            denoise requests with cross-request plan
+                            caching (DESIGN.md "Streaming DiT service")
+  --num-steps/--seq-len/--t-start
+                            dit workload: Euler steps, latent tokens
+                            per request, and trajectory start time
+  --refresh-mode            dit workload: per-slot plan refresh policy
+  --plan-cache/--t-buckets/--cache-entries
+                            dit workload: cross-request SLA plan cache
+  --stats-json PATH         dump ServeStats + per-request metrics as
+                            JSON after the run (every serving mode;
+                            in-flight metrics stay null, never 0.0)
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -154,6 +168,47 @@ def main(argv=None):
                     help="prefill pool size for --disagg")
     ap.add_argument("--decode-workers", type=int, default=2,
                     help="decode pool size for --disagg")
+    ap.add_argument("--workload", default="lm", choices=["lm", "dit"],
+                    help="'lm' serves autoregressive token generation "
+                         "(all flags above); 'dit' serves streaming "
+                         "diffusion denoising: many users' denoise "
+                         "requests continuously batched into one "
+                         "dit.forward per tick, each slot at its own "
+                         "timestep, with validated cross-request SLA "
+                         "plan caching (DESIGN.md 'Streaming DiT "
+                         "service'). Requires a dit-family --arch")
+    ap.add_argument("--num-steps", type=int, default=8,
+                    help="dit: Euler denoise steps per request")
+    ap.add_argument("--seq-len", type=int, default=None,
+                    help="dit: latent tokens per request (block-"
+                         "aligned). Default: 2 SLA query blocks")
+    ap.add_argument("--t-start", type=float, default=1.0,
+                    help="dit: trajectory start time in (0, 1]; < 1.0 "
+                         "is SDEdit-style partial denoise")
+    ap.add_argument("--refresh-mode", default=None,
+                    choices=["fixed", "adaptive"],
+                    help="dit: per-slot plan refresh policy — 'fixed' "
+                         "re-plans every cfg.sla.plan_refresh_interval "
+                         "steps, 'adaptive' re-plans a slot's layer "
+                         "when its measured drift reaches "
+                         "--drift-threshold. Default: "
+                         "cfg.sla.plan_refresh_mode")
+    ap.add_argument("--plan-cache", action="store_true",
+                    help="dit: cross-request plan cache — admissions "
+                         "look up per-(layer, timestep-bucket) SLAPlans "
+                         "and validate them through the drift machinery "
+                         "instead of planning from scratch "
+                         "(serving/plan_cache.py)")
+    ap.add_argument("--t-buckets", type=int, default=8,
+                    help="dit: timestep buckets for --plan-cache keys")
+    ap.add_argument("--cache-entries", type=int, default=256,
+                    help="dit: LRU bound on --plan-cache entries "
+                         "(per-layer, per-bucket)")
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="after the run, dump ServeStats + per-request "
+                         "metrics as JSON to PATH (every serving mode). "
+                         "Derived metrics of in-flight requests are "
+                         "null, never 0.0")
     ap.add_argument("--routing-mode", default=None,
                     choices=["threshold", "learned"],
                     help="block-classification router: 'threshold' ranks "
@@ -186,6 +241,12 @@ def main(argv=None):
         ap.error("--disagg requires --plan-reuse off: requeue replays "
                  "a lost worker's prefill, which must be a pure "
                  "function of the prompt")
+    if args.workload == "dit" and (
+            args.disagg or args.stream or args.paged
+            or args.decode_sla or args.prefill_chunk is not None):
+        ap.error("--workload dit serves denoise requests — "
+                 "--disagg/--stream/--paged/--decode-sla/"
+                 "--prefill-chunk are LM-serving flags")
 
     from repro.core import backends as backend_registry
     backend_registry.resolve(args.backend)  # unknown names fail here, loudly
@@ -214,6 +275,12 @@ def main(argv=None):
     params = mdl.init(jax.random.PRNGKey(args.seed), cfg)
     rs = np.random.default_rng(args.seed)
     max_len = args.prompt_len + args.max_new + 8
+
+    if args.workload == "dit":
+        return _run_dit(args, cfg, params, rs)
+    if cfg.family == "dit":
+        ap.error(f"--arch {args.arch} is a DiT; serve it with "
+                 "--workload dit")
 
     if args.disagg:
         from repro.serving.api import SamplingParams
@@ -259,6 +326,7 @@ def main(argv=None):
         if ttfts:
             print(f"per-request: TTFT p50 {pct(ttfts, 0.5)*1e3:.0f}ms "
                   f"/ p95 {pct(ttfts, 0.95)*1e3:.0f}ms")
+        _maybe_stats_json(args, "disagg", st, done)
         return done
 
     if args.scheduler == "continuous" and args.stream:
@@ -289,6 +357,7 @@ def main(argv=None):
         st = sched.stats
         _print_stats(args, st, len(done), time.time() - t0,
                      [r.metrics for r in done], sched.drift_threshold)
+        _maybe_stats_json(args, "continuous", st, done)
         return done
 
     reqs = [Request(rid=i,
@@ -312,7 +381,68 @@ def main(argv=None):
     _print_stats(args, engine.stats, len(done), time.time() - t0,
                  [r.metrics for r in done if r.metrics is not None],
                  engine.drift_threshold)
+    _maybe_stats_json(args, args.scheduler, engine.stats, done)
     return done
+
+
+def _run_dit(args, cfg, params, rs):
+    """The dit workload: synthetic denoise requests through the
+    DiffusionScheduler, mixed timesteps sharing every batched tick."""
+    from repro.serving.api import percentile as pct
+    from repro.serving.diffusion import DenoiseParams, DiffusionScheduler
+
+    seq_len = (2 * cfg.sla.block_q if args.seq_len is None
+               else args.seq_len)
+    sched = DiffusionScheduler(
+        cfg, params, num_slots=args.batch, seq_len=seq_len,
+        backend=args.backend, refresh_mode=args.refresh_mode,
+        drift_threshold=args.drift_threshold,
+        plan_cache=args.plan_cache, t_buckets=args.t_buckets,
+        cache_entries=args.cache_entries)
+    t0 = time.time()
+    for i in range(args.requests):
+        sched.submit(
+            rs.standard_normal((seq_len, cfg.patch_dim),
+                               dtype=np.float32),
+            DenoiseParams(num_steps=args.num_steps,
+                          t_start=args.t_start))
+    done = sched.drain()
+    wall = time.time() - t0
+    st = sched.stats
+    print(f"{len(done)} denoise requests ({args.num_steps} steps, "
+          f"{seq_len} latent tokens) in {wall:.1f}s | "
+          f"{st.denoise_steps} denoise steps | slot occupancy "
+          f"{st.occupancy():.2f} ({st.slot_steps_active}/"
+          f"{st.slot_steps_total} slot-steps)")
+    print(f"plans: {st.plan_builds} built, {st.plan_reuses} reused, "
+          f"{st.plan_replans} re-plans | retention "
+          f"{st.last_retention:.3f}")
+    if sched.cache is not None:
+        print(f"plan cache: {st.plan_cache_hits} hits / "
+              f"{st.plan_cache_misses} misses, "
+              f"{st.plan_cache_invalidations} drift invalidations, "
+              f"{st.plan_cache_evictions} evictions "
+              f"({len(sched.cache)} entries)")
+    lats = [r.metrics.latency_s for r in done
+            if r.metrics.latency_s is not None]
+    if lats:
+        print(f"per-request: latency p50 {pct(lats, 0.5)*1e3:.0f}ms / "
+              f"p95 {pct(lats, 0.95)*1e3:.0f}ms")
+    _maybe_stats_json(args, "dit", st, done)
+    return done
+
+
+def _maybe_stats_json(args, mode, st, requests):
+    """--stats-json: one schema for every serving mode (satellite:
+    None-safe — in-flight requests dump null derived metrics)."""
+    if not args.stats_json:
+        return
+    from repro.serving.api import stats_json_payload
+
+    payload = stats_json_payload(mode, st, requests)
+    with open(args.stats_json, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    print(f"stats json -> {args.stats_json}")
 
 
 def _print_stats(args, st, n_done, wall, metrics, drift_threshold):

@@ -76,8 +76,12 @@ def forward(params, cfg: ArchConfig, latents, t,
             compute_dtype=jnp.bfloat16, backend: str = "gather",
             sla_mode: Optional[str] = None,
             plans=None, return_plans: bool = False,
-            drift_threshold=None):
-    """latents: (B, N, patch_dim); t: (B,) diffusion time in [0,1];
+            drift_threshold=None, per_sample_refresh: bool = False):
+    """latents: (B, N, patch_dim); t: per-sample (B,) diffusion time in
+    [0,1], or a scalar broadcast to the batch — bitwise-equal to the
+    equivalent uniform (B,) vector (the timestep embedding and AdaLN
+    modulation are row-independent). Mixed-timestep batches are the
+    serving case (serving/diffusion.py): each row denoises at its own t.
     cond: (B, Lc, d) stub text embeddings. Returns velocity prediction
     with the same shape as latents.
 
@@ -98,7 +102,16 @@ def forward(params, cfg: ArchConfig, latents, t,
     the retained critical mass of its reused plan against the current
     (q, k) and re-plans under `lax.cond` only when drift reaches the
     threshold — jit-traceable, static shapes. The return value gains a
-    trailing info dict {"retention": (L,), "replanned": (L,)}."""
+    trailing info dict {"retention": (L,), "replanned": (L,)}.
+
+    Per-sample refresh (serving): with `per_sample_refresh=True` the
+    drift decision decouples across batch rows
+    (plan_lib.refresh_plan_per_sample) — `drift_threshold` broadcasts
+    to (L, B) and the info dict carries (L, B) retention/replanned, so
+    one slot's re-plan never rebuilds (or blocks) its neighbours'."""
+    t = jnp.asarray(t, jnp.float32)
+    if t.ndim == 0:
+        t = jnp.broadcast_to(t, (latents.shape[0],))
     x = jnp.einsum("bnp,pd->bnd", latents.astype(compute_dtype),
                    params["patch_in"].astype(compute_dtype))
     temb = jnp.einsum("be,ed->bd", _timestep_embedding(t * 1000.0),
@@ -119,16 +132,22 @@ def forward(params, cfg: ArchConfig, latents, t,
     adaptive = (drift_threshold is not None and plans is not None
                 and plan_needed)
     if adaptive:
+        thr_shape = ((cfg.num_layers, latents.shape[0])
+                     if per_sample_refresh else (cfg.num_layers,))
         thresholds = jnp.broadcast_to(
-            jnp.asarray(drift_threshold, jnp.float32), (cfg.num_layers,))
+            jnp.asarray(drift_threshold, jnp.float32), thr_shape)
 
     def body(x, xs):
         if adaptive:
             p, layer_plan, thr = xs
         else:
             p, layer_plan = xs
-        retention = jnp.float32(1.0)
-        replanned = jnp.bool_(False)
+        if adaptive and per_sample_refresh:
+            retention = jnp.ones((b,), jnp.float32)
+            replanned = jnp.zeros((b,), bool)
+        else:
+            retention = jnp.float32(1.0)
+            replanned = jnp.bool_(False)
         mod = jnp.einsum("bd,de->be", temb, p["ada"].astype(temb.dtype))
         sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
         xn = rms_norm(x, p["ln1"]) * (1 + sc1[:, None]) + sh1[:, None]
@@ -144,7 +163,9 @@ def forward(params, cfg: ArchConfig, latents, t,
             layer_plan = plan_lib.plan_attention(q, k, sla_cfg,
                                                  routing=routing)
         elif adaptive:
-            layer_plan, retention, replanned = plan_lib.refresh_plan(
+            refresh = (plan_lib.refresh_plan_per_sample
+                       if per_sample_refresh else plan_lib.refresh_plan)
+            layer_plan, retention, replanned = refresh(
                 layer_plan, q, k, sla_cfg, thr, routing=routing)
         o = attention({"proj": p["sla_proj"]}, q, k, v, kind, sla_cfg,
                       causal=False, backend=backend,
@@ -203,11 +224,17 @@ def sample(params, cfg: ArchConfig, noise, *, num_steps: int = 8,
            refresh_interval: Optional[int] = None,
            refresh_mode: Optional[str] = None,
            drift_threshold=None,
+           t_start=None,
            return_trace: bool = False):
     """Euler rectified-flow sampler with cross-timestep plan reuse.
 
     Integrates dx/dt = v(x, t) from t=1 (noise, (B, N, patch_dim)) down
-    to t=0 over `num_steps` uniform steps.
+    to t=0 over `num_steps` uniform steps. `t_start` (scalar or (B,),
+    default None = 1.0) starts the trajectory mid-way — SDEdit-style
+    partial denoise, and the sequential reference for serving requests
+    admitted at an arbitrary timestep: each sample integrates from its
+    own t_start to 0 over `num_steps` steps of dt = t_start/num_steps.
+    t_start=None keeps the original python-scalar dt path untouched.
 
     Plan refresh policy (`refresh_mode`, default
     cfg.sla.plan_refresh_mode):
@@ -238,17 +265,33 @@ def sample(params, cfg: ArchConfig, noise, *, num_steps: int = 8,
         raise ValueError(f"unknown plan_refresh_mode {mode!r}; "
                          "expected 'fixed' or 'adaptive'")
     b = noise.shape[0]
-    dt = 1.0 / num_steps
     x = noise
     nl = cfg.num_layers
 
-    def tvec(step):
-        """(B,) diffusion time for a python-int or traced step index."""
-        return (jnp.full((b,), 1.0, jnp.float32)
-                - jnp.asarray(step, jnp.float32) * dt)
+    if t_start is None:
+        dt = 1.0 / num_steps
 
-    def euler(x, vel):
-        return x - dt * vel.astype(x.dtype)
+        def tvec(step):
+            """(B,) diffusion time for a python-int or traced step."""
+            return (jnp.full((b,), 1.0, jnp.float32)
+                    - jnp.asarray(step, jnp.float32) * dt)
+
+        def euler(x, vel):
+            return x - dt * vel.astype(x.dtype)
+    else:
+        # per-sample start time: t(step) = t0 - step * (t0/num_steps),
+        # computed positionally (not by iterated subtraction) so the
+        # serving scheduler's host-side f32 bookkeeping reproduces the
+        # same rounded values (serving/diffusion.py parity contract)
+        t0 = jnp.broadcast_to(
+            jnp.asarray(t_start, jnp.float32), (b,))
+        dtv = t0 / jnp.float32(num_steps)
+
+        def tvec(step):
+            return t0 - jnp.asarray(step, jnp.float32) * dtv
+
+        def euler(x, vel):
+            return x - dtv[:, None, None] * vel.astype(x.dtype)
 
     def static_trace(replan_flags):
         """Trace dict for modes whose refresh schedule is static
@@ -333,6 +376,42 @@ def sample(params, cfg: ArchConfig, noise, *, num_steps: int = 8,
                  "replan_count": jnp.sum(reps, axis=0)}
         return x, trace
     return x
+
+
+# ---------------------------------------------------------------------------
+# serving slot surgery (serving/diffusion.py; the DiT analogue of
+# transformer.insert_slot — per-request state here is a latent row plus
+# its per-layer plan rows, not a KV cache)
+# ---------------------------------------------------------------------------
+def insert_denoise_slot(latents, plans, slot: int, latent_row, plan_row):
+    """Scatter one admitted request into batch slot `slot`.
+
+    latents: (B, N, P) live pool; latent_row: (1, N, P). plans: stacked
+    per-layer plan pytree with leaves (L, B, ...); plan_row: the same
+    pytree with leaves (L, 1, ...) — scattered along the batch axis
+    (axis 1, after the layer axis). Either plan argument may be None
+    (plan-free attention modes carry no plan state)."""
+    latents = jax.lax.dynamic_update_slice_in_dim(
+        latents, latent_row.astype(latents.dtype), slot, axis=0)
+    if plans is not None and plan_row is not None:
+        plans = jax.tree_util.tree_map(
+            lambda full, row: jax.lax.dynamic_update_slice_in_dim(
+                full, row.astype(full.dtype), slot, axis=1),
+            plans, plan_row)
+    return latents, plans
+
+
+def retire_denoise_slot(latents, slot: int):
+    """Read a finished request's final latent (N, P) out of the pool."""
+    return latents[slot]
+
+
+def take_slot_plans(plans, slot: int):
+    """One slot's per-layer plan rows (leaves (L, 1, ...)) — the unit
+    the cross-request plan cache stores per timestep bucket."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1),
+        plans)
 
 
 def loss_fn(params, cfg: ArchConfig, batch, compute_dtype=jnp.bfloat16,

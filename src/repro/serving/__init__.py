@@ -1,16 +1,23 @@
 """Serving layer: v2 continuous-batching API, the disaggregated
-prefill/decode worker pools, and the v1 static engine."""
+prefill/decode worker pools, the streaming DiT denoise service, and
+the v1 static engine."""
 from repro.serving.api import (PrefillEngine, RequestMetrics,
                                RequestState, SamplingParams, Scheduler,
-                               ServedRequest, ServeStats, StreamEvent)
+                               ServedRequest, ServeStats, StreamEvent,
+                               stats_json_payload)
+from repro.serving.diffusion import (DenoiseParams, DenoiseRequest,
+                                     DiffusionScheduler)
 from repro.serving.disagg import (DecodeWorker, DisaggScheduler,
                                   DisaggStats, HandoffBundle,
                                   PrefillWorker, least_loaded)
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.plan_cache import PlanCache
 
 __all__ = [
-    "DecodeWorker", "DisaggScheduler", "DisaggStats", "HandoffBundle",
-    "PrefillEngine", "PrefillWorker", "Request", "RequestMetrics",
-    "RequestState", "SamplingParams", "Scheduler", "ServedRequest",
-    "ServeStats", "ServingEngine", "StreamEvent", "least_loaded",
+    "DecodeWorker", "DenoiseParams", "DenoiseRequest",
+    "DiffusionScheduler", "DisaggScheduler", "DisaggStats",
+    "HandoffBundle", "PlanCache", "PrefillEngine", "PrefillWorker",
+    "Request", "RequestMetrics", "RequestState", "SamplingParams",
+    "Scheduler", "ServedRequest", "ServeStats", "ServingEngine",
+    "StreamEvent", "least_loaded", "stats_json_payload",
 ]

@@ -211,6 +211,17 @@ class ServeStats:
     chunked_admissions: int = 0
     prefill_chunks: int = 0
     max_decode_gap_s: float = 0.0
+    # streaming-DiT accounting (DESIGN.md "Streaming DiT service"):
+    # denoise_steps = per-request Euler steps executed (the DiT analogue
+    # of decode_tokens); plan_cache_* mirror the cross-request
+    # PlanCache's own counters at the scheduler level — hits/misses are
+    # whole-bucket admission lookups, invalidations are cached layers
+    # whose drift validation re-planned, evictions are LRU drops.
+    denoise_steps: int = 0
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    plan_cache_invalidations: int = 0
+    plan_cache_evictions: int = 0
 
     def occupancy(self) -> float:
         """Decode-slot utilization in [0, 1]."""
@@ -249,6 +260,36 @@ def percentile(xs, p: float) -> float:
         raise ValueError("percentile() of an empty sequence")
     rank = min(len(xs), max(1, math.ceil(p * len(xs))))
     return xs[rank - 1]
+
+
+def stats_json_payload(mode: str, stats, requests=()) -> dict:
+    """JSON-ready dump of a stats dataclass + per-request metrics.
+
+    Serves `launch/serve.py --stats-json` for every serving mode —
+    `stats` is any stats dataclass (ServeStats, disagg.DisaggStats);
+    `requests` any iterable of objects carrying `.rid`, `.state`, and
+    `.metrics` (ServedRequest, engine.Request, DenoiseRequest). Derived
+    metrics stay None (JSON null) for in-flight requests — the PR 7
+    convention: an unfinished request has no latency, a never-admitted
+    one no queue time; clamping to 0.0 would report them as
+    instantaneous."""
+    rows = []
+    for r in requests:
+        m = getattr(r, "metrics", None)
+        state = getattr(r, "state", None)
+        if state is None and m is not None:
+            # v1 engine.Request carries no state enum; a finished
+            # timestamp is the authoritative signal
+            state = "finished" if m.finish_t else "in_flight"
+        row = {"rid": getattr(r, "rid", None),
+               "state": getattr(state, "value", state)}
+        if m is not None:
+            row.update(queue_s=m.queue_s, ttft_s=m.ttft_s,
+                       latency_s=m.latency_s,
+                       decode_tokens=m.decode_tokens)
+        rows.append(row)
+    return {"mode": mode, "stats": dataclasses.asdict(stats),
+            "requests": rows}
 
 
 def prefill_with_plan_reuse(prefill_plan, prefill_reuse, params, toks,

@@ -190,3 +190,77 @@ def test_serving_recompute_is_honest_on_synthetic_disagg_cells():
     p["disagg"]["healthy"]["submitted"] = 0
     assert recompute_acceptance(p)[
         "disagg_completes_all_healthy"] is False
+
+
+DIT_SERVING = ROOT / "BENCH_dit_serving.json"
+
+
+def test_dit_serving_acceptance_matches_recompute():
+    """BENCH_dit_serving.json obeys the honesty contract: stored
+    acceptance == recompute from the stored cells, and each boolean's
+    defining relation re-derives from the cells it names."""
+    from benchmarks.fig_dit_serving import recompute_acceptance
+
+    if not DIT_SERVING.exists():
+        pytest.skip("BENCH_dit_serving.json not generated")
+    payload = json.loads(DIT_SERVING.read_text())
+    acc = payload["acceptance"]
+    assert acc == recompute_acceptance(payload)
+    assert acc["dit_batched_bitwise_equal_sequential"] == all(
+        payload["parity"][b]["batched_checksum"]
+        == payload["parity"][b]["sequential_checksum"]
+        for b in payload["config"]["backends"])
+    assert acc["plan_cache_cuts_plan_builds"] == (
+        payload["plan_cache"]["cache"]["plan_builds"]
+        < payload["plan_cache"]["no_cache"]["plan_builds"]
+        and payload["plan_cache"]["cache"]["hits"] >= 1)
+
+
+def _synthetic_dit_payload():
+    """Hand-built cells where both headline claims HOLD."""
+    return {
+        "config": {"backends": ["reference", "gather"]},
+        "parity": {
+            "reference": {"batched_checksum": "aa",
+                          "sequential_checksum": "aa"},
+            "gather": {"batched_checksum": "bb",
+                       "sequential_checksum": "bb"},
+        },
+        "plan_cache": {
+            "no_cache": {"plan_builds": 12},
+            "cache": {"plan_builds": 2, "hits": 5, "misses": 1},
+        },
+    }
+
+
+def test_dit_recompute_is_honest_on_synthetic_parity_cells():
+    """A single-backend checksum mismatch must flip the parity boolean
+    — equality on the OTHER backend cannot mask it."""
+    from benchmarks.fig_dit_serving import recompute_acceptance
+
+    base = _synthetic_dit_payload()
+    acc = recompute_acceptance(base)
+    assert acc["dit_batched_bitwise_equal_sequential"] is True
+    assert acc["plan_cache_cuts_plan_builds"] is True
+
+    p = _synthetic_dit_payload()
+    p["parity"]["reference"]["batched_checksum"] = "xx"
+    acc = recompute_acceptance(p)
+    assert acc["dit_batched_bitwise_equal_sequential"] is False
+    assert acc["plan_cache_cuts_plan_builds"] is True  # untouched
+
+
+def test_dit_recompute_is_honest_on_synthetic_cache_cells():
+    """The cache boolean needs BOTH a strict build cut AND >= 1 real
+    hit — fewer builds from a shorter trace alone must not pass."""
+    from benchmarks.fig_dit_serving import recompute_acceptance
+
+    p = _synthetic_dit_payload()
+    p["plan_cache"]["cache"]["plan_builds"] = 12  # no cut
+    assert recompute_acceptance(p)["plan_cache_cuts_plan_builds"] is False
+
+    p = _synthetic_dit_payload()
+    p["plan_cache"]["cache"]["hits"] = 0  # cut without a single hit
+    assert recompute_acceptance(p)["plan_cache_cuts_plan_builds"] is False
+    assert recompute_acceptance(p)[
+        "dit_batched_bitwise_equal_sequential"] is True
